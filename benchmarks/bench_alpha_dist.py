@@ -1,0 +1,36 @@
+"""Paper fig. 3: distribution of the alpha vector for the NN last layer -
+sign balance, exact-zero fraction, and the 'central zero area' the paper
+observes for mid-range indices."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import make_problem, quantize, unique_with_counts
+
+from .common import emit, train_paper_mlp
+
+
+def _alpha_stats(alpha):
+    a = np.asarray(alpha)
+    nz = np.abs(a) > 1e-10
+    m = len(a)
+    mid = nz[m // 3: 2 * m // 3]
+    return {
+        "nnz": int(nz.sum()),
+        "pos_frac": float((a[nz] > 0).mean()) if nz.any() else 0.0,
+        "central_zero_frac": float(1.0 - mid.mean()) if len(mid) else 0.0,
+    }
+
+
+def run() -> None:
+    params, *_ = train_paper_mlp()
+    w = np.asarray(params[-1]["w"])
+    for method, kw in [("l1", dict(lam=1e-3)), ("l1_ls", dict(lam=1e-3)),
+                       ("kmeans_ls", dict(num_values=32))]:
+        qt, info = quantize(w, method, **kw)
+        s = _alpha_stats(info["alpha"])
+        emit(f"alpha_dist/{method}", 0.0,
+             f"nnz={s['nnz']};pos_frac={s['pos_frac']:.3f};"
+             f"central_zero={s['central_zero_frac']:.3f}")
+    # paper: the l1 alphas are almost all positive (consistent with the
+    # cumulative V and shrinkage); verified in tests/test_benchmarks.py

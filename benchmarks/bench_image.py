@@ -1,0 +1,30 @@
+"""Paper fig. 5/6: image quantization with hard-sigmoid range clamping
+([0,1]); l2 loss + runtime; includes the l0 method (fig. 6)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import quantize
+
+from .common import emit, synthetic_image, timed_quant
+
+METHODS = ["kmeans", "kmeans_ls", "l0", "iter_l1", "dp"]
+LAM_METHODS = ["l1", "l1_ls", "tv"]
+COUNTS = [2, 4, 8, 16, 32]
+LAMS = [1e-3, 4e-3, 1.6e-2, 6.4e-2]
+
+
+def run() -> None:
+    img = synthetic_image()
+    for method in METHODS:
+        for l in COUNTS:
+            (qt, info), dt = timed_quant(img, method, num_values=l,
+                                         clip=(0.0, 1.0))
+            emit(f"image/{method}/l{l}", dt * 1e6,
+                 f"l2={info['l2_loss']:.5f};n={info['n_values']}")
+    for method in LAM_METHODS:
+        for lam in LAMS:
+            (qt, info), dt = timed_quant(img, method, lam=lam,
+                                         clip=(0.0, 1.0))
+            emit(f"image/{method}/lam{lam:g}", dt * 1e6,
+                 f"l2={info['l2_loss']:.5f};n={info['n_values']}")

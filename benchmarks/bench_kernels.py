@@ -1,0 +1,42 @@
+"""Framework kernels: batched-FISTA PTQ throughput and fused dequant matmul
+(interpret mode on CPU - correctness-shaped timing; Mosaic on real TPU)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cd_solve, make_problem
+from repro.kernels import quant_matmul, ref_quant_matmul, solve_fista_batch
+
+from .common import emit, timed
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    # batched FISTA: 8 tensors solved in one launch vs sequential CD
+    B, M = 8, 512
+    W = np.sort(rng.normal(size=(B, M)), axis=1).astype(np.float32)
+    D = np.diff(W, axis=1, prepend=0.0)
+    N = np.ones((B, M), np.float32)
+    _, dt_batch = timed(solve_fista_batch, W, D, N, 0.05, n_iters=300,
+                        interpret=True)
+    t0 = time.perf_counter()
+    for i in range(B):
+        prob = make_problem(W[i], N[i])
+        cd_solve(prob, 0.05, max_sweeps=60)
+    dt_cd = time.perf_counter() - t0
+    emit("kernels/fista_batch8_m512", dt_batch * 1e6,
+         f"cd_sequential_s={dt_cd:.4f}")
+
+    # fused dequant matmul vs dense reference
+    x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 256, (512, 256)), jnp.uint8)
+    cb = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    out, dt_q = timed(lambda: quant_matmul(x, idx, cb, interpret=True)
+                      .block_until_ready())
+    ref, dt_d = timed(lambda: ref_quant_matmul(x, idx, cb).block_until_ready())
+    err = float(jnp.abs(out - ref).max())
+    emit("kernels/quant_matmul_256x512x256", dt_q * 1e6,
+         f"dense_ref_us={dt_d*1e6:.1f};maxerr={err:.2e}")

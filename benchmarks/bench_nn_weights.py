@@ -1,0 +1,46 @@
+"""Paper fig. 1/2: quantize the MLP's last layer (64x10), sweep the number of
+values, report post-quantization accuracy and solver runtime per method."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALL_METHODS, quantize
+from repro.models.mlp import mlp_accuracy
+
+from .common import emit, timed_quant, train_paper_mlp
+
+COUNT_METHODS = ["kmeans", "kmeans_ls", "mog", "dtc", "iter_l1", "dp", "l0",
+                 "tv_iter"]
+LAM_GRID = [3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2]
+COUNTS = [2, 4, 8, 16, 32, 64]
+
+
+def run() -> None:
+    params, (xtr, ytr), (xte, yte), acc_tr, acc_te = train_paper_mlp()
+    emit("nn_weights/baseline_acc", 0.0,
+         f"train={acc_tr:.4f};test={acc_te:.4f}")
+    w = np.asarray(params[-1]["w"])          # the 64x10 last layer
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+
+    def acc_with(wq):
+        p2 = [dict(l) for l in params]
+        p2[-1]["w"] = jnp.asarray(wq)
+        return float(mlp_accuracy(p2, xte_j, yte_j))
+
+    for method in COUNT_METHODS:
+        for l in COUNTS:
+            (qt, info), dt = timed_quant(w, method, num_values=l)
+            a = acc_with(np.asarray(qt.to_dense()))
+            emit(f"nn_weights/{method}/l{l}", dt * 1e6,
+                 f"acc={a:.4f};n={info['n_values']};l2={info['l2_loss']:.5f}")
+
+    for method in ("l1", "l1_ls", "l1l2", "tv"):
+        for lam in LAM_GRID:
+            (qt, info), dt = timed_quant(w, method, lam=lam)
+            a = acc_with(np.asarray(qt.to_dense()))
+            emit(f"nn_weights/{method}/lam{lam:g}", dt * 1e6,
+                 f"acc={a:.4f};n={info['n_values']};l2={info['l2_loss']:.5f}")

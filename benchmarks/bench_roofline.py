@@ -1,0 +1,38 @@
+"""Roofline table reader: aggregates results/dryrun/*.json into CSV rows
+(one per arch x shape x mesh cell) - the §Roofline source of truth."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "run repro.launch.dryrun --all first")
+        return
+    n_ok = n_skip = n_err = 0
+    for f in files:
+        d = json.load(open(f))
+        cell = f"{d['arch']}.{d['shape']}.{d['mesh']}"
+        if d["status"] == "skipped":
+            n_skip += 1
+            emit(f"roofline/{cell}", 0.0, "skipped_by_design")
+            continue
+        if d["status"] != "ok":
+            n_err += 1
+            emit(f"roofline/{cell}", 0.0, f"ERROR:{d.get('reason','')[:60]}")
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        emit(f"roofline/{cell}", r["t_compute_s"] * 1e6,
+             f"tmem={r['t_memory_s']:.3f};tcoll={r['t_collective_s']:.3f};"
+             f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+             f"useful={r['useful_flops_ratio']:.2f};"
+             f"mem_gib={d['memory']['peak_estimate']/2**30:.1f}")
+    emit("roofline/summary", 0.0, f"ok={n_ok};skipped={n_skip};errors={n_err}")

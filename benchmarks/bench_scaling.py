@@ -1,0 +1,44 @@
+"""Paper §3.6 complexity claims: runtime vs m (unique values) and vs k
+(clusters). The l1/CD path is O(t*m) (our O(m)-per-sweep reformulation,
+vs the paper's O(t*m^2)); k-means is O(t*k*T*m). The crossover where CD
+wins - k in Theta(m), 'high-resolution quantization' - is the paper's
+headline runtime scenario."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import quantize
+
+from .common import emit
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    # runtime vs m at fixed k
+    for m in (256, 1024, 4096, 16384):
+        w = rng.normal(0, 1, m * 2).round(6)   # ~m unique values
+        quantize(w, "l1_ls", lam=1e-3)
+        t0 = time.perf_counter()
+        _, i1 = quantize(w, "l1_ls", lam=1e-3)
+        t1 = time.perf_counter()
+        quantize(w, "kmeans", num_values=64)
+        t2 = time.perf_counter()
+        _, i2 = quantize(w, "kmeans", num_values=64)
+        t3 = time.perf_counter()
+        emit(f"scaling_m/{m}", (t1 - t0) * 1e6,
+             f"l1_ls_s={t1-t0:.4f};kmeans_s={t3-t2:.4f}")
+    # runtime vs k at fixed m: high-resolution regime (k -> m)
+    w = rng.normal(0, 1, 4096).round(6)
+    for k in (16, 64, 256, 1024):
+        quantize(w, "kmeans", num_values=k)
+        t0 = time.perf_counter()
+        quantize(w, "kmeans", num_values=k)
+        t1 = time.perf_counter()
+        quantize(w, "tv_iter", num_values=k)
+        t2 = time.perf_counter()
+        quantize(w, "tv_iter", num_values=k)
+        t3 = time.perf_counter()
+        emit(f"scaling_k/{k}", (t1 - t0) * 1e6,
+             f"kmeans_s={t1-t0:.4f};tv_iter_s={t3-t2:.4f}")

@@ -1,0 +1,31 @@
+"""Paper fig. 7/8: quantize MoG / uniform / Gaussian samples (500 points in
+[0,100]); l2 loss and runtime per method per cluster count."""
+from __future__ import annotations
+
+import time
+
+from repro.core import quantize
+
+from .common import emit, synthetic_distributions, timed_quant
+
+METHODS = ["kmeans", "kmeans_ls", "mog", "dtc", "iter_l1", "dp", "tv_iter"]
+LAM_METHODS = ["l1", "l1_ls", "tv"]
+COUNTS = [2, 4, 8, 16, 32, 64]
+LAMS = [0.5, 2.0, 8.0, 32.0, 128.0]
+
+
+def run() -> None:
+    data = synthetic_distributions()
+    for dist, w in data.items():
+        for method in METHODS:
+            for l in COUNTS:
+                (qt, info), dt = timed_quant(w, method, num_values=l,
+                                             clip=(0.0, 100.0))
+                emit(f"synthetic/{dist}/{method}/l{l}", dt * 1e6,
+                     f"l2={info['l2_loss']:.4f};n={info['n_values']}")
+        for method in LAM_METHODS:
+            for lam in LAMS:
+                (qt, info), dt = timed_quant(w, method, lam=lam,
+                                             clip=(0.0, 100.0))
+                emit(f"synthetic/{dist}/{method}/lam{lam:g}", dt * 1e6,
+                     f"l2={info['l2_loss']:.4f};n={info['n_values']}")

@@ -1,0 +1,102 @@
+"""Shared benchmark utilities: data generators matching the paper's §4 setup,
+timing, and CSV output (`name,us_per_call,derived`)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt
+
+
+# ---------------------------------------------------- paper §4.3 data
+
+def synthetic_distributions(n: int = 500, seed: int = 0):
+    """MoG / Uniform / single Gaussian, 500 samples in [0, 100] (fig. 7)."""
+    rng = np.random.default_rng(seed)
+    mog = np.concatenate([
+        rng.normal(20, 5, n // 3), rng.normal(50, 8, n // 3),
+        rng.normal(80, 4, n - 2 * (n // 3))])
+    uni = rng.uniform(0, 100, n)
+    gauss = rng.normal(50, 15, n)
+    return {
+        "mog": np.clip(mog, 0, 100),
+        "uniform": uni,
+        "gaussian": np.clip(gauss, 0, 100),
+    }
+
+
+# ---------------------------------------------------- paper §4.1 MLP data
+
+def synthetic_mnist(n_train: int = 4096, n_test: int = 1024, seed: int = 0):
+    """Deterministic MNIST-stand-in: 10 class-conditioned 784-d blob patterns
+    (real MNIST is not available offline; protocol in DESIGN.md §7)."""
+    rng = np.random.default_rng(seed)
+    protos = rng.uniform(0, 1, (10, 784)) * (rng.uniform(0, 1, (10, 784)) > 0.6)
+
+    def make(n, s):
+        r = np.random.default_rng(s)
+        y = r.integers(0, 10, n)
+        # noise 0.7: ~94% baseline with a clear accuracy-drop region below
+        # ~4 quantization values - the regime of the paper's fig. 1/2
+        x = protos[y] + r.normal(0, 0.7, (n, 784))
+        return np.clip(x, 0, 1).astype(np.float32), y.astype(np.int32)
+
+    return make(n_train, seed + 1), make(n_test, seed + 2)
+
+
+def synthetic_image(seed: int = 0):
+    """28x28 'digit-like' grayscale image in [0,1] (fig. 5/6 stand-in)."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:28, 0:28] / 27.0
+    img = (np.exp(-((xx - 0.5) ** 2 + (yy - 0.35) ** 2) / 0.02)
+           + 0.8 * np.exp(-((xx - 0.5) ** 2 + (yy - 0.7) ** 2) / 0.03))
+    img = img / img.max() + rng.normal(0, 0.02, (28, 28))
+    return np.clip(img, 0, 1).astype(np.float32)
+
+
+def train_paper_mlp(steps: int = 400, lr: float = 1e-3, seed: int = 0):
+    """Train the paper's 784-256-128-64-10 MLP; returns params + data + accs."""
+    from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+    (xtr, ytr), (xte, yte) = synthetic_mnist(seed=seed)
+    params = init_mlp(jax.random.PRNGKey(seed))
+    xtr_j, ytr_j = jnp.asarray(xtr), jnp.asarray(ytr)
+
+    @jax.jit
+    def step(params, i):
+        idx = (jnp.arange(256) + i * 256) % xtr_j.shape[0]
+        g = jax.grad(mlp_loss)(params, xtr_j[idx], ytr_j[idx])
+        return jax.tree.map(lambda p, gg: p - lr * gg * 3.0, params, g), None
+
+    params, _ = jax.lax.scan(step, params, jnp.arange(steps))
+    acc_tr = float(mlp_accuracy(params, xtr_j, ytr_j))
+    acc_te = float(mlp_accuracy(params, jnp.asarray(xte), jnp.asarray(yte)))
+    return params, (xtr, ytr), (xte, yte), acc_tr, acc_te
+
+
+def timed_quant(w, method, iters: int = 2, **kw):
+    """Time quantize() excluding jit compilation (first call warms)."""
+    import time as _t
+
+    from repro.core import quantize as _q
+
+    out = _q(w, method, **kw)
+    t0 = _t.perf_counter()
+    for _ in range(iters):
+        out = _q(w, method, **kw)
+    return out, (_t.perf_counter() - t0) / iters

@@ -1,0 +1,24 @@
+"""Benchmark driver - one module per paper table/figure plus framework
+benches. Prints ``name,us_per_call,derived`` CSV. Select with
+``python -m benchmarks.run [name ...]``."""
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = ["nn_weights", "l1l2", "alpha_dist", "image", "synthetic",
+          "scaling", "kernels", "roofline"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or SUITES
+    for name in want:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"# --- bench_{name} ---", flush=True)
+        mod.run()
+        print(f"# bench_{name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quantized serving: PTQ a small LM with the paper's solver, then decode
+with batched requests comparing dense vs value-shared weights.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_reduced_config
+from repro.quant.ptq import compression_ratio, dequantize_tree, quantize_tree
+from repro.quant.serve import estimate_decode_bytes
+
+cfg = get_reduced_config("qwen3_0_6b")
+params = models.init_params(cfg, jax.random.PRNGKey(0))
+
+# PTQ with the paper's Algorithm 3 (k-means + least squares), 16 values/tensor
+qtree, report = quantize_tree(params, method="kmeans_ls", num_values=16,
+                              weighted=True)
+ratio = compression_ratio(report)
+print(f"quantized {len(report)} tensors; compression {ratio:.1f}x")
+
+params_q = dequantize_tree(qtree)
+
+B, prompt_len, gen = 4, 16, 12
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len), 0, cfg.vocab)
+
+
+def generate(p):
+    cache = models.init_cache(cfg, B, prompt_len + gen)
+    logits, cache = models.prefill(p, cfg, {"tokens": tokens}, cache)
+    tok = jnp.argmax(logits[:, None] if logits.ndim == 2 else logits, -1)
+    tok = tok[:, -1:].astype(jnp.int32) if tok.ndim == 2 else tok
+    out = [tok]
+    for i in range(gen - 1):
+        logits, cache = models.decode_step(p, cfg, tok, cache, prompt_len + i)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+dense_out = generate(params)
+quant_out = generate(params_q)
+agree = float((dense_out == quant_out).mean())
+print(f"decode agreement dense vs 16-value quantized: {agree*100:.0f}% "
+      f"({gen} tokens x {B} requests)")
+
+# roofline estimate of the decode speedup on TPU v5e (decode = HBM-bound)
+n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+est = estimate_decode_bytes(n_params * 2, ratio, cache_bytes=0)
+print(f"v5e decode-step estimate: dense {est['t_dense_s']*1e6:.1f}us -> "
+      f"quantized {est['t_quant_s']*1e6:.1f}us ({est['speedup']:.2f}x weight-read speedup)")

@@ -1,0 +1,81 @@
+"""End-to-end driver: train a ~100M-param LM with the full stack - sharded
+step, synthetic pipeline, checkpointing trainer with crash recovery.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+(defaults to 40 steps so the example finishes in ~a minute on CPU)
+"""
+import argparse
+import dataclasses
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import LayerSpec, ModelConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.ftolerance import Trainer
+from repro.train.step import make_train_step, train_state_specs
+from repro.runtime.sharding import batch_shardings
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="lm-100m", family="lm", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32000,
+        group=(LayerSpec(),), qk_norm=True,
+        param_dtype="float32", compute_dtype="float32", scan_chunk=32,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject crashes at these steps (recovery demo)")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    mesh = make_host_mesh(2, 4)
+    step_fn, opt = make_train_step(cfg, mesh, lr=3e-4)
+    state_shape, state_shard = train_state_specs(cfg, mesh, opt)
+    n_params = sum(int(jnp.size(x)) for x in jax.tree.leaves(state_shape["params"]))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  mesh={dict(mesh.shape)}")
+
+    specs = {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)}
+    pipe = SyntheticLM(cfg, args.batch, args.seq, seed=0)
+    bshard = batch_shardings(mesh, specs)
+    jit_step = jax.jit(step_fn, in_shardings=(state_shard, bshard),
+                       out_shardings=(state_shard, None), donate_argnums=(0,))
+
+    with jax.set_mesh(mesh):
+        def init_state():
+            params = jax.device_put(models.init_params(cfg, jax.random.PRNGKey(0)),
+                                    state_shard["params"])
+            return {"params": params,
+                    "opt": jax.device_put(opt.init(params), state_shard["opt"]),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        trainer = Trainer(
+            step_fn=jit_step, init_state_fn=init_state,
+            next_batch_fn=lambda s: pipe.next_batch(s, mesh, specs),
+            ckpt_dir=args.ckpt_dir, ckpt_every=20,
+            fail_at=set(args.fail_at), async_ckpt=True)
+        state = trainer.run(args.steps)
+
+    losses = [m["loss"] for m in trainer.metrics_log]
+    print(f"steps={len(trainer.metrics_log)} restarts={trainer.restarts} "
+          f"stragglers={len(trainer.monitor.flagged)}")
+    print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f} "
+          f"(improved={losses[-1] < losses[0]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Three-term roofline model for TPU v5e (target hardware; CPU is runtime).
+
+  compute    = FLOPs / (peak bf16 FLOP/s)        per chip
+  memory     = HBM bytes / HBM bandwidth         per chip
+  collective = collective bytes / ICI link bw    per chip
+
+All inputs are PER-DEVICE (post-SPMD HLO). The dominant term is the
+bottleneck; the roofline fraction reported in EXPERIMENTS.md §Perf is
+compute / max(all terms) for train/prefill and the dominant-term utilization
+story for decode (memory-bound by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PEAK_FLOPS_BF16 = 197e12      # per v5e chip
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (~ per-chip effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops_per_device: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """No-overlap pessimum is the sum; perfect overlap is the max. We
+        report the max (roofline = best achievable)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step the MXUs are busy at the bound = how close
+        the cell is to compute-roofline if perfectly overlapped."""
+        t = self.step_time_lower_bound
+        return 0.0 if t == 0 else self.t_compute / t
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: catches remat/redundant compute."""
+        return (self.model_flops_per_device / self.flops) if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "model_flops_per_device": self.model_flops_per_device,
+        }
+
+
+# --------------------------------------------------- analytic model FLOPs
+
+
+def model_params_active(cfg) -> tuple[int, int]:
+    """(total params, active params per token) - MoE-aware, analytic."""
+    D, V = cfg.d_model, cfg.vocab
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    total = emb
+    active = emb
+
+    def attn_p():
+        qo = D * cfg.n_heads * cfg.head_dim * 2
+        kv = D * cfg.n_kv_heads * cfg.head_dim * 2
+        return qo + kv
+
+    def mla_p():
+        return (D * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                + D * cfg.kv_lora_rank + D * cfg.qk_rope_dim
+                + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                + cfg.n_heads * cfg.v_head_dim * D)
+
+    def mamba_p():
+        E, N, R = cfg.d_inner, cfg.ssm_d_state, cfg.dt_rank
+        return D * 2 * E + E * (2 * N + R) + R * E + E * N + E * D
+
+    def rwkv_p():
+        return 6 * D * D + D * cfg.d_ff * 2 + D * 64 * 2
+
+    def specs():
+        out = list(cfg.head_layers)
+        out += list(cfg.group) * cfg.n_groups
+        if cfg.family == "encdec":
+            out += [dataclasses.replace(s, cross_attn=False)
+                    for s in [cfg.group[0]] * cfg.n_enc_layers]
+        return out
+
+    for spec in specs():
+        if spec.mixer == "attn":
+            p = attn_p() * (2 if spec.cross_attn else 1)
+        elif spec.mixer == "mla":
+            p = mla_p()
+        elif spec.mixer == "mamba":
+            p = mamba_p()
+        elif spec.mixer == "rwkv6":
+            p = rwkv_p()
+        total += p
+        active += p
+        if spec.ffn == "dense":
+            f = 3 * D * cfg.d_ff
+            total += f
+            active += f
+        elif spec.ffn == "moe":
+            per_e = 3 * D * cfg.expert_ff
+            total += per_e * cfg.n_experts
+            active += per_e * cfg.top_k
+            if cfg.n_shared_experts:
+                sh = 3 * D * cfg.expert_ff * cfg.n_shared_experts
+                total += sh
+                active += sh
+        elif spec.ffn == "cmix":
+            pass  # counted in rwkv_p
+    return int(total), int(active)
+
+
+def model_flops(cfg, shape_kind: str, batch: int, seq: int) -> float:
+    """6*N_active*D tokens for training; 2*N_active per token for inference."""
+    _, active = model_params_active(cfg)
+    tokens = batch * (seq if shape_kind in ("train", "prefill") else 1)
+    per_token = (6 if shape_kind == "train" else 2) * active
+    return float(per_token) * tokens

@@ -1,0 +1,136 @@
+"""Config system: one dataclass drives model shape, sharding, and dry-run.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+repro.configs; ``get_config(arch_id)`` resolves it, ``reduced()`` produces the
+CPU smoke-test variant of the same family (small widths/depths, same layer
+pattern and feature set).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------- layer spec
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer: a sequence mixer plus a feed-forward block."""
+
+    mixer: str = "attn"          # "attn" | "mla" | "mamba" | "rwkv6"
+    ffn: str = "dense"           # "dense" | "moe" | "none"
+    window: int | None = None    # local attention window (gemma2)
+    cross_attn: bool = False     # decoder cross-attention (whisper)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # "lm" | "encdec"
+    # shapes
+    n_layers: int = 12
+    d_model: int = 1024
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 128
+    d_ff: int = 4096
+    vocab: int = 32000
+    # layer pattern: `group` repeated n_layers/len(group) times via lax.scan;
+    # `head_layers` run unscanned before the groups (e.g. deepseek dense layer 0)
+    group: Sequence[LayerSpec] = (LayerSpec(),)
+    head_layers: Sequence[LayerSpec] = ()
+    # attention features
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    mrope_sections: Sequence[int] | None = None   # qwen2-vl M-RoPE
+    post_block_norm: bool = False                 # gemma2 post-norms
+    attn_q_chunk: int = 512    # q-chunked attention (bounds S^2 logits memory)
+    kv_cache_dtype: str = "compute"   # "compute" | "int8" (quantized cache)
+    # MLA (deepseek)
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 2
+    expert_ff: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    # SSM / RWKV
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0          # 0 -> d_model/16
+    rwkv_head_dim: int = 64
+    scan_chunk: int = 128         # sequence chunking for SSM/RWKV scans
+    # enc-dec
+    n_enc_layers: int = 0
+    enc_bidirectional: bool = True
+    # embeddings / IO
+    input_kind: str = "tokens"    # "tokens" | "embeds" (stub frontends)
+    tie_embeddings: bool = False
+    embed_scale: bool = False     # gemma-style sqrt(d_model) scaling
+    act: str = "silu"             # "silu" (swiglu) | "gelu" (geglu)
+    # numerics / training
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    optimizer: str = "adamw"      # "adamw" | "adafactor"
+    opt_state_dtype: str = "float32"
+    remat: str = "full"           # "none" | "full" | "dots"
+    # quantization integration (the paper's technique)
+    quant_skip: Sequence[str] = ("norm", "router", "A_log", "decay")
+    # long-context capability: run long_500k only if sub-quadratic
+    subquadratic: bool = False
+    notes: str = ""
+
+    @property
+    def n_groups(self) -> int:
+        return (self.n_layers - len(self.head_layers)) // len(self.group)
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(self.d_model // 16, 8)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def dtype(self, kind: str):
+        return jnp.dtype(getattr(self, kind + "_dtype"))
+
+    def validate(self) -> "ModelConfig":
+        assert (self.n_layers - len(self.head_layers)) % len(self.group) == 0, (
+            self.name, self.n_layers, len(self.group))
+        if self.family == "encdec":
+            assert self.n_enc_layers > 0
+        return self
+
+
+ARCHS = [
+    "gemma2_27b", "yi_34b", "qwen3_0_6b", "glm4_9b", "deepseek_v2_lite_16b",
+    "granite_moe_3b_a800m", "qwen2_vl_72b", "whisper_tiny", "rwkv6_3b",
+    "jamba_1_5_large_398b",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.config().validate()
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.reduced().validate()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

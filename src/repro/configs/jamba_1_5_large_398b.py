@@ -1,0 +1,47 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2 - Mamba+attention 1:7 interleave
+[arXiv:2403.19887; hf].
+
+Pattern: 8-layer blocks, attention at in-block index 4 (the Jamba layout),
+MoE on every odd layer. Sub-quadratic overall (9 attention layers use
+sequence-parallel flash-decode at 512k) -> runs long_500k. adafactor +
+bf16 states: 398B params would not fit 256 chips with f32 Adam
+(DESIGN.md §6)."""
+from .base import LayerSpec, ModelConfig
+
+
+def _group():
+    specs = []
+    for i in range(8):
+        mixer = "attn" if i == 4 else "mamba"
+        ffn = "moe" if i % 2 == 1 else "dense"
+        specs.append(LayerSpec(mixer=mixer, ffn=ffn))
+    return tuple(specs)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b", family="lm",
+        n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=24576, vocab=65536, group=_group(),
+        n_experts=16, top_k=2, expert_ff=24576,
+        ssm_d_state=16, ssm_d_conv=4, ssm_expand=2,
+        scan_chunk=128, subquadratic=True,
+        optimizer="adafactor", opt_state_dtype="bfloat16",
+    )
+
+
+def reduced() -> ModelConfig:
+    g = []
+    for i in range(4):
+        g.append(LayerSpec(mixer="attn" if i == 2 else "mamba",
+                           ffn="moe" if i % 2 == 1 else "dense"))
+    return ModelConfig(
+        name="jamba-reduced", family="lm",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=281, group=tuple(g),
+        n_experts=4, top_k=2, expert_ff=128,
+        ssm_d_state=4, ssm_d_conv=4, ssm_expand=2, scan_chunk=8,
+        subquadratic=True,
+        param_dtype="float32", compute_dtype="float32",
+    )

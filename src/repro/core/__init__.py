@@ -1,0 +1,29 @@
+"""Paper core: scalar quantization as sparse least-square optimization.
+
+Wang et al., "Scalar Quantization as Sparse Least Square Optimization"
+(DOI 10.1109/TPAMI.2019.2952096), plus beyond-paper exact solvers. See
+DESIGN.md for the mapping from paper equations to modules.
+"""
+from .api import ALL_METHODS, COUNT_METHODS, LAM_METHODS, quantize
+from .cd import cd_solve, cd_sweep, max_stable_lam2
+from .dp_optimal import optimal_kmeans_1d
+from .iterative import iterative_l1, tv_iterative
+from .kmeans import kmeans_1d, kmeans_quantize_unique
+from .kmeans_ls import kmeans_ls_quantize
+from .l0 import l0_quantize, l0_solve
+from .mog import mog_quantize_unique
+from .problem import LSQProblem, make_problem, objective, reconstruct, unique_with_counts
+from .refit import refit_support, support_of
+from .tv_exact import tv1d_weighted, tv_solve_problem
+from .types import QuantizedTensor, from_dense, hard_sigmoid
+
+__all__ = [
+    "ALL_METHODS", "COUNT_METHODS", "LAM_METHODS", "quantize",
+    "cd_solve", "cd_sweep", "max_stable_lam2",
+    "optimal_kmeans_1d", "iterative_l1", "tv_iterative",
+    "kmeans_1d", "kmeans_quantize_unique", "kmeans_ls_quantize",
+    "l0_quantize", "l0_solve", "mog_quantize_unique",
+    "LSQProblem", "make_problem", "objective", "reconstruct", "unique_with_counts",
+    "refit_support", "support_of", "tv1d_weighted", "tv_solve_problem",
+    "QuantizedTensor", "from_dense", "hard_sigmoid",
+]

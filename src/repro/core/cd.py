@@ -1,0 +1,140 @@
+"""Coordinate descent for the paper's l1 / l1+l2 objectives (eq. 6, 13-15).
+
+Exact cyclic coordinate descent, but each full sweep is O(m) instead of the
+O(m^2) the paper's complexity analysis assumes, by exploiting the cumulative
+structure of V (DESIGN.md §3):
+
+  sweeping k = 1..m, carry
+    S = sum_{i>=k} n_i r_i        (weighted suffix residual sum)
+    c = sum_{j<=k-1} a_j^new d_j  (running reconstruction prefix)
+  then per coordinate, all in O(1):
+    grad numerator   g   = d_k S + z_k a_k
+    lasso            a_k <- S_{lam1}(g) / z_k                     (paper eq. 14)
+    l1 + neg-l2      a_k <- S_{lam1}(g) / (z_k - 2 lam2)          (paper eq. 15)
+    S <- S - delta d_k N_k ;  c <- c + a_k d_k ;  S <- S - n_k (w_k - c)
+
+The iterates are identical to textbook cyclic CD (verified in tests against a
+dense implementation). Linear global convergence per paper Prop. 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .problem import LSQProblem, reconstruct
+
+
+def _soft(g, lam):
+    return jnp.sign(g) * jnp.maximum(jnp.abs(g) - lam, 0.0)
+
+
+def cd_sweep(alpha, problem: LSQProblem, lam1_vec, lam2: float):
+    """One full cyclic CD sweep. Returns (alpha_new, max |delta|)."""
+    w, d, n, z, N = problem.w_hat, problem.d, problem.counts, problem.z, problem.n_suffix
+    r0 = w - reconstruct(alpha, d)
+    S0 = jnp.sum(n * r0)
+
+    denom = z - 2.0 * lam2  # must be > 0 (validated by caller); == z for lasso
+
+    def body(carry, xs):
+        S, c = carry
+        w_k, d_k, n_k, z_k, N_k, lam_k, den_k, a_old = xs
+        g = d_k * S + z_k * a_old
+        a_new = _soft(g, lam_k) / den_k
+        delta = a_new - a_old
+        S = S - delta * d_k * N_k          # residual suffix update (rank-1 column)
+        c = c + a_new * d_k                # reconstruction prefix
+        S = S - n_k * (w_k - c)            # drop row k from the suffix
+        return (S, c), (a_new, jnp.abs(delta))
+
+    (_, _), (alpha_new, deltas) = lax.scan(
+        body, (S0, jnp.float32(0.0)), (w, d, n, z, N, lam1_vec, denom, alpha)
+    )
+    return alpha_new, jnp.max(deltas)
+
+
+@functools.partial(jax.jit, static_argnames=("max_sweeps", "penalize_first"))
+def cd_solve(
+    problem: LSQProblem,
+    lam1: float,
+    lam2: float = 0.0,
+    *,
+    alpha0=None,
+    max_sweeps: int = 200,
+    tol: float = 1e-7,
+    penalize_first: bool = True,
+):
+    """Solve eq. 6 (lam2=0) or eq. 13 (lam2>0) by cyclic CD.
+
+    Returns (alpha, n_sweeps). alpha has exact zeros on the pruned support.
+    Init alpha0 = ones gives zero initial LS loss (paper §3.2.1).
+    """
+    m = problem.m
+    if alpha0 is None:
+        alpha0 = jnp.ones((m,), jnp.float32)
+    lam1_vec = jnp.full((m,), jnp.float32(lam1))
+    if not penalize_first:
+        lam1_vec = lam1_vec.at[0].set(0.0)
+    # scale tolerance to the data so convergence is size-independent
+    scale = jnp.maximum(jnp.max(jnp.abs(problem.w_hat)), 1e-12)
+
+    def cond(state):
+        _, sweep, max_delta = state
+        return jnp.logical_and(sweep < max_sweeps, max_delta > tol * scale)
+
+    def step(state):
+        alpha, sweep, _ = state
+        alpha, max_delta = cd_sweep(alpha, problem, lam1_vec, lam2)
+        return alpha, sweep + 1, max_delta
+
+    alpha, sweeps, _ = lax.while_loop(
+        cond, step, (alpha0, jnp.int32(0), jnp.float32(jnp.inf))
+    )
+    return alpha, sweeps
+
+
+def max_stable_lam2(problem: LSQProblem) -> float:
+    """Largest lam2 keeping eq. 13 coordinate-wise convex: lam2 < min_k z_k / 2.
+
+    The paper reports numerical instability when lam2 is 'too large' (§4.1);
+    this is the exact threshold (DESIGN.md §8).
+    """
+    import numpy as np
+
+    return float(0.5 * np.min(np.asarray(problem.z)))
+
+
+def cd_solve_dense_reference(problem: LSQProblem, lam1, lam2=0.0, *, alpha0=None,
+                             max_sweeps=200, tol=1e-7, penalize_first=True):
+    """Naive O(m^2)-per-sweep CD on the materialized V. Oracle for tests only."""
+    import numpy as np
+
+    w = np.asarray(problem.w_hat).astype(np.float64)
+    d = np.asarray(problem.d).astype(np.float64)
+    n = np.asarray(problem.counts).astype(np.float64)
+    m = w.shape[0]
+    V = np.tril(np.ones((m, m))) * d[None, :]
+    z = (V * V * n[:, None]).sum(0)
+    z = np.where(z <= 0, 1.0, z)
+    alpha = np.ones(m) if alpha0 is None else np.array(alpha0, np.float64)
+    lam1v = np.full(m, float(lam1))
+    if not penalize_first:
+        lam1v[0] = 0.0
+    scale = max(np.abs(w).max(), 1e-12)
+    for sweep in range(max_sweeps):
+        max_delta = 0.0
+        r = w - V @ alpha
+        for k in range(m):
+            g = (V[:, k] * n) @ r + z[k] * alpha[k]
+            den = z[k] - 2.0 * lam2
+            a_new = np.sign(g) * max(abs(g) - lam1v[k], 0.0) / den
+            delta = a_new - alpha[k]
+            r = r - V[:, k] * delta
+            alpha[k] = a_new
+            max_delta = max(max_delta, abs(delta))
+        if max_delta <= tol * scale:
+            break
+    return alpha, sweep + 1

@@ -1,0 +1,80 @@
+"""Optimal 1-D k-segment quantizer via divide-and-conquer DP (beyond-paper).
+
+Ckmeans.1d.dp-style: D[k][j] = min_i D[k-1][i-1] + cost(i, j) with cost the
+weighted within-segment squared error (O(1) via prefix sums). The argmin is
+monotone in j, so each layer solves in O(m log m) by divide and conquer.
+This is the true information-loss lower bound for ANY l-value scalar
+quantizer - used in EXPERIMENTS.md to score every method (including k-means,
+which is only locally optimal).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def optimal_kmeans_1d(vals: np.ndarray, counts: np.ndarray, k: int):
+    """Returns (recon (m,), assignment (m,), centers (k',), sse). k' <= k."""
+    y = np.asarray(vals, np.float64)
+    n = np.asarray(counts, np.float64)
+    m = y.shape[0]
+    k = min(k, m)
+    # prefix sums for O(1) weighted segment cost over [i, j] inclusive
+    cn = np.concatenate([[0.0], np.cumsum(n)])
+    cy = np.concatenate([[0.0], np.cumsum(n * y)])
+    cy2 = np.concatenate([[0.0], np.cumsum(n * y * y)])
+
+    def cost(i: int, j: int) -> float:  # segment [i, j], 0-indexed inclusive
+        sn = cn[j + 1] - cn[i]
+        sy = cy[j + 1] - cy[i]
+        sy2 = cy2[j + 1] - cy2[i]
+        if sn <= 0:
+            return 0.0
+        return sy2 - sy * sy / sn
+
+    INF = np.inf
+    prev = np.array([cost(0, j) for j in range(m)])
+    back = np.zeros((k, m), dtype=np.int64)
+
+    for layer in range(1, k):
+        cur = np.full(m, INF)
+
+        def solve(jlo, jhi, ilo, ihi):
+            if jlo > jhi:
+                return
+            jmid = (jlo + jhi) // 2
+            best, arg = INF, ilo
+            for i in range(ilo, min(ihi, jmid) + 1):
+                c = (prev[i - 1] if i > 0 else (0.0 if layer <= 0 else INF)) + cost(i, jmid)
+                # i must be >= layer so that layers 0..layer-1 each hold >= 1 point
+                if i >= layer and c < best:
+                    best, arg = c, i
+            cur[jmid] = best
+            back[layer, jmid] = arg
+            solve(jlo, jmid - 1, ilo, arg)
+            solve(jmid + 1, jhi, arg, ihi)
+
+        solve(layer, m - 1, layer, m - 1)
+        prev = cur
+
+    # pick the best number of segments <= k ending at m-1 is just layer k-1;
+    # fewer distinct values can never be better, so use k (or m) segments.
+    sse = prev[m - 1] if k > 1 else cost(0, m - 1)
+    # backtrack boundaries
+    bounds = []
+    j = m - 1
+    for layer in range(k - 1, 0, -1):
+        i = int(back[layer, j])
+        bounds.append(i)
+        j = i - 1
+    bounds = sorted(bounds)
+    starts = np.array([0] + bounds, dtype=np.int64)
+    assignment = np.zeros(m, dtype=np.int64)
+    for s_idx, s in enumerate(starts):
+        assignment[s:] = s_idx
+    centers = np.empty(len(starts))
+    ends = np.concatenate([starts[1:], [m]])
+    for s_idx, (s, e) in enumerate(zip(starts, ends)):
+        sn = cn[e] - cn[s]
+        centers[s_idx] = (cy[e] - cy[s]) / max(sn, 1e-300)
+    recon = centers[assignment]
+    return recon, assignment, centers, float(sse)

@@ -1,0 +1,79 @@
+"""Algorithm 2: iterative l1 quantization with a lambda ramp.
+
+Starts from a small lambda_1^0 and increases it linearly (Delta-lambda =
+lambda_1^0), warm-starting alpha from the previous iteration, until
+||alpha||_0 <= l; each iteration then applies the Algorithm-1 LS refit.
+Faithful to the paper: may terminate with fewer than l values (§3.5).
+
+`tv_iterative` is the beyond-paper variant: bisection on lambda against the
+exact O(m) TV solver - no ramp hyper-parameters and a globally optimal
+solution at each lambda (DESIGN.md §5.2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cd import cd_solve
+from .problem import LSQProblem
+from .refit import effective_num_values, refit_support, support_of
+
+
+def iterative_l1(problem: LSQProblem, l: int, *, lam0: float | None = None,
+                 max_iters: int = 60, max_sweeps: int = 200):
+    """Returns (w_star, alpha_star, nnz, iters)."""
+    if lam0 is None:
+        # relative to the scale of the objective so the ramp is data-independent
+        w = np.asarray(problem.w_hat).astype(np.float64)
+        n = np.asarray(problem.counts).astype(np.float64)
+        lam0 = float(0.005 * np.sum(n * w * w) / max(len(w), 1))
+    alpha = jnp.ones((problem.m,), jnp.float32)
+    nnz = problem.m
+    it = 0
+    lam_t = 0.0
+    for it in range(1, max_iters + 1):
+        lam_t = lam0 * it  # lam^t = lam0 + (t-1) * dlam, dlam = lam0
+        alpha, _ = cd_solve(problem, jnp.float32(lam_t), alpha0=alpha,
+                            max_sweeps=max_sweeps)
+        nnz = effective_num_values(support_of(alpha))
+        if nnz <= l:
+            break
+    # geometric acceleration: the paper's linear ramp may stall above l for
+    # small lam0; doubling always terminates (lam -> inf drives alpha -> 0)
+    while nnz > l:
+        it += 1
+        lam_t *= 2.0
+        alpha, _ = cd_solve(problem, jnp.float32(lam_t), alpha0=alpha,
+                            max_sweeps=max_sweeps)
+        nnz = effective_num_values(support_of(alpha))
+    w_star, alpha_star = refit_support(problem, support_of(alpha))
+    return w_star, alpha_star, nnz, it
+
+
+def tv_iterative(problem: LSQProblem, l: int, *, bisect_steps: int = 40):
+    """Beyond-paper: exact-count targeting via bisection on lambda with the
+    exact TV solver. Returns (w_star, alpha_star, nnz, iters)."""
+    from .tv_exact import tv_solve_problem
+
+    w = np.asarray(problem.w_hat).astype(np.float64)
+    n = np.asarray(problem.counts).astype(np.float64)
+    lo, hi = 0.0, float(np.sum(n * w * w)) + 1e-6
+    best = None
+    for it in range(bisect_steps):
+        mid = 0.5 * (lo + hi)
+        u = tv_solve_problem(problem, mid)
+        sup = np.abs(np.diff(u, prepend=0.0)) > 1e-10
+        nnz = effective_num_values(sup)
+        if nnz <= l:
+            best, hi = (u, nnz), mid
+        else:
+            lo = mid
+        if best is not None and best[1] == l:
+            break
+    if best is None:
+        u = tv_solve_problem(problem, hi)
+        best = (u, effective_num_values(np.abs(np.diff(u, prepend=0.0)) > 1e-10))
+    u, nnz = best
+    support = jnp.asarray(np.abs(np.diff(u, prepend=0.0)) > 1e-10)
+    w_star, alpha_star = refit_support(problem, support)
+    return w_star, alpha_star, nnz, it + 1

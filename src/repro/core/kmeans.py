@@ -1,0 +1,95 @@
+"""1-D (weighted) k-means quantization baseline (paper's main comparison).
+
+Lloyd's algorithm specialised to scalars: data is sorted unique values with
+multiplicities, so assignment is a searchsorted against centroid midpoints
+(clusters are intervals in 1-D) and the update is a segment mean - both O(m).
+k-means++ initialisation, multi-restart (the paper uses sklearn's default of
+10 restarts), empty clusters keep their previous centroid (the paper calls out
+empty/out-of-range clusters as a k-means failure mode; ++ init avoids the
+out-of-range case entirely).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _assign(vals, centers):
+    """Interval assignment: cluster id per value, given sorted centers."""
+    mid = 0.5 * (centers[1:] + centers[:-1])
+    return jnp.searchsorted(mid, vals)
+
+
+def _lloyd(vals, counts, centers0, max_iter: int, tol: float):
+    k = centers0.shape[0]
+
+    def cond(state):
+        centers, prev, it = state
+        return jnp.logical_and(it < max_iter, jnp.max(jnp.abs(centers - prev)) > tol)
+
+    def step(state):
+        centers, _, it = state
+        idx = _assign(vals, centers)
+        num = jax.ops.segment_sum(counts * vals, idx, num_segments=k)
+        den = jax.ops.segment_sum(counts, idx, num_segments=k)
+        new = jnp.where(den > 0, num / jnp.maximum(den, 1e-20), centers)
+        new = jnp.sort(new)  # keep interval invariant
+        return new, centers, it + 1
+
+    centers, _, iters = lax.while_loop(
+        cond, step, (jnp.sort(centers0), centers0 + jnp.inf, jnp.int32(0))
+    )
+    idx = _assign(vals, centers)
+    inertia = jnp.sum(counts * (vals - centers[idx]) ** 2)
+    return centers, idx, inertia, iters
+
+
+def _kmeanspp(vals, counts, k: int, key):
+    """Weighted k-means++ seeding."""
+    m = vals.shape[0]
+    key, sub = jax.random.split(key)
+    first = jax.random.categorical(sub, jnp.log(jnp.maximum(counts, 1e-20)))
+    centers = jnp.full((k,), vals[first])
+    d2 = (vals - vals[first]) ** 2
+
+    def body(carry, key_i):
+        centers, d2, i = carry
+        logits = jnp.log(jnp.maximum(counts * d2, 1e-30))
+        nxt = jax.random.categorical(key_i, logits)
+        centers = centers.at[i].set(vals[nxt])
+        d2 = jnp.minimum(d2, (vals - vals[nxt]) ** 2)
+        return (centers, d2, i + 1), None
+
+    keys = jax.random.split(key, k - 1) if k > 1 else jnp.zeros((0, 2), jnp.uint32)
+    (centers, _, _), _ = lax.scan(body, (centers, d2, jnp.int32(1)), keys)
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "restarts", "max_iter"))
+def kmeans_1d(vals, counts, k: int, *, seed: int = 0, restarts: int = 10,
+              max_iter: int = 300, tol: float = 1e-7):
+    """Weighted 1-D k-means. Returns (centers (k,), assignment (m,), inertia, iters).
+
+    vals must be sorted ascending (unique values); counts are multiplicities
+    (pass ones for the paper's unweighted setting on unique values).
+    """
+    keys = jax.random.split(jax.random.PRNGKey(seed), restarts)
+
+    def one(key):
+        c0 = _kmeanspp(vals, counts, k, key)
+        return _lloyd(vals, counts, c0, max_iter, tol)
+
+    centers, idx, inertia, iters = jax.vmap(one)(keys)
+    best = jnp.argmin(inertia)
+    return centers[best], idx[best], inertia[best], jnp.sum(iters)
+
+
+def kmeans_quantize_unique(vals, counts, k: int, *, seed: int = 0, restarts: int = 10,
+                           max_iter: int = 300):
+    """Reconstruction on unique values using plain k-means centroids."""
+    centers, idx, inertia, iters = kmeans_1d(vals, counts, k, seed=seed,
+                                             restarts=restarts, max_iter=max_iter)
+    return centers[idx], idx, centers, inertia, iters

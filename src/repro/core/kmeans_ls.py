@@ -1,0 +1,48 @@
+"""Algorithm 3: clustering-based least-square quantization (paper eq. 17-20).
+
+k-means on the unique values fixes the one-hot membership matrix E; the
+representative values are then the exact LS minimisers. With the paper's
+cumulative matrix V-hat* parameterisation the closed-form solution (eq. 20)
+equals per-cluster (count-weighted, if weighted) means over unique values -
+we implement it via refit_support (clusters are intervals in 1-D, so the
+cluster boundaries form a support mask) and keep a dense eq.-20 oracle in
+tests to prove equivalence.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kmeans import kmeans_1d
+from .problem import LSQProblem
+from .refit import refit_support
+
+
+def kmeans_ls_quantize(problem: LSQProblem, l: int, *, seed: int = 0,
+                       restarts: int = 10, max_iter: int = 300):
+    """Returns (w_star, alpha_star, assignment, iters)."""
+    vals, counts = problem.w_hat, problem.counts
+    _, idx, _, iters = kmeans_1d(vals, counts, l, seed=seed, restarts=restarts,
+                                 max_iter=max_iter)
+    # clusters are intervals on sorted vals: support = first index of each cluster
+    prev = jnp.concatenate([jnp.full((1,), -1, idx.dtype), idx[:-1]])
+    support = idx != prev
+    w_star, alpha_star = refit_support(problem, support)
+    return w_star, alpha_star, idx, iters
+
+
+def kmeans_ls_dense_reference(problem: LSQProblem, assignment) -> np.ndarray:
+    """Oracle: materialize E and V-hat* exactly as eq. 18-20 and solve."""
+    w = np.asarray(problem.w_hat).astype(np.float64)
+    n = np.asarray(problem.counts).astype(np.float64)
+    idx = np.asarray(assignment)
+    l = int(idx.max()) + 1
+    m = w.shape[0]
+    E = np.zeros((m, l))
+    E[np.arange(m), idx] = 1.0
+    v = float(np.mean(w))  # paper: fill non-zeros with v = mean(w_hat)
+    Vstar = np.tril(np.ones((l, l))) * v
+    X = E @ Vstar
+    sw = np.sqrt(n)
+    coef, *_ = np.linalg.lstsq(X * sw[:, None], w * sw, rcond=None)
+    return X @ coef

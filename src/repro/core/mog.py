@@ -1,0 +1,48 @@
+"""Mixture-of-Gaussians quantization baseline (paper §2, [15][16]).
+
+1-D GMM fit by EM on (unique values, multiplicities); quantized value of each
+point is the mean of its most-likely component (hard assignment after EM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kmeans import kmeans_1d
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_iter"))
+def mog_quantize_unique(vals, counts, k: int, *, seed: int = 0, n_iter: int = 100):
+    """Returns (recon (m,), assignment (m,), means (k,))."""
+    centers, _, _, _ = kmeans_1d(vals, counts, k, seed=seed, restarts=4)
+    n_tot = jnp.sum(counts)
+    var0 = jnp.maximum(jnp.sum(counts * (vals - jnp.sum(counts * vals) / n_tot) ** 2) / n_tot, 1e-12)
+    state0 = (centers, jnp.full((k,), var0 / k), jnp.full((k,), 1.0 / k))
+
+    def em(state, _):
+        mu, var, pi = state
+        # E-step (log domain), counts as fractional repetitions
+        logp = (
+            jnp.log(jnp.maximum(pi, 1e-20))[None, :]
+            - 0.5 * jnp.log(2 * jnp.pi * var)[None, :]
+            - 0.5 * (vals[:, None] - mu[None, :]) ** 2 / var[None, :]
+        )
+        logr = logp - jax.scipy.special.logsumexp(logp, axis=1, keepdims=True)
+        r = jnp.exp(logr) * counts[:, None]
+        nk = jnp.maximum(jnp.sum(r, axis=0), 1e-12)
+        mu = jnp.sum(r * vals[:, None], axis=0) / nk
+        var = jnp.maximum(jnp.sum(r * (vals[:, None] - mu[None, :]) ** 2, axis=0) / nk, 1e-12)
+        pi = nk / jnp.sum(nk)
+        return (mu, var, pi), None
+
+    (mu, var, pi), _ = lax.scan(em, state0, None, length=n_iter)
+    logp = (
+        jnp.log(jnp.maximum(pi, 1e-20))[None, :]
+        - 0.5 * jnp.log(2 * jnp.pi * var)[None, :]
+        - 0.5 * (vals[:, None] - mu[None, :]) ** 2 / var[None, :]
+    )
+    idx = jnp.argmax(logp, axis=1)
+    return mu[idx], idx, mu

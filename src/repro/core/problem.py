@@ -1,0 +1,85 @@
+"""Problem setup shared by every sparse-LSQ solver (paper §3.1-3.2).
+
+Given a vector ``w`` we pre-process to sorted unique values ``w_hat`` with
+multiplicities ``counts`` (paper: ``unique(w)``). The design matrix V is the
+lower-triangular cumulative matrix with column scales d (d_1 = v_1,
+d_j = v_j - v_{j-1}); it is NEVER materialized:
+
+    (V @ alpha)_i  = cumsum(alpha * d)_i
+    (V.T @ r)_k    = d_k * suffix_sum(r)_k
+    ||V[:,k]||^2   = d_k^2 * suffix_count(k)      (closed form, paper eq. 12)
+
+``weighted=False`` reproduces the paper exactly (least squares on unique values);
+``weighted=True`` multiplies residuals by multiplicities, minimizing the true
+full-vector loss (beyond-paper improvement, see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["w_hat", "d", "counts", "z", "n_suffix"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class LSQProblem:
+    """Static-shape sparse-LSQ problem on sorted unique values."""
+
+    w_hat: jnp.ndarray    # (m,) sorted unique values (f32)
+    d: jnp.ndarray        # (m,) column scales: d_1 = v_1, d_j = v_j - v_{j-1}
+    counts: jnp.ndarray   # (m,) multiplicities as f32 (all-ones if unweighted)
+    z: jnp.ndarray        # (m,) column norms  d_k^2 * N_k
+    n_suffix: jnp.ndarray # (m,) suffix count sums N_k = sum_{i>=k} counts_i
+
+    @property
+    def m(self) -> int:
+        return int(self.w_hat.shape[0])
+
+
+def unique_with_counts(w) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sorted unique values, multiplicities and inverse indices (host-side)."""
+    flat = np.asarray(w).reshape(-1).astype(np.float64)
+    vals, inverse, counts = np.unique(flat, return_inverse=True, return_counts=True)
+    return vals, counts.astype(np.float64), inverse
+
+
+def make_problem(w_hat: np.ndarray, counts: np.ndarray | None = None, *, weighted: bool = False) -> LSQProblem:
+    w_hat = np.asarray(w_hat, dtype=np.float64)
+    m = w_hat.shape[0]
+    if counts is None or not weighted:
+        n = np.ones(m, dtype=np.float64)
+    else:
+        n = np.asarray(counts, dtype=np.float64)
+    d = np.diff(w_hat, prepend=0.0)
+    n_suffix = np.cumsum(n[::-1])[::-1]
+    z = d * d * n_suffix
+    # d_1 = v_1 can be 0 if 0.0 is the smallest unique value; guard z for that column
+    # (a zero column contributes nothing; alpha stays at its init there).
+    z = np.where(z <= 0.0, 1.0, z)
+    f32 = lambda x: jnp.asarray(x, dtype=jnp.float32)
+    return LSQProblem(w_hat=f32(w_hat), d=f32(d), counts=f32(n), z=f32(z), n_suffix=f32(n_suffix))
+
+
+def reconstruct(alpha, d):
+    """w* on unique values: V @ alpha = cumsum(alpha * d)   (paper eq. 11)."""
+    return jnp.cumsum(alpha * d)
+
+
+def objective(problem: LSQProblem, alpha, lam1: float, lam2: float = 0.0, *, penalize_first: bool = True):
+    """0.5 * ||sqrt(n) (w_hat - V a)||^2 + lam1 ||a||_1 - lam2 ||a||_2^2."""
+    r = problem.w_hat - reconstruct(alpha, problem.d)
+    pen = jnp.abs(alpha)
+    if not penalize_first:
+        pen = pen.at[0].set(0.0)
+    return (
+        0.5 * jnp.sum(problem.counts * r * r)
+        + lam1 * jnp.sum(pen)
+        - lam2 * jnp.sum(alpha * alpha)
+    )

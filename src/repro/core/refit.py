@@ -1,0 +1,68 @@
+"""Least-square refit on the l1 support (paper eq. 7-10, Algorithm 1 steps 3-5).
+
+Because the selected columns of V span piecewise-constant vectors with
+breakpoints at the support indices, the LS refit has a closed form: each
+segment's value is the (count-weighted) mean of w_hat over that segment
+(DESIGN.md §1.3). Rows before the first support index reconstruct to 0, as in
+the paper's V* formulation. A dense lstsq oracle is kept for tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .problem import LSQProblem
+
+
+@functools.partial(jax.jit, static_argnames=())
+def refit_support(problem: LSQProblem, support: jnp.ndarray):
+    """Optimal piecewise-constant reconstruction given a boolean support mask.
+
+    Returns (w_star, alpha_star): reconstruction on unique values (m,) and the
+    refit alpha vector (eq. 10; zeros off-support).
+    """
+    m = problem.m
+    w, n = problem.w_hat, problem.counts
+    seg_id = jnp.cumsum(support.astype(jnp.int32)) - 1  # -1 before first support
+    valid = seg_id >= 0
+    sid = jnp.where(valid, seg_id, 0)
+    num = jax.ops.segment_sum(jnp.where(valid, n * w, 0.0), sid, num_segments=m)
+    den = jax.ops.segment_sum(jnp.where(valid, n, 0.0), sid, num_segments=m)
+    seg_mean = num / jnp.maximum(den, 1e-20)
+    w_star = jnp.where(valid, seg_mean[sid], 0.0)
+    # alpha* (eq. 10): jump sizes at support positions scaled by 1/d_k
+    prev = jnp.concatenate([jnp.zeros((1,), w_star.dtype), w_star[:-1]])
+    jump = w_star - prev
+    d_safe = jnp.where(problem.d == 0, 1.0, problem.d)
+    alpha_star = jnp.where(support, jump / d_safe, 0.0)
+    return w_star, alpha_star
+
+
+def refit_support_dense_reference(problem: LSQProblem, support) -> np.ndarray:
+    """Oracle: materialize V*, solve eq. 9 by lstsq. Tests only."""
+    w = np.asarray(problem.w_hat).astype(np.float64)
+    d = np.asarray(problem.d).astype(np.float64)
+    n = np.asarray(problem.counts).astype(np.float64)
+    m = w.shape[0]
+    V = np.tril(np.ones((m, m))) * d[None, :]
+    Vs = V[:, np.asarray(support, bool)]
+    sw = np.sqrt(n)
+    coef, *_ = np.linalg.lstsq(Vs * sw[:, None], w * sw, rcond=None)
+    return Vs @ coef
+
+
+def support_of(alpha, tol: float = 1e-10):
+    return jnp.abs(alpha) > tol
+
+
+def effective_num_values(support) -> int:
+    """Distinct values of the reconstruction for a support mask.
+
+    If index 0 is off-support, rows before the first support index reconstruct
+    to the extra value 0 (paper's V* leaves them uncovered) - count it.
+    """
+    s = np.asarray(support)
+    return int(s.sum()) + (0 if (s.size and s[0]) else 1)

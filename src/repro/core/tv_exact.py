@@ -1,0 +1,103 @@
+"""Exact O(m) solver for the paper's eq. 6 via its weighted-TV reduction.
+
+Beyond-paper (DESIGN.md §1.4, §5.2): substituting beta = alpha * d shows the
+l1 objective is a weighted 1-D fused-lasso / total-variation problem on the
+sorted unique values
+
+    min_u  1/2 sum_i n_i (w_hat_i - u_i)^2  +  lam * sum_{j>=2} |u_j - u_{j-1}| / d_j
+
+(the paper's extra lam*|alpha_1| boundary term is dropped here; cd_solve with
+penalize_first=False solves the identical objective, used for cross-checks).
+Solved exactly - global optimum, no iterations - by N. A. Johnson's dynamic
+programming (2013) generalised to per-point weights and per-edge penalties.
+Host-side numpy; O(m) time and memory (amortised knot insertion/deletion).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def tv1d_weighted(y: np.ndarray, w: np.ndarray, lam_edges: np.ndarray) -> np.ndarray:
+    """min_u 1/2 sum w_i (y_i-u_i)^2 + sum_k lam_edges[k] |u_{k+1}-u_k|.
+
+    y, w: (n,);  lam_edges: (n-1,) nonnegative. Returns u (n,).
+    Derivative-knot DP: messages are convex piecewise-quadratic; their
+    derivatives are piecewise-linear, stored as a base line plus per-knot
+    (slope, intercept) increments; each inf-convolution with lam|.| clips the
+    derivative at +/-lam, recorded as back-pointer thresholds (tm, tp).
+    """
+    y = np.asarray(y, np.float64)
+    w = np.asarray(w, np.float64)
+    lam_edges = np.asarray(lam_edges, np.float64)
+    n = y.shape[0]
+    if n == 1:
+        return y.copy()
+
+    SZ = 2 * n
+    x = np.empty(SZ)
+    a = np.empty(SZ)
+    b = np.empty(SZ)
+    tm = np.empty(n - 1)
+    tp = np.empty(n - 1)
+
+    lam = lam_edges[0]
+    tm[0] = y[0] - lam / w[0]
+    tp[0] = y[0] + lam / w[0]
+    l = n - 1
+    r = n
+    x[l], x[r] = tm[0], tp[0]
+    a[l], b[l] = w[0], -w[0] * y[0] + lam
+    a[r], b[r] = -w[0], w[0] * y[0] + lam
+    afirst, bfirst = w[1], -w[1] * y[1] - lam
+    alast, blast = -w[1], w[1] * y[1] - lam  # negated right-side line
+
+    for k in range(1, n - 1):
+        lam = lam_edges[k]
+        # left threshold: first point where derivative exceeds -lam
+        alo, blo = afirst, bfirst
+        lo = l
+        while lo <= r and alo * x[lo] + blo < -lam:
+            alo += a[lo]
+            blo += b[lo]
+            lo += 1
+        # right threshold: last point (from the right) where derivative < lam
+        ahi, bhi = alast, blast
+        hi = r
+        while hi >= lo and -(ahi * x[hi] + bhi) > lam:
+            ahi += a[hi]
+            bhi += b[hi]
+            hi -= 1
+        tm[k] = (-lam - blo) / alo
+        tp[k] = -(lam + bhi) / ahi
+        l = lo - 1
+        r = hi + 1
+        x[l], x[r] = tm[k], tp[k]
+        a[l], b[l] = alo, blo + lam
+        a[r], b[r] = ahi, bhi + lam
+        afirst, bfirst = w[k + 1], -w[k + 1] * y[k + 1] - lam
+        alast, blast = -w[k + 1], w[k + 1] * y[k + 1] - lam
+
+    # minimise the final message: root of its derivative
+    alo, blo = afirst, bfirst
+    lo = l
+    while lo <= r and alo * x[lo] + blo < 0.0:
+        alo += a[lo]
+        blo += b[lo]
+        lo += 1
+    u = np.empty(n)
+    u[n - 1] = -blo / alo
+    for k in range(n - 2, -1, -1):
+        u[k] = min(max(u[k + 1], tm[k]), tp[k])
+    return u
+
+
+def tv_solve_problem(problem, lam: float) -> np.ndarray:
+    """Exact solution of eq. 6 (penalize_first=False) on an LSQProblem."""
+    y = np.asarray(problem.w_hat).astype(np.float64)
+    n = np.asarray(problem.counts).astype(np.float64)
+    d = np.asarray(problem.d).astype(np.float64)
+    if y.shape[0] == 1:
+        return y.copy()
+    gaps = d[1:]
+    lam_edges = lam / np.maximum(np.abs(gaps), 1e-30)
+    return tv1d_weighted(y, n, lam_edges)

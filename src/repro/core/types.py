@@ -1,0 +1,84 @@
+"""Core data types for sparse-LSQ scalar quantization.
+
+A quantized tensor is a value-shared tensor: ``codebook[indices].reshape(shape)``.
+This is the storage format the whole framework consumes (PTQ checkpoints,
+quantized serving, gradient compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Value-shared tensor: ``dense = codebook[indices].reshape(shape)``.
+
+    codebook: (l,) float array of distinct values (sorted ascending).
+    indices:  flat integer array (uint8 if l<=256, else int32) of length prod(shape).
+    shape:    original shape (static aux data).
+    dtype:    original dtype (static aux data).
+    """
+
+    codebook: jax.Array
+    indices: jax.Array
+    shape: tuple
+    dtype: Any
+
+    def to_dense(self) -> jax.Array:
+        return jnp.take(self.codebook, self.indices.astype(jnp.int32), axis=0).reshape(
+            self.shape
+        ).astype(self.dtype)
+
+    @property
+    def num_values(self) -> int:
+        return int(self.codebook.shape[0])
+
+    def bits_per_value(self) -> int:
+        l = max(self.num_values, 2)
+        return int(np.ceil(np.log2(l)))
+
+    def nbytes(self) -> int:
+        """Compressed storage footprint (codebook fp32 + packed indices)."""
+        n = int(np.prod(self.shape))
+        return self.num_values * 4 + (n * self.bits_per_value() + 7) // 8
+
+    def tree_flatten(self):
+        return (self.codebook, self.indices), (self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codebook, indices = children
+        shape, dtype = aux
+        return cls(codebook=codebook, indices=indices, shape=shape, dtype=dtype)
+
+
+def from_dense(w: jax.Array, reconstructed_unique: np.ndarray, inverse_idx: np.ndarray) -> QuantizedTensor:
+    """Build a QuantizedTensor from per-unique-value reconstruction.
+
+    reconstructed_unique: (m,) quantized value assigned to each *unique* input value.
+    inverse_idx: (n,) index into the unique array for each flat element of ``w``.
+    """
+    recon = np.asarray(reconstructed_unique)
+    codebook, code_of_unique = np.unique(recon, return_inverse=True)
+    indices = code_of_unique[np.asarray(inverse_idx)]
+    idx_dtype = np.uint8 if codebook.shape[0] <= 256 else np.int32
+    dtype = w.dtype
+    if dtype == np.float64:  # jax runs f32 unless x64 is enabled
+        dtype = np.dtype(np.float32)
+    return QuantizedTensor(
+        codebook=jnp.asarray(codebook, dtype=jnp.float32),
+        indices=jnp.asarray(indices.astype(idx_dtype)),
+        shape=tuple(w.shape),
+        dtype=dtype,
+    )
+
+
+def hard_sigmoid(x, a: float, b: float):
+    """Eq. 21 of the paper: clamp quantized outputs into a legal range [a, b]."""
+    return jnp.clip(x, a, b)

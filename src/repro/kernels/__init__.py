@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical paths.
+
+- fista_quant: batched sparse-LSQ solver (the paper's technique, MXU-native)
+- quant_matmul: fused codebook-dequant matmul (quantized serving hot path)
+
+Each kernel has a pure-jnp oracle in ref.py and a padded wrapper in ops.py;
+tests sweep shapes/dtypes against the oracles in interpret mode.
+"""
+from .fista_quant import fista_quant
+from .ops import default_interpret, power_iter_lipschitz, quant_matmul, solve_fista_batch
+from .quant_matmul import quant_matmul as quant_matmul_raw
+from .ref import ref_fista, ref_quant_matmul
+
+__all__ = [
+    "fista_quant", "quant_matmul", "quant_matmul_raw", "solve_fista_batch",
+    "ref_fista", "ref_quant_matmul", "power_iter_lipschitz", "default_interpret",
+]

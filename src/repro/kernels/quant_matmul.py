@@ -1,0 +1,74 @@
+"""Fused codebook-dequant matmul Pallas TPU kernel (serving hot path).
+
+Value-shared weights (the paper's output format) are stored as
+(indices uintX, codebook fpN). Serving computes y = x @ W with W never
+materialized in HBM: each (bk, bn) index tile is gathered against the
+VMEM-resident codebook and fed straight to the MXU. This keeps weight HBM
+traffic at ~1 byte/param (vs 2 for bf16), which is what makes the decode
+step - memory-bound at batch*1 token - faster end to end.
+
+Grid: (M/bm, N/bn, K/bk), k innermost ('arbitrary'); accumulation in an f32
+VMEM scratch tile, written out on the last k step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, idx_ref, cb_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_tile = jnp.take(cb_ref[...], idx_ref[...].astype(jnp.int32), axis=0)
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_tile.astype(x_ref.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+)
+def quant_matmul(
+    x: jax.Array,            # (M, K)
+    idx: jax.Array,          # (K, N) integer codes
+    codebook: jax.Array,     # (C,) fp values
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    K2, N = idx.shape
+    assert K == K2, (x.shape, idx.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"shapes ({M},{K},{N}) must tile by ({bm},{bk},{bn}); pad upstream")
+    out_dtype = out_dtype or x.dtype
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((codebook.shape[0],), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, idx, codebook)

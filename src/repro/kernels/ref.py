@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (numerically identical math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ref_quant_matmul(x, idx, codebook, out_dtype=None):
+    """Dense reference: materialize W = codebook[idx], plain matmul."""
+    w = jnp.take(codebook, idx.astype(jnp.int32), axis=0).astype(x.dtype)
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def ref_fista(w, d, n, lam, eta, *, n_iters: int = 300):
+    """FISTA with the same iterates as kernels.fista_quant, on (B, M) arrays."""
+    B, M = w.shape
+    eta = eta.reshape(B, 1)
+
+    def body(i, carry):
+        x_prev, y, t = carry
+        recon = jnp.cumsum(y * d, axis=1)
+        r = n * (w - recon)
+        cums = jnp.cumsum(r, axis=1)
+        total = cums[:, -1:]
+        suffix = total - cums + r
+        grad = -d * suffix
+        v = y - eta * grad
+        thr = eta * lam
+        x = jnp.sign(v) * jnp.maximum(jnp.abs(v) - thr, 0.0)
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_next = x + ((t - 1.0) / t_next) * (x - x_prev)
+        return (x, y_next, t_next)
+
+    ones = jnp.ones_like(w)
+    x, _, _ = lax.fori_loop(0, n_iters, body, (ones, ones, jnp.float32(1.0)))
+    return x

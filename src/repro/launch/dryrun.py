@@ -1,0 +1,212 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first lines - jax locks the device count on first init:
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import gzip
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze
+from repro.analysis.roofline import (Roofline, model_flops,
+                                     model_params_active)
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.runtime.sharding import (batch_shardings, cache_shardings,
+                                    param_shardings)
+from repro.train.step import (SHAPES, cache_specs, input_specs,
+                              make_decode_step, make_prefill_step,
+                              make_train_step, shape_skip_reason,
+                              train_state_specs)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool, overrides=None):
+    """Build + lower the step for one cell. Returns (lowered, cfg, mesh)."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = SHAPES[shape]["kind"]
+    bspecs = input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, bspecs)
+    if kind == "train":
+        step, opt = make_train_step(cfg, mesh)
+        state_shape, state_shard = train_state_specs(cfg, mesh, opt)
+        jit = jax.jit(step, in_shardings=(state_shard, bshard),
+                      out_shardings=(state_shard, None), donate_argnums=(0,))
+        lowered = jit.lower(state_shape, bspecs)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg, mesh, shape)
+        pshape = jax.eval_shape(
+            lambda: __import__("repro.models", fromlist=["x"]).init_params(
+                cfg, jax.random.PRNGKey(0)))
+        pshard = param_shardings(mesh, pshape)
+        cshape = cache_specs(cfg, shape)
+        cshard = cache_shardings(mesh, cfg, cshape,
+                                 batch_size=SHAPES[shape]["batch"])
+        jit = jax.jit(step, in_shardings=(pshard, bshard),
+                      out_shardings=(None, cshard))
+        lowered = jit.lower(pshape, bspecs)
+    else:  # decode
+        step = make_decode_step(cfg, mesh, shape)
+        from repro import models
+        pshape = jax.eval_shape(
+            lambda: models.init_params(cfg, jax.random.PRNGKey(0)))
+        pshard = param_shardings(mesh, pshape)
+        cshape = cache_specs(cfg, shape)
+        cshard = cache_shardings(mesh, cfg, cshape,
+                                 batch_size=SHAPES[shape]["batch"])
+        jit = jax.jit(step, in_shardings=(pshard, bshard["tokens"], cshard),
+                      out_shardings=(bshard["tokens"], cshard),
+                      donate_argnums=(2,))
+        lowered = jit.lower(pshape, bspecs["tokens"], cshape)
+    return lowered, cfg, mesh
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, save_hlo: bool = False,
+             out_dir: str = RESULTS_DIR) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    cfg = get_config(arch)
+    skip = shape_skip_reason(cfg, shape)
+    if skip:
+        cell.update(status="skipped", reason=skip)
+        return cell
+    t0 = time.time()
+    lowered, cfg, mesh = lower_cell(arch, shape, multi_pod=multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    stats = analyze(txt)
+    n_dev = mesh.size
+    kind = SHAPES[shape]["kind"]
+    mf = model_flops(cfg, kind, SHAPES[shape]["batch"], SHAPES[shape]["seq"])
+    rl = Roofline(flops=stats["flops"], hbm_bytes=stats["hbm_bytes"],
+                  collective_bytes=stats["collective_bytes"],
+                  model_flops_per_device=mf / n_dev)
+    total, active = model_params_active(cfg)
+    cell.update(
+        status="ok",
+        t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+        n_devices=n_dev,
+        params_total=total, params_active=active,
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_estimate=(mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        ),
+        cost_analysis=dict(flops=ca.get("flops", 0.0),
+                           bytes_accessed=ca.get("bytes accessed", 0.0)),
+        hlo=dict(flops=stats["flops"], hbm_bytes=stats["hbm_bytes"],
+                 collective_bytes=stats["collective_bytes"],
+                 per_collective=stats["per_collective"],
+                 while_trips=stats["while_trips"]),
+        roofline=rl.as_dict(),
+    )
+    if save_hlo:
+        os.makedirs(out_dir, exist_ok=True)
+        with gzip.open(os.path.join(
+                out_dir, f"{arch}.{shape}.{mesh_name}.hlo.gz"), "wt") as f:
+            f.write(txt)
+    return cell
+
+
+def _write(cell: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{cell['arch']}.{cell['shape']}.{cell['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(cell, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id (or --all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell (each in a subprocess) incl. both meshes")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    mesh_name = "pod2x16x16" if mp else "pod16x16"
+                    path = os.path.join(
+                        args.out, f"{arch}.{shape}.{mesh_name}.json")
+                    if args.skip_existing and os.path.exists(path):
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--out", args.out]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    print(f"[dryrun] {arch} x {shape} x {mesh_name}",
+                          flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mesh_name))
+                        _write({"arch": arch, "shape": shape,
+                                "mesh": mesh_name, "status": "error",
+                                "reason": f"subprocess rc={r.returncode}"},
+                               args.out)
+        print(f"[dryrun] done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    try:
+        cell = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                        save_hlo=args.save_hlo, out_dir=args.out)
+    except Exception as e:
+        cell = {"arch": args.arch, "shape": args.shape,
+                "mesh": "pod2x16x16" if args.multi_pod else "pod16x16",
+                "status": "error", "reason": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:]}
+        path = _write(cell, args.out)
+        print(f"[dryrun] ERROR -> {path}\n{cell['reason']}")
+        sys.exit(1)
+    path = _write(cell, args.out)
+    if cell["status"] == "ok":
+        rl = cell["roofline"]
+        print(f"[dryrun] OK {path}\n"
+              f"  devices={cell['n_devices']} compile={cell['t_compile_s']}s "
+              f"peak_mem/dev={cell['memory']['peak_estimate']/2**30:.2f}GiB\n"
+              f"  t_comp={rl['t_compute_s']:.4f}s t_mem={rl['t_memory_s']:.4f}s "
+              f"t_coll={rl['t_collective_s']:.4f}s dominant={rl['dominant']} "
+              f"frac={rl['roofline_fraction']:.2f}")
+    else:
+        print(f"[dryrun] {cell['status']}: {cell.get('reason')}")
+
+
+if __name__ == "__main__":
+    main()

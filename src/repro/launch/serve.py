@@ -1,0 +1,75 @@
+"""Serving launcher: batched prefill + decode with optional PTQ weights.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
+        --quantize kmeans_ls --num-values 16 --gen 16
+"""
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--quantize", default=None,
+                    help="PTQ method (e.g. kmeans_ls, l1_ls, tv)")
+    ap.add_argument("--num-values", type=int, default=16)
+    args = ap.parse_args()
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import models
+    from repro.configs import get_config, get_reduced_config
+    from repro.quant.ptq import (compression_ratio, dequantize_tree,
+                                 quantize_tree)
+
+    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    if args.quantize:
+        qtree, report = quantize_tree(params, method=args.quantize,
+                                      num_values=args.num_values,
+                                      weighted=True)
+        print(f"[serve] PTQ {args.quantize}@{args.num_values}: "
+              f"{len(report)} tensors, {compression_ratio(report):.1f}x")
+        params = dequantize_tree(qtree)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+    enc = (jax.random.normal(jax.random.PRNGKey(2), (B, P, cfg.d_model))
+           if cfg.family == "encdec" else None)
+
+    @jax.jit
+    def prefill(p, toks):
+        cache = models.init_cache(cfg, B, P + G, enc_len=P)
+        batch = {"tokens": toks}
+        if enc is not None:
+            batch["enc_embeds"] = enc
+        logits, cache = models.prefill(p, cfg, batch, cache)
+        return jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32), cache
+
+    @jax.jit
+    def step(p, tok, cache, idx):
+        logits, cache = models.decode_step(p, cfg, tok, cache, idx)
+        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
+
+    t0 = time.perf_counter()
+    tok, cache = prefill(params, tokens)
+    out = [tok]
+    for i in range(G - 1):
+        tok, cache = step(params, tok, cache, jnp.int32(P + i))
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1).block_until_ready()
+    dt = time.perf_counter() - t0
+    print(f"[serve] {B} requests x {G} tokens in {dt:.2f}s "
+          f"({B*G/dt:.1f} tok/s incl. compile); sample: {gen[0][:10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

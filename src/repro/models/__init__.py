@@ -1,0 +1,50 @@
+"""Composable model library: one facade over LM and enc-dec families."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import encdec as _ed
+from . import transformer as _tf
+
+
+def init_params(cfg, rng):
+    if cfg.family == "encdec":
+        return _ed.init_encdec(cfg, rng)
+    return _tf.init_lm(cfg, rng)
+
+
+def forward(params, cfg, batch, *, train=True, return_hidden=False):
+    if cfg.family == "encdec":
+        return _ed.encdec_forward(params, cfg, batch, train=train,
+                                  return_hidden=return_hidden)
+    return _tf.lm_forward(params, cfg, batch, train=train,
+                          return_hidden=return_hidden)
+
+
+def lm_head(params, cfg, hidden):
+    return _tf._lm_head(params, cfg, hidden)
+
+
+def init_cache(cfg, batch_size, max_len, *, enc_len=None):
+    if cfg.family == "encdec":
+        return _ed.init_encdec_cache(cfg, batch_size, max_len,
+                                     enc_len or max_len)
+    return _tf.init_lm_cache(cfg, batch_size, max_len)
+
+
+def prefill(params, cfg, batch, cache):
+    if cfg.family == "encdec":
+        return _ed.encdec_prefill(params, cfg, batch, cache)
+    return _tf.lm_prefill(params, cfg, batch, cache)
+
+
+def decode_step(params, cfg, tokens, cache, cache_index):
+    if cfg.family == "encdec":
+        return _ed.encdec_decode_step(params, cfg, tokens, cache, cache_index)
+    return _tf.lm_decode_step(params, cfg, tokens, cache, cache_index)
+
+
+def param_count(params) -> int:
+    import jax
+
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))

@@ -1,0 +1,334 @@
+"""Attention mixers: GQA (RoPE / M-RoPE / qk-norm / softcap / local window),
+MLA (deepseek multi-head latent attention), and cross-attention (whisper).
+
+Pure functions over parameter dicts; a KV cache (decode) is a dict of
+ring-buffer arrays plus a scalar length carried by the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.hints import hint
+from .norms import init_rms, rms_norm
+from .rope import apply_mrope, apply_rope
+
+BIG_NEG = -2.3819763e38
+
+
+def _dense(rng, d_in, d_out, dtype, scale=None):
+    scale = scale or (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ GQA
+
+def init_attention(cfg, spec, rng, dtype):
+    H, Hkv, Dh, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(rng, 8)
+    p = {
+        "wq": _dense(ks[0], D, H * Dh, dtype),
+        "wk": _dense(ks[1], D, Hkv * Dh, dtype),
+        "wv": _dense(ks[2], D, Hkv * Dh, dtype),
+        "wo": _dense(ks[3], H * Dh, D, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(Dh, dtype)
+        p["k_norm"] = init_rms(Dh, dtype)
+    if spec.cross_attn:
+        p["c_wq"] = _dense(ks[4], D, H * Dh, dtype)
+        p["c_wk"] = _dense(ks[5], D, Hkv * Dh, dtype)
+        p["c_wv"] = _dense(ks[6], D, Hkv * Dh, dtype)
+        p["c_wo"] = _dense(ks[7], H * Dh, D, dtype)
+    return p
+
+
+def _sdpa_block(q, k, v, *, causal, window, softcap, q_offset, kv_valid_len,
+                repeat_kv=True):
+    """One q-block of grouped attention. q: (B,Sq,Hq,Dh); k,v: (B,Skv,Hkv,*).
+
+    repeat_kv=True expands K/V across the GQA group so the logits head dim is
+    Hq (always divisible by the model axis) - without it GSPMD leaves the
+    (B,Hkv,G,Sq,Skv) buffer partially replicated whenever Hkv < model axis
+    (glm4 kv=2, yi/jamba kv=8), blowing the activation budget.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    if repeat_kv and G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        Hkv, G = Hq, 1
+        Dv = v.shape[-1]
+    qr = q.reshape(B, Sq, Hkv, G, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / np.sqrt(Dh).astype(np.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]          # (Sq,1)
+    k_pos = jnp.arange(Skv)[None, :]                    # (1,Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_valid_len is not None:
+        mask &= k_pos < kv_valid_len
+    logits = jnp.where(mask[None, None, None], logits, BIG_NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, Dv)
+
+
+def _sdpa_flash(q, k, v, *, causal, window, softcap, q_offset, kv_valid_len,
+                kv_chunk, repeat_kv=True):
+    """Online-softmax over kv chunks (flash-attention schedule in XLA).
+
+    Bounds score tiles at (B, Hq, Sq, kv_chunk) f32 and never materializes
+    full-row probabilities - the pure-JAX analogue of the VMEM-resident
+    Mosaic kernel a TPU build would use.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    n = Skv // kv_chunk
+    scale = 1.0 / np.sqrt(Dh).astype(np.float32)
+    k_ch = k.reshape(B, n, kv_chunk, Hkv, Dh).swapaxes(0, 1)
+    v_ch = v.reshape(B, n, kv_chunk, Hkv, Dv).swapaxes(0, 1)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+
+    q5 = q.reshape(B, Sq, Hkv, G, Dh)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, j = xs
+        if G > 1 and repeat_kv:
+            kc = jnp.repeat(kc, G, axis=2)
+            vc = jnp.repeat(vc, G, axis=2)
+        if G > 1 and not repeat_kv:
+            # grouped einsum (context-parallel path): KV stays un-repeated
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = s.reshape(B, Hq, Sq, kv_chunk)
+        else:
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                           preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = jnp.ones((Sq, kv_chunk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        if kv_valid_len is not None:
+            mask &= k_pos < kv_valid_len
+        s = jnp.where(mask[None, None], s, BIG_NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        if G > 1 and not repeat_kv:
+            p5 = p.reshape(B, Hkv, G, Sq, kv_chunk).astype(vc.dtype)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p5, vc,
+                            preferred_element_type=jnp.float32)
+            pv = pv.reshape(B, Hq, Sq, Dv)
+        else:
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, Hq, Sq), BIG_NEG, jnp.float32),
+            jnp.zeros((B, Hq, Sq), jnp.float32),
+            jnp.zeros((B, Hq, Sq, Dv), jnp.float32))
+    # remat per kv tile: backward re-forms each score tile instead of
+    # stacking every (B,H,Sq,kc) f32 tile across the scan
+    body = jax.checkpoint(body, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(body, init, (k_ch, v_ch, jnp.arange(n)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.swapaxes(1, 2).astype(v.dtype)       # (B,Sq,Hq,Dv)
+
+
+def sdpa(q, k, v, *, causal, window=None, softcap=None, q_offset=0,
+         kv_valid_len=None, q_chunk=None, kv_chunk=1024):
+    """Grouped SDPA, chunked over the query axis; long KV additionally runs
+    the online-softmax kv-chunk schedule (see _sdpa_flash).
+
+    q-chunking bounds the live logits buffer at (B, H, q_chunk, Skv) f32
+    instead of (B, H, Sq, Skv) - without it the 32k prefill would
+    materialize terabytes of S^2 logits (memory notes in EXPERIMENTS.md).
+    """
+    B, Sq, Hq, Dh = q.shape
+    Skv = k.shape[1]
+    # Repeat KV across the GQA group only when (a) not decoding (Sq==1 would
+    # re-read the whole cache G times) and (b) heads shard evenly - in the
+    # context-parallel fallback the grouped einsum keeps KV un-repeated.
+    from repro.runtime.hints import model_axis_size
+
+    rep = Sq > 1 and (Hq % model_axis_size() == 0)
+    use_flash = (kv_chunk and Sq > 1 and Skv >= 2 * kv_chunk
+                 and Skv % kv_chunk == 0)
+
+    def one_chunk(qi, off):
+        if use_flash:
+            return _sdpa_flash(qi, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=off,
+                               kv_valid_len=kv_valid_len, kv_chunk=kv_chunk,
+                               repeat_kv=rep)
+        return _sdpa_block(qi, k, v, causal=causal, window=window,
+                           softcap=softcap, q_offset=off,
+                           kv_valid_len=kv_valid_len, repeat_kv=rep)
+
+    if not q_chunk or Sq <= q_chunk or Sq % q_chunk != 0:
+        return one_chunk(q, q_offset)
+    nc = Sq // q_chunk
+    q_ch = q.reshape(B, nc, q_chunk, Hq, Dh).swapaxes(0, 1)  # (nc,B,qc,H,D)
+
+    def body(_, xs):
+        qi, i = xs
+        return None, one_chunk(qi, q_offset + i * q_chunk)
+
+    body = jax.checkpoint(body, prevent_cse=False)   # tiles recompute in bwd
+    _, outs = jax.lax.scan(body, None, (q_ch, jnp.arange(nc)))
+    Dv = v.shape[-1]
+    return outs.swapaxes(0, 1).reshape(B, Sq, Hq, Dv)
+
+
+def attention(params, cfg, spec, x, positions, *, cache=None, cache_index=None,
+              causal=True, cross_kv=None):
+    """Self-attention (+ optional appended cross-attention for whisper).
+
+    cache (decode/prefill-extend): {"k","v"} ring buffers (B, L, Hkv, Dh);
+    cache_index: scalar current length. Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if positions is not None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = hint(q, "qkv"), hint(k, "kv"), hint(v, "kv")
+
+    new_cache = None
+    if cache is not None:
+        if "k_s" in cache:   # int8 scalar-quantized cache
+            def q8(t):
+                s = jnp.max(jnp.abs(t), axis=-1, keepdims=True
+                            ).astype(jnp.float32) / 127.0
+                s = jnp.maximum(s, 1e-8)
+                codes = jnp.clip(jnp.round(t.astype(jnp.float32) / s),
+                                 -127, 127).astype(jnp.int8)
+                return codes, s
+
+            kq, ks = q8(k)
+            vq, vs = q8(v)
+            upd = lambda buf, t, rank4=True: jax.lax.dynamic_update_slice(
+                buf, t, (0, cache_index, 0, 0))
+            cache = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+                     "k_s": upd(cache["k_s"], ks), "v_s": upd(cache["v_s"], vs)}
+            new_cache = cache
+            k_all = (cache["k"].astype(k.dtype)
+                     * cache["k_s"].astype(k.dtype))
+            v_all = (cache["v"].astype(v.dtype)
+                     * cache["v_s"].astype(v.dtype))
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+            new_cache = {"k": k_all, "v": v_all}
+        out = sdpa(q, k_all, v_all, causal=causal, window=spec.window,
+                   softcap=cfg.attn_softcap, q_offset=cache_index,
+                   kv_valid_len=cache_index + S, q_chunk=cfg.attn_q_chunk)
+    else:
+        out = sdpa(q, k, v, causal=causal, window=spec.window,
+                   softcap=cfg.attn_softcap, q_chunk=cfg.attn_q_chunk)
+    y = out.reshape(B, S, H * Dh) @ params["wo"]
+
+    if spec.cross_attn:
+        assert cross_kv is not None, "cross-attention needs encoder kv"
+        ckv = (init_cross_kv(params, cfg, cross_kv["enc_out"])
+               if "enc_out" in cross_kv else cross_kv)
+        cq = (x @ params["c_wq"]).reshape(B, S, H, Dh)
+        co = sdpa(cq, ckv["k"], ckv["v"], causal=False,
+                  q_chunk=cfg.attn_q_chunk)
+        y = y + co.reshape(B, S, H * Dh) @ params["c_wo"]
+    return hint(y, "hidden"), new_cache
+
+
+def init_cross_kv(params, cfg, enc_out):
+    """Precompute encoder K/V once (prefill); reused every decode step."""
+    B, Se, D = enc_out.shape
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ params["c_wk"]).reshape(B, Se, Hkv, Dh)
+    v = (enc_out @ params["c_wv"]).reshape(B, Se, Hkv, Dh)
+    return {"k": k, "v": v}
+
+
+# ------------------------------------------------------------------ MLA
+
+def init_mla(cfg, spec, rng, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    r, nope, ropd, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq": _dense(ks[0], D, H * (nope + ropd), dtype),
+        "wdkv": _dense(ks[1], D, r, dtype),
+        "wkr": _dense(ks[2], D, ropd, dtype),
+        "wukv": _dense(ks[3], r, H * (nope + dv), dtype),
+        "wo": _dense(ks[4], H * dv, D, dtype),
+    }
+
+
+def mla_attention(params, cfg, spec, x, positions, *, cache=None,
+                  cache_index=None, causal=True, cross_kv=None):
+    """Multi-head latent attention (deepseek-v2). The cache stores only the
+    compressed latent (B, L, r) + shared rope key (B, L, ropd) - the MLA
+    memory saving that makes 32k decode cheap."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r, nope, ropd, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, nope + ropd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv = x @ params["wdkv"]                       # (B,S,r)
+    krope = (x @ params["wkr"]).reshape(B, S, 1, ropd)
+    if positions is not None:
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        krope = apply_rope(krope, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_index, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["krope"], krope[:, :, 0].astype(cache["krope"].dtype),
+            (0, cache_index, 0))
+        new_cache = {"ckv": ckv_all, "krope": kr_all}
+        ckv_use, kr_use, q_off = ckv_all, kr_all[:, :, None], cache_index
+        valid = cache_index + S
+    else:
+        ckv_use, kr_use, q_off, valid = ckv, krope, 0, None
+
+    L = ckv_use.shape[1]
+    kv = (ckv_use @ params["wukv"]).reshape(B, L, H, nope + dv)
+    k_nope, vv = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr_use, (B, L, H, ropd)).astype(k_nope.dtype)], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    out = sdpa(qq, k, vv, causal=causal, window=spec.window,
+               softcap=cfg.attn_softcap, q_offset=q_off, kv_valid_len=valid,
+               q_chunk=cfg.attn_q_chunk)
+    y = out.reshape(B, S, H * dv) @ params["wo"]
+    return hint(y, "hidden"), new_cache

@@ -1,0 +1,96 @@
+"""Encoder-decoder model (whisper-tiny backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, S_enc, d_model) to the encoder (bidirectional
+attention). The decoder is the standard causal stack with per-layer
+cross-attention; decode caches self-attention KV plus once-computed cross K/V.
+Positions use RoPE for both stacks (architecture-equivalent stand-in for
+whisper's learned absolute embeddings; noted in the config).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec
+
+from . import attention as attn_lib
+from .norms import init_rms, rms_norm
+from .transformer import (_embed_in, _lm_head, _scan_groups, init_layer,
+                          init_lm, init_lm_cache)
+
+
+def _enc_cfg(cfg):
+    """The encoder reuses the group machinery with its own (bidir) pattern."""
+    return dataclasses.replace(
+        cfg, group=(LayerSpec(mixer="attn", ffn="dense"),),
+        head_layers=(), n_layers=cfg.n_enc_layers)
+
+
+def init_encdec(cfg, rng):
+    k_enc, k_dec = jax.random.split(rng)
+    params = init_lm(cfg, k_dec)                     # decoder + embed + head
+    ecfg = _enc_cfg(cfg)
+    enc = init_lm(ecfg, k_enc)
+    params["enc_groups"] = enc["groups"]
+    params["enc_norm"] = init_rms(cfg.d_model, cfg.dtype("param"))
+    return params
+
+
+def encode(params, cfg, enc_embeds):
+    ecfg = _enc_cfg(cfg)
+    x = enc_embeds.astype(cfg.dtype("compute"))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _scan_groups(params, ecfg, x, positions, causal=not cfg.enc_bidirectional,
+                        groups_key="enc_groups")
+    return rms_norm(x, params["enc_norm"])
+
+
+def encdec_forward(params, cfg, batch, *, train=True, return_hidden=False):
+    """batch: enc_embeds (B,Se,D), tokens (B,Sd) -> logits (B,Sd,V)."""
+    enc_out = encode(params, cfg, batch["enc_embeds"])
+    x = _embed_in(params, cfg, {"tokens": batch["tokens"]})
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _scan_groups(params, cfg, x, positions, train=train,
+                        cross={"enc_out": enc_out})
+    if return_hidden:
+        return x
+    return _lm_head(params, cfg, x)
+
+
+def init_encdec_cache(cfg, batch, max_len, enc_len):
+    cache = init_lm_cache(cfg, batch, max_len)
+    dtype = cfg.dtype("compute")
+    kv = (cfg.n_groups, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+    cache["cross"] = {"l0": {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}}
+    return cache
+
+
+def encdec_prefill(params, cfg, batch, cache):
+    """Encode + decoder prefill; fills self KV and cross KV."""
+    enc_out = encode(params, cfg, batch["enc_embeds"])
+    # per-layer cross K/V (stacked over groups) via vmap over group params
+    cross = {"l0": jax.vmap(
+        lambda p: attn_lib.init_cross_kv(p["l0"]["mixer"], cfg, enc_out)
+    )(params["groups"])}
+    x = _embed_in(params, cfg, {"tokens": batch["tokens"]})
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, new_cache = _scan_groups(params, cfg, x, positions, cache=cache,
+                                cache_index=0, cross=cross)
+    new_cache["cross"] = cross
+    return _lm_head(params, cfg, x), new_cache
+
+
+def encdec_decode_step(params, cfg, tokens, cache, cache_index):
+    x = _embed_in(params, cfg, {"tokens": tokens})
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cache_index, (B, 1)).astype(jnp.int32)
+    x, new_cache = _scan_groups(params, cfg, x, positions, cache=cache,
+                                cache_index=cache_index, cross=cache["cross"])
+    new_cache["cross"] = cache["cross"]
+    return _lm_head(params, cfg, x), new_cache

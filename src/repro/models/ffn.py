@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.hints import hint
+
+
+def _dense(rng, d_in, d_out, dtype):
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32)
+            / np.sqrt(d_in)).astype(dtype)
+
+
+def init_ffn(cfg, rng, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": _dense(ks[0], cfg.d_model, d_ff, dtype),
+        "w_up": _dense(ks[1], cfg.d_model, d_ff, dtype),
+        "w_down": _dense(ks[2], d_ff, cfg.d_model, dtype),
+    }
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def ffn(params, cfg, x):
+    h = _act(x @ params["w_gate"], cfg.act) * (x @ params["w_up"])
+    h = hint(h, "ffn")
+    return hint(h @ params["w_down"], "hidden")

@@ -1,0 +1,38 @@
+"""The paper's experimental network: 784-256-128-64-10 fully-connected MLP
+(§4.1). Used by the NN-weight quantization benchmarks and examples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAPER_SIZES = (784, 256, 128, 64, 10)
+
+
+def init_mlp(rng, sizes=PAPER_SIZES):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, rng = jax.random.split(rng)
+        params.append({
+            "w": jax.random.normal(k1, (a, b), jnp.float32) * np.sqrt(2.0 / a),
+            "b": jnp.zeros((b,), jnp.float32),
+        })
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_loss(params, x, y):
+    logits = mlp_apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def mlp_accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(mlp_apply(params, x), -1) == y)

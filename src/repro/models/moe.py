@@ -1,0 +1,121 @@
+"""Token-choice top-k Mixture of Experts with shared experts.
+
+Capacity-based scatter dispatch (global formulation; GSPMD shards it:
+experts over 'model', token/capacity dims over the batch axes). Overflow
+tokens beyond capacity_factor * T * K / E are dropped (standard). Shared
+experts (deepseek) run densely on every token.
+
+The router runs in float32 (cfg.router_dtype) regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.hints import hint
+from .ffn import _act, _dense, init_ffn
+
+
+def init_moe(cfg, rng, dtype):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.expert_ff
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / np.sqrt(D)
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * scale
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale
+                   ).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   / np.sqrt(F)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(cfg, ks[4], dtype,
+                               d_ff=cfg.expert_ff * cfg.n_shared_experts)
+    return p
+
+
+def _row_dispatch(flat_e, E, C):
+    """Sort-based dispatch plan for ONE batch row (no scatter anywhere).
+
+    flat_e: (SK,) expert id per (token,k) assignment. Returns
+      slot_tok:  (E, C) assignment index filling each expert slot
+      slot_ok:   (E, C) slot validity
+      tok_pos:   (SK,) position of each assignment within its expert
+    Everything is argsort/searchsorted/iota - GSPMD shards the vmapped batch
+    dim cleanly, unlike computed-index scatter (which replicated the whole
+    dispatch at 48 GiB/device; EXPERIMENTS.md §Perf)."""
+    SK = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)                    # (SK,)
+    sorted_e = flat_e[order]
+    first_of = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")  # (E,)
+    idx_in_sorted = first_of[:, None] + jnp.arange(C)[None, :]  # (E,C)
+    safe_idx = jnp.clip(idx_in_sorted, 0, SK - 1)
+    slot_ok = (idx_in_sorted < SK) & (sorted_e[safe_idx] == jnp.arange(E)[:, None])
+    slot_tok = order[safe_idx]                                  # (E,C)
+    # inverse: rank of each assignment within its expert
+    first_all = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(SK) - first_all
+    tok_pos = jnp.zeros((SK,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+    return slot_tok, slot_ok, tok_pos
+
+
+def moe_ffn(params, cfg, x):
+    """x: (B, S, D) -> (B, S, D).
+
+    Grouped token-choice top-k with per-row capacity C = ceil(cf*S*K/E):
+    dispatch AND combine are batched gathers (take_along_axis), experts
+    shard over 'model', rows over the batch axes.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)                        # (B,S,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    C = int(np.ceil(cfg.capacity_factor * S * K / E))
+    flat_e = top_i.reshape(B, S * K)
+    slot_tok, slot_ok, tok_pos = jax.vmap(
+        lambda fe: _row_dispatch(fe, E, C))(flat_e)               # (B,E,C)...
+
+    # dispatch: gather tokens into (B, E, C, D); slot -> source token s = a//K
+    src_tok = (slot_tok // K).reshape(B, E * C)                   # (B, E*C)
+    buf = jnp.take_along_axis(x, src_tok[..., None], axis=1)      # (B,E*C,D)
+    buf = buf.reshape(B, E, C, D) * slot_ok[..., None].astype(x.dtype)
+    buf = hint(buf, "moe_buf")
+
+    h = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    h = _act(h, cfg.act) * jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    h = hint(h, "moe_h")
+    out = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    out = hint(out, "moe_buf")
+
+    # combine: gather each assignment's slot back; dropped tokens get 0
+    keep = tok_pos < C
+    gather_idx = flat_e * C + jnp.where(keep, tok_pos, 0)         # (B,SK)
+    y_tok = jnp.take_along_axis(out.reshape(B, E * C, D),
+                                gather_idx[..., None], axis=1)
+    y_tok = hint(y_tok, "moe_tok")
+    y_tok = y_tok * keep[..., None].astype(out.dtype)
+    y = (y_tok.reshape(B, S, K, D)
+         * top_w[..., None].astype(out.dtype)).sum(axis=2)
+    if "shared" in params:
+        sh = params["shared"]
+        y = y + (_act(x @ sh["w_gate"], cfg.act) * (x @ sh["w_up"])) @ sh["w_down"]
+    return hint(y, "hidden")
+
+
+def router_aux_loss(params, cfg, x):
+    """Load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D).astype(jnp.float32)
+    probs = jax.nn.softmax(xt @ params["router"], axis=-1)
+    top_i = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top_i, cfg.n_experts, dtype=jnp.float32), axis=0)
+    p = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(f * p)

@@ -1,0 +1,33 @@
+"""Normalization layers (pure functions over param dicts).
+
+All RMSNorms use the (1 + w) parameterization with w initialized to zero
+(effective scale 1). This is gemma's convention; for the other archs it is
+numerically identical at init and keeps a single code path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, *, eps: float = 1e-6):
+    """Mean-square in f32; the (B,S,D)-sized products stay in x.dtype so the
+    backward residual chain is bf16, not f32 (halves norm-related HBM traffic
+    - EXPERIMENTS.md §Perf)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = ((var + eps) ** -0.5).astype(x.dtype)
+    w = (1.0 + scale.astype(jnp.float32)).astype(x.dtype)
+    return x * inv * w
+
+
+def init_rms(d: int, dtype) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype)
+
+
+def layer_norm(x, scale, bias, *, eps: float = 1e-5):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,53 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl M-RoPE.
+
+positions: (B, S) int32 for RoPE; (3, B, S) for M-RoPE (temporal, h, w) -
+the VLM frontend is a stub per the assignment, so text positions replicate
+the temporal index across the three sections, which is exactly what
+qwen2-vl does for pure-text tokens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) -> rotated x."""
+    B, S, H, D = x.shape
+    freqs = rope_freqs(D, theta)                        # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections):
+    """M-RoPE: frequency bands split across (t, h, w) position streams.
+
+    x: (B, S, H, D); positions: (3, B, S); sections: per-stream half-dims
+    summing to D/2.
+    """
+    B, S, H, D = x.shape
+    half = D // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(D, theta)                        # (half,)
+    # band s uses position stream s
+    parts = []
+    start = 0
+    for s, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        ang = positions[s].astype(jnp.float32)[..., None] * f   # (B,S,sec)
+        parts.append(ang)
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)               # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,286 @@
+"""Attention-free sequence mixers: Mamba (selective SSM) and RWKV-6 (Finch).
+
+Both use chunked sequence scans for training (outer lax.scan over
+cfg.scan_chunk-sized chunks carrying the recurrent state; within-chunk the
+Mamba recurrence is a log-depth associative scan, the RWKV-6 recurrence a
+short inner scan). Decode is a single O(1) state update - this is why these
+archs run the long_500k shape while full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.hints import hint
+from .norms import init_rms, rms_norm
+
+
+def _dense(rng, d_in, d_out, dtype, scale=None):
+    scale = scale or 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# =================================================================== Mamba
+
+def init_mamba(cfg, rng, dtype):
+    D, E, N, R, dc = (cfg.d_model, cfg.d_inner, cfg.ssm_d_state, cfg.dt_rank,
+                      cfg.ssm_d_conv)
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_in": _dense(ks[0], D, 2 * E, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, E), jnp.float32) / dc).astype(dtype),
+        "w_bcdt": _dense(ks[2], E, 2 * N + R, dtype),
+        "w_dt": _dense(ks[3], R, E, dtype, scale=1.0 / np.sqrt(R)),
+        "dt_bias": jnp.full((E,), -2.0, dtype),   # softplus(-2) ~ 0.12
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (E, N)).copy()),
+        "D_skip": jnp.ones((E,), jnp.float32),
+        "w_out": _dense(ks[4], E, D, dtype),
+    }
+
+
+def _mamba_scan_chunk(a, b, h0):
+    """Diagonal-SSM chunk via associative scan. a,b: (B,c,E,N); h0: (B,E,N)."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = b_cum + a_cum * h0[:, None]
+    return h, h[:, -1]
+
+
+def mamba(params, cfg, x, *, cache=None):
+    """x: (B,S,D). cache (decode): {"h": (B,E,N), "conv": (B,dc-1,E)}."""
+    B, S, D = x.shape
+    E, N, R, dc = cfg.d_inner, cfg.ssm_d_state, cfg.dt_rank, cfg.ssm_d_conv
+    xz = x @ params["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)                  # (B,S,E) each
+    xs = hint(xs, "ssm_inner")
+
+    # causal depthwise conv
+    if cache is not None:
+        ctx = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], axis=1)
+        new_conv = ctx[:, -(dc - 1):]
+    else:
+        ctx = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+        new_conv = ctx[:, -(dc - 1):]
+    xc = sum(ctx[:, i:i + S] * params["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc)
+
+    bcdt = xc @ params["w_bcdt"]                        # (B,S,2N+R)
+    B_t, C_t, dt_low = jnp.split(bcdt, [N, 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["w_dt"]
+                         + params["dt_bias"].astype(xc.dtype))  # (B,S,E)
+    A = -jnp.exp(params["A_log"])                       # (E,N) f32
+
+    def discretize(xc_c, dt_c, B_c):
+        """(B,c,E),(B,c,E),(B,c,N) -> a, b (B,c,E,N) f32 - built per chunk so
+        the full-sequence (B,S,E,N) tensors (4 GiB/device/layer for jamba)
+        never exist."""
+        dtf = dt_c.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * A)
+        b = (dtf * xc_c.astype(jnp.float32))[..., None] \
+            * B_c.astype(jnp.float32)[:, :, None, :]
+        return a, b
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((B, E, N), jnp.float32))
+    if S == 1:                                          # decode: O(1) update
+        a, b = discretize(xc, dt, B_t)
+        h = a[:, 0] * h0 + b[:, 0]
+        y = jnp.einsum("ben,bn->be", h, C_t[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        c = min(cfg.scan_chunk, S)
+        pad = (-S) % c
+        padded = lambda t: (jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                            if pad else t)
+        Sp = S + pad
+        resh = lambda t: padded(t).reshape(B, Sp // c, c, *t.shape[2:]).swapaxes(0, 1)
+
+        def step(h_in, xs):
+            xc_c, dt_c, B_c, C_c = xs
+            # pads carry dt=0, xc=0 -> a=exp(0)=1, b=0: state-preserving
+            a, b = discretize(xc_c, dt_c, B_c)
+            states, h_out = _mamba_scan_chunk(a, b, h_in)
+            y_c = jnp.einsum("bsen,bsn->bse", states, C_c.astype(jnp.float32))
+            return h_out, y_c
+
+        step = jax.checkpoint(step, prevent_cse=False)
+        h_last, y = jax.lax.scan(
+            step, h0, (resh(xc), resh(dt), resh(B_t), resh(C_t)))
+        y = y.swapaxes(0, 1).reshape(B, Sp, E)[:, :S]
+
+    y = y + params["D_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    new_cache = {"h": h_last, "conv": new_conv} if cache is not None else None
+    return hint(y, "hidden"), new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+# =================================================================== RWKV-6
+
+def init_rwkv6(cfg, rng, dtype):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    lora = 64
+    ks = jax.random.split(rng, 12)
+    return {
+        "mix": (jax.random.uniform(ks[0], (5, D), jnp.float32)).astype(dtype),
+        "w_r": _dense(ks[1], D, D, dtype),
+        "w_k": _dense(ks[2], D, D, dtype),
+        "w_v": _dense(ks[3], D, D, dtype),
+        "w_g": _dense(ks[4], D, D, dtype),
+        "w0": jnp.full((D,), -6.0, jnp.float32),       # decay bias (Finch)
+        "w_lora_a": _dense(ks[5], D, lora, dtype),
+        "w_lora_b": _dense(ks[6], lora, D, dtype, scale=0.01),
+        "u": (jax.random.normal(ks[7], (D,), jnp.float32) * 0.1).astype(jnp.float32),
+        "ln_out": init_rms(D, dtype),
+        "w_o": _dense(ks[8], D, D, dtype),
+        # channel mix
+        "cmix": (jax.random.uniform(ks[9], (2, D), jnp.float32)).astype(dtype),
+        "c_k": _dense(ks[10], D, cfg.d_ff, dtype),
+        "c_v": _dense(ks[11], cfg.d_ff, D, dtype),
+        "c_r": _dense(ks[0], D, D, dtype),
+    }
+
+
+def _token_shift(x, shift_state):
+    """Previous-token features: (B,S,D) with carry (B,D)."""
+    prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def _wkv6_chunk_matmul(r, k, v, w, u, s0, *, clamp: float = 15.0):
+    """Chunked parallel WKV6 (GLA-style): the whole chunk as matmuls.
+
+    With cumulative decay W_t = prod_{tau<=t} w_tau:
+      y_t = (r_t*W_{t-1}) . S_0  +  sum_{tau<t} [(r_t*W_{t-1}/W_tau).k_tau] v_tau
+            + (r_t.(u*k_tau)) v_t
+      S_c = W_c*S_0 + sum_tau (W_c/W_tau)*k_tau v_tau^T
+    i.e. one strictly-lower-triangular (c,c) score matmul + one (hd,hd) state
+    matmul per head - MXU-dense, no sequential scan. log-decay exponents are
+    clamped to +-clamp for stability (W_c/W_tau <= 1 always; the r~/k~ split
+    can individually overflow without it). Replaces 32 sequential VPU steps
+    per chunk with 2 matmuls (EXPERIMENTS.md §Perf, rwkv hillclimb).
+    r,k,v,w: (B,c,H,hd) f32; u: (1,H,hd,1); s0: (B,H,hd,hd).
+    """
+    B, c, H, hd = r.shape
+    logw = jnp.cumsum(jnp.log(jnp.maximum(w, 1e-12)), axis=1)   # <= 0
+    logw_prev = logw - jnp.log(jnp.maximum(w, 1e-12))           # W_{t-1}; W_0=1
+    r_dec = r * jnp.exp(logw_prev)                              # underflow->0 ok
+    # pairwise decay factors, exact: on the causal (t>s) region
+    # logW_{t-1} - logW_s <= 0 so exp() never overflows; the acausal region
+    # is clipped then masked. (A factorized r~ @ k~^T splits the exponent
+    # into halves that overflow under strong decay - refuted, see §Perf log.)
+    F = jnp.exp(jnp.minimum(
+        logw_prev[:, :, None] - logw[:, None, :], 0.0))         # (B,c,c,H,hd)
+    A = jnp.einsum("bthd,bshd,btshd->bhts", r, k, F)            # (B,H,c,c)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)                # strictly lower
+    A = jnp.where(tri[None, None], A, 0.0)
+    uu = u[0, :, :, 0]                                          # (H,hd)
+    diag = jnp.einsum("bthd,hd,bthd->bth", r, uu, k)
+    y = (jnp.einsum("bhts,bshd->bthd", A, v)
+         + diag[..., None] * v
+         + jnp.einsum("bthd,bhdv->bthv", r_dec, s0))
+    k_tail = k * jnp.exp(jnp.minimum(logw[:, -1:] - logw, clamp))  # W_c/W_tau<=1
+    w_c = jnp.exp(jnp.maximum(logw[:, -1], -clamp))             # (B,H,hd)
+    s_new = w_c[..., None] * s0 + jnp.einsum("bshd,bshv->bhdv", k_tail, v)
+    return y, s_new
+
+
+def _wkv6_chunk(r, k, v, w, u, s0):
+    """Sequential WKV inner scan (reference oracle for the matmul version).
+
+    y_t = r_t . (S_{t-1} + u * k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                        # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    rr = r.swapaxes(0, 1)
+    kk = k.swapaxes(0, 1)
+    vv = v.swapaxes(0, 1)
+    ww = w.swapaxes(0, 1)
+    s_last, ys = jax.lax.scan(step, s0, (rr, kk, vv, ww))
+    return ys.swapaxes(0, 1), s_last                 # (B,c,H,hd)
+
+
+def rwkv6_time_mix(params, cfg, x, *, shift_state, wkv_state):
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    prev, new_shift = _token_shift(x, shift_state)
+    mix = params["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (prev - x) * mix[i] for i in range(5))
+    r = (xr @ params["w_r"]).reshape(B, S, H, hd)
+    k = (xk @ params["w_k"]).reshape(B, S, H, hd)
+    v = (xv @ params["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ params["w_g"])
+    # data-dependent decay (the Finch contribution)
+    dec = params["w0"] + (jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+                          ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, H, hd)  # in (0,1)
+    u = params["u"].reshape(H, hd)[None, :, :, None] * jnp.ones((1,), jnp.float32)
+
+    rf, kf, vf, wf = (hint(t.astype(jnp.float32), "wkv")
+                      for t in (r, k, v, w))
+    if S == 1:
+        ys, s_last = _wkv6_chunk(rf, kf, vf, wf, u, wkv_state)
+    else:
+        c = min(cfg.scan_chunk, S)
+        pad = (-S) % c
+        if pad:   # w=1, k=0 leaves the wkv state untouched through padding
+            zpad = jnp.zeros((B, pad, H, hd), jnp.float32)
+            rf = jnp.concatenate([rf, zpad], 1)
+            kf = jnp.concatenate([kf, zpad], 1)
+            vf = jnp.concatenate([vf, zpad], 1)
+            wf = jnp.concatenate([wf, jnp.ones((B, pad, H, hd), jnp.float32)], 1)
+        Sp = S + pad
+
+        def outer(s_in, rkvw):
+            ys, s_out = _wkv6_chunk_matmul(*rkvw, u, s_in)
+            return s_out, ys
+
+        outer = jax.checkpoint(outer, prevent_cse=False)
+        resh = lambda t: t.reshape(B, Sp // c, c, H, hd).swapaxes(0, 1)
+        s_last, ys = jax.lax.scan(outer, wkv_state,
+                                  (resh(rf), resh(kf), resh(vf), resh(wf)))
+        ys = ys.swapaxes(0, 1).reshape(B, Sp, H, hd)[:, :S]
+    y = ys.reshape(B, S, D).astype(x.dtype)
+    y = rms_norm(y, params["ln_out"]) * g
+    return hint(y @ params["w_o"], "hidden"), new_shift, s_last
+
+
+def rwkv6_channel_mix(params, cfg, x, *, shift_state):
+    prev, new_shift = _token_shift(x, shift_state)
+    cmix = params["cmix"].astype(x.dtype)
+    xk = x + (prev - x) * cmix[0]
+    xr = x + (prev - x) * cmix[1]
+    k = jnp.square(jax.nn.relu(xk @ params["c_k"]))
+    return jax.nn.sigmoid(xr @ params["c_r"]) * (k @ params["c_v"]), new_shift
+
+
+def init_rwkv_cache(cfg, batch, dtype):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    return {
+        "shift_t": jnp.zeros((batch, D), dtype),
+        "shift_c": jnp.zeros((batch, D), dtype),
+        "s": jnp.zeros((batch, D // hd, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,281 @@
+"""Decoder-only LM assembly: per-layer pattern, lax.scan over layer groups,
+remat policies, KV/state caches, prefill and single-token decode.
+
+Params are plain nested dicts. Layers inside one group are heterogeneous
+(gemma2: [local, global]; jamba: 7 mamba + 1 attn with alternating MoE);
+identical groups are stacked on a leading axis and scanned, which keeps HLO
+size (and compile time) independent of depth - essential for the 80-layer
+dry-runs on 512 host devices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.hints import hint
+from . import attention as attn_lib
+from . import ssm as ssm_lib
+from .ffn import ffn, init_ffn
+from .moe import init_moe, moe_ffn
+from .norms import init_rms, rms_norm
+
+# ------------------------------------------------------------- layer init
+
+
+def init_layer(cfg, spec, rng, dtype):
+    ks = jax.random.split(rng, 4)
+    p = {"ln1": init_rms(cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_lib.init_attention(cfg, spec, ks[0], dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = attn_lib.init_mla(cfg, spec, ks[0], dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm_lib.init_mamba(cfg, ks[0], dtype)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = ssm_lib.init_rwkv6(cfg, ks[0], dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.post_block_norm:
+        p["post_ln1"] = init_rms(cfg.d_model, dtype)
+    if spec.ffn == "dense":
+        p["ln2"] = init_rms(cfg.d_model, dtype)
+        p["ffn"] = init_ffn(cfg, ks[1], dtype)
+    elif spec.ffn == "moe":
+        p["ln2"] = init_rms(cfg.d_model, dtype)
+        p["ffn"] = init_moe(cfg, ks[1], dtype)
+    elif spec.ffn == "cmix":
+        p["ln2"] = init_rms(cfg.d_model, dtype)
+        # rwkv6 channel-mix params live inside the mixer dict (c_*, cmix)
+    if cfg.post_block_norm and spec.ffn != "none":
+        p["post_ln2"] = init_rms(cfg.d_model, dtype)
+    return p
+
+
+def init_layer_cache(cfg, spec, batch, max_len, dtype):
+    if spec.mixer == "attn":
+        kv = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            # scalar-quantized cache (the paper's value-sharing applied to
+            # KV): int8 codes + one f32 scale per (token, head)
+            sc = (batch, max_len, cfg.n_kv_heads, 1)
+            return {"k": jnp.zeros(kv, jnp.int8), "v": jnp.zeros(kv, jnp.int8),
+                    "k_s": jnp.zeros(sc, jnp.float32),
+                    "v_s": jnp.zeros(sc, jnp.float32)}
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    if spec.mixer == "mla":
+        return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+    if spec.mixer == "mamba":
+        return ssm_lib.init_mamba_cache(cfg, batch, dtype)
+    if spec.mixer == "rwkv6":
+        return ssm_lib.init_rwkv_cache(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+# ------------------------------------------------------------- layer apply
+
+
+def apply_layer(p, cfg, spec, x, positions, *, cache=None, cache_index=None,
+                cross_kv=None, causal=True):
+    h = rms_norm(x, p["ln1"])
+    if spec.mixer in ("attn", "mla"):
+        fn = attn_lib.attention if spec.mixer == "attn" else attn_lib.mla_attention
+        out, new_c = fn(p["mixer"], cfg, spec, h, positions, cache=cache,
+                        cache_index=cache_index, cross_kv=cross_kv,
+                        causal=causal)
+    elif spec.mixer == "mamba":
+        out, new_c = ssm_lib.mamba(p["mixer"], cfg, h, cache=cache)
+    elif spec.mixer == "rwkv6":
+        shift = (cache["shift_t"] if cache is not None
+                 else jnp.zeros_like(h[:, 0]))
+        state = (cache["s"] if cache is not None
+                 else jnp.zeros((h.shape[0], cfg.d_model // cfg.rwkv_head_dim,
+                                 cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32))
+        out, new_shift, new_state = ssm_lib.rwkv6_time_mix(
+            p["mixer"], cfg, h, shift_state=shift, wkv_state=state)
+        new_c = None
+        if cache is not None:
+            new_c = dict(cache, shift_t=new_shift, s=new_state)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.post_block_norm:
+        out = rms_norm(out, p["post_ln1"])
+    x = x + out
+
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["ln2"])
+        if spec.ffn == "dense":
+            f = ffn(p["ffn"], cfg, h2)
+        elif spec.ffn == "moe":
+            f = moe_ffn(p["ffn"], cfg, h2)
+        elif spec.ffn == "cmix":
+            shift_c = (cache["shift_c"] if cache is not None
+                       else jnp.zeros_like(h2[:, 0]))
+            f, new_shift_c = ssm_lib.rwkv6_channel_mix(
+                p["mixer"], cfg, h2, shift_state=shift_c)
+            if new_c is not None:
+                new_c = dict(new_c, shift_c=new_shift_c)
+        if cfg.post_block_norm:
+            f = rms_norm(f, p["post_ln2"])
+        x = x + f
+    return hint(x, "hidden"), new_c
+
+
+# ------------------------------------------------------------- full model
+
+
+def init_lm(cfg, rng):
+    dtype = cfg.dtype("param")
+    ks = jax.random.split(rng, 4 + len(cfg.head_layers))
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                  ).astype(dtype),
+        "final_norm": init_rms(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            ks[1], (cfg.d_model, cfg.vocab), jnp.float32)
+            / np.sqrt(cfg.d_model)).astype(dtype)
+    for i, spec in enumerate(cfg.head_layers):
+        params[f"head_{i}"] = init_layer(cfg, spec, ks[3 + i], dtype)
+    group_keys = jax.random.split(ks[2], cfg.n_groups)
+
+    def one_group(k):
+        sub = jax.random.split(k, len(cfg.group))
+        return {f"l{i}": init_layer(cfg, spec, sub[i], dtype)
+                for i, spec in enumerate(cfg.group)}
+
+    params["groups"] = jax.vmap(one_group)(group_keys)
+    return params
+
+
+def init_lm_cache(cfg, batch, max_len):
+    dtype = cfg.dtype("compute")
+
+    def stack(spec):
+        one = init_layer_cache(cfg, spec, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape).copy(), one)
+
+    cache = {"groups": {f"l{i}": stack(spec) for i, spec in enumerate(cfg.group)}}
+    for i, spec in enumerate(cfg.head_layers):
+        cache[f"head_{i}"] = init_layer_cache(cfg, spec, batch, max_len, dtype)
+    return cache
+
+
+def _embed_in(params, cfg, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype("compute"))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0
+                     ).astype(cfg.dtype("compute"))
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return hint(x, "hidden")
+
+
+def _lm_head(params, cfg, x):
+    x = rms_norm(x, params["final_norm"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return hint(logits, "logits")
+
+
+def _scan_groups(params, cfg, x, positions, *, cache=None, cache_index=None,
+                 train=False, causal=True, cross=None, groups_key="groups"):
+    """Run head layers then the scanned groups. Returns (x, new_cache).
+
+    cross: per-scan-group cross-attention source - either {"enc_out": (B,Se,D)}
+    (projected per layer on the fly; training/prefill) or stacked precomputed
+    {"k","v"} with leading group axis (decode).
+    """
+    new_cache = {}
+    for i, spec in enumerate(cfg.head_layers):
+        c = None if cache is None else cache[f"head_{i}"]
+        x, nc = apply_layer(params[f"head_{i}"], cfg, spec, x, positions,
+                            cache=c, cache_index=cache_index, causal=causal)
+        if cache is not None:
+            new_cache[f"head_{i}"] = nc
+
+    cross_scanned = cross is not None and "enc_out" not in cross
+
+    def body(carry, xs):
+        h = carry
+        it = iter(xs)
+        gp = next(it)
+        gc = next(it) if cache is not None else None
+        gx = next(it) if cross_scanned else None
+        ncs = {}
+        for i, spec in enumerate(cfg.group):
+            c = None if gc is None else gc[f"l{i}"]
+            ckv = None
+            if spec.cross_attn:
+                ckv = gx[f"l{i}"] if cross_scanned else cross
+            h, nc = apply_layer(gp[f"l{i}"], cfg, spec, h, positions,
+                                cache=c, cache_index=cache_index,
+                                cross_kv=ckv, causal=causal)
+            ncs[f"l{i}"] = nc if nc is not None else 0
+        return h, ncs
+
+    if train and cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif train and cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = [params[groups_key]]
+    if cache is not None:
+        xs.append(cache["groups"])
+    if cross_scanned:
+        xs.append(cross)
+    x, group_caches = jax.lax.scan(body, x, tuple(xs))
+    if cache is not None:
+        new_cache["groups"] = group_caches
+    return x, (new_cache if cache is not None else None)
+
+
+def lm_forward(params, cfg, batch, *, train=True, return_hidden=False):
+    """Full-sequence forward -> logits (B, S, V) (or pre-head hidden when
+    return_hidden - the chunked-CE loss applies the head per seq chunk)."""
+    x = _embed_in(params, cfg, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _scan_groups(params, cfg, x, positions, train=train)
+    if return_hidden:
+        return x
+    return _lm_head(params, cfg, x)
+
+
+def lm_prefill(params, cfg, batch, cache):
+    """Populate the cache from a full prompt; returns (logits, cache)."""
+    x = _embed_in(params, cfg, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, new_cache = _scan_groups(params, cfg, x, positions, cache=cache,
+                                cache_index=0)
+    return _lm_head(params, cfg, x), new_cache
+
+
+def lm_decode_step(params, cfg, tokens, cache, cache_index):
+    """One decode step: tokens (B, 1) -> (logits (B,1,V), new_cache)."""
+    batch = {"tokens": tokens}
+    x = _embed_in(params, cfg, batch)
+    B = x.shape[0]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(cache_index, (3, B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(cache_index, (B, 1)).astype(jnp.int32)
+    x, new_cache = _scan_groups(params, cfg, x, positions, cache=cache,
+                                cache_index=cache_index)
+    return _lm_head(params, cfg, x), new_cache

@@ -1,0 +1,31 @@
+"""Optimizers built in-repo (no external deps): AdamW + Adafactor."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import adafactor, adamw
+from .schedule import cosine_with_warmup
+
+
+class Optimizer:
+    """Thin dispatch facade: cfg.optimizer -> module with init/update."""
+
+    def __init__(self, kind: str, state_dtype: str = "float32", **hyper):
+        self.kind = kind
+        self.mod = {"adamw": adamw, "adafactor": adafactor}[kind]
+        self.state_dtype = jnp.dtype(state_dtype)
+        self.hyper = hyper
+
+    def init(self, params):
+        return self.mod.init(params, self.state_dtype)
+
+    def update(self, grads, state, params, *, lr):
+        return self.mod.update(grads, state, params, lr=lr, **self.hyper)
+
+
+def for_config(cfg, **hyper) -> Optimizer:
+    return Optimizer(cfg.optimizer, cfg.opt_state_dtype, **hyper)
+
+
+__all__ = ["Optimizer", "for_config", "adamw", "adafactor",
+           "cosine_with_warmup"]

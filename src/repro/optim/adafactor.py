@@ -1,0 +1,79 @@
+"""Adafactor (factored second moments) - the memory-frugal optimizer for the
+398B/72B archs: O(n+m) second-moment storage per (n,m) matrix instead of
+O(nm), optional bf16 first moment."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params, state_dtype=jnp.float32, use_momentum=True):
+    def v_init(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], state_dtype),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], state_dtype)}
+        return {"v": jnp.zeros(p.shape, state_dtype)}
+
+    state = {"v": jax.tree.map(v_init, params,
+                               is_leaf=lambda x: isinstance(x, jax.Array)),
+             "count": jnp.zeros((), jnp.int32)}
+    if use_momentum:
+        state["m"] = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype),
+                                  params)
+    return state
+
+
+def update(grads, state, params, *, lr, b2=0.999, eps=1e-30, clip=1.0,
+           weight_decay=0.0, b1=0.9):
+    count = state["count"] + 1
+    has_m = "m" in state
+
+    def upd(g, vdict, p, m=None):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            vr = b2 * vdict["vr"].astype(jnp.float32) + (1 - b2) * g2.mean(-1)
+            vc = b2 * vdict["vc"].astype(jnp.float32) + (1 - b2) * g2.mean(-2)
+            denom = (vr[..., None] / jnp.maximum(
+                vr.mean(-1, keepdims=True)[..., None], eps)) * vc[..., None, :]
+            u = g32 / jnp.sqrt(denom + eps)
+            new_v = {"vr": vr.astype(vdict["vr"].dtype),
+                     "vc": vc.astype(vdict["vc"].dtype)}
+        else:
+            v = b2 * vdict["v"].astype(jnp.float32) + (1 - b2) * g2
+            u = g32 / jnp.sqrt(v + eps)
+            new_v = {"v": v.astype(vdict["v"].dtype)}
+        # update clipping (RMS <= clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if m is not None:
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * u
+            u_out = m32
+            new_m = m32.astype(m.dtype)
+        else:
+            u_out, new_m = u, None
+        new_p = (p.astype(jnp.float32)
+                 - lr * (u_out + weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), new_v, new_m
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_v = treedef.flatten_up_to(state["v"])
+    leaves_p = treedef.flatten_up_to(params)
+    leaves_m = (treedef.flatten_up_to(state["m"]) if has_m
+                else [None] * len(leaves_g))
+    outs = [upd(g, v, p, m) for g, v, p, m in
+            zip(leaves_g, leaves_v, leaves_p, leaves_m)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_state = {"v": jax.tree.unflatten(treedef, [o[1] for o in outs]),
+                 "count": count}
+    if has_m:
+        new_state["m"] = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_params, new_state
+
+
+# optimizer-state shardings are derived structurally from the state tree in
+# repro.train.step.opt_state_shardings (handles vr/vc factored leaves).

@@ -1,0 +1,50 @@
+"""AdamW with configurable state dtype (f32 default; bf16 for the biggest
+archs so params+states fit the pod - DESIGN.md §6). Pure-pytree functional
+optimizer; math in f32 regardless of storage dtype."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+           weight_decay=0.1):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+def state_shardings(param_shardings, mesh):
+    """Optimizer state mirrors parameter sharding (ZeRO via GSPMD 2-D FSDP)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "count": NamedSharding(mesh, P()),
+    }

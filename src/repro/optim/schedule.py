@@ -1,0 +1,15 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr, warmup_steps, total_steps,
+                       final_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,95 @@
+"""Quantized cross-pod gradient all-reduce with error feedback.
+
+The paper's thesis - scalar quantization as cheap value-sharing - applied to
+distributed training communication: pods train data-parallel; the cross-pod
+gradient exchange (the slow inter-pod DCI hop) moves int8 codes + one f32
+scale per tensor instead of bf16/f32 values: 2-4x less cross-pod traffic.
+Error feedback (Seide et al.) accumulates the quantization residual locally
+so the compression bias vanishes over steps.
+
+Implemented as a manual `shard_map` over ONLY the 'pod' axis (data/model
+stay GSPMD-auto): inside, each pod holds its own partial gradient; we
+quantize, all_gather the codes across pods, dequantize and sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize_int8(g):
+    """Symmetric uniform int8 scalar quantization (in-graph; the offline
+    sparse-LSQ solvers refine codebooks for PTQ where latency permits)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def pod_quantized_allreduce(grads, err, *, axis: str = "pod"):
+    """Inside shard_map(axis_names={'pod'}): per-pod partial grads ->
+    identical summed grads + new error-feedback state."""
+    n_pods = jax.lax.axis_size(axis)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(g32)
+        deq = _dequantize(q, scale)
+        new_e = g32 - deq
+        qs = jax.lax.all_gather(q, axis)            # int8 over the wire
+        ss = jax.lax.all_gather(scale, axis)
+        total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+        return (total / n_pods).astype(g.dtype), new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = tree.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tree, [o[0] for o in out]),
+            jax.tree.unflatten(tree, [o[1] for o in out]))
+
+
+def init_error_feedback(params_shape):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                        params_shape)
+
+
+def wrap_pod_train_step(train_step_core, mesh, state_specs, batch_specs):
+    """Lift a per-pod train step into a multi-pod one with compressed
+    cross-pod gradient exchange.
+
+    train_step_core(state, batch) must return (grads, metrics) - the caller
+    applies the optimizer AFTER reduction so all pods stay bit-identical.
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError("wrap_pod_train_step needs a 'pod' mesh axis")
+
+    def stepped(state, err, batch):
+        grads, metrics = train_step_core(state, batch)
+        grads, new_err = pod_quantized_allreduce(grads, err)
+        metrics = jax.tree.map(functools.partial(jax.lax.pmean,
+                                                 axis_name="pod"), metrics)
+        return grads, new_err, metrics
+
+    # batch dim 0 is sharded over pod (manual) x data (auto); everything else
+    # is replicated over 'pod'
+    def batch_spec(_):
+        return P("pod")
+
+    return jax.shard_map(
+        stepped,
+        mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), state_specs),
+                  jax.tree.map(lambda _: P(), state_specs["params"]),
+                  jax.tree.map(batch_spec, batch_specs)),
+        out_specs=(jax.tree.map(lambda _: P(), state_specs["params"]),
+                   jax.tree.map(lambda _: P(), state_specs["params"]),
+                   P()),
+        axis_names=frozenset({"pod"}),
+        check_vma=False,
+    )

@@ -1,0 +1,124 @@
+"""Post-training quantization of whole checkpoints with the paper's methods.
+
+Per-tensor (optionally per-output-channel) sparse-LSQ quantization; the
+batched FISTA Pallas kernel quantizes many rows/tensors in one launch; CD is
+the host path for small tensors. Returns a pytree mirroring params with
+QuantizedTensor leaves (skips norms/routers/SSM-sensitive leaves per
+cfg.quant_skip).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+
+from repro.core import QuantizedTensor, quantize
+from repro.core.problem import make_problem, unique_with_counts
+from repro.core.refit import refit_support, support_of
+from repro.core.types import from_dense
+from repro.kernels import solve_fista_batch
+
+
+def _names(path):
+    return tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+
+
+def should_quantize(path, leaf, skip_patterns) -> bool:
+    if leaf.ndim < 2:
+        return False
+    name = "/".join(_names(path))
+    return not any(re.search(p, name) for p in skip_patterns)
+
+
+def quantize_tree(params, *, method: str = "kmeans_ls", num_values: int = 256,
+                  lam: float | None = None, weighted: bool = True,
+                  skip_patterns=("ln", "norm", "router", "A_log", "mix",
+                                 "dt_bias", "D_skip", "w0")):
+    """Quantize every eligible leaf. Returns (qtree, report)."""
+    report = {}
+
+    def per_leaf(path, leaf):
+        if not should_quantize(path, leaf, skip_patterns):
+            return leaf
+        kw = dict(num_values=num_values) if lam is None else dict(lam=lam)
+        qt, info = quantize(np.asarray(leaf), method, weighted=weighted, **kw)
+        report["/".join(_names(path))] = {
+            "n_values": info["n_values"], "l2_loss": info["l2_loss"],
+            "bytes": qt.nbytes(), "dense_bytes": leaf.size * leaf.dtype.itemsize,
+        }
+        return qt
+
+    qtree = jax.tree_util.tree_map_with_path(per_leaf, params)
+    return qtree, report
+
+
+def quantize_tree_batched_fista(params, *, lam: float, n_iters: int = 1000,
+                                weighted: bool = True, max_unique: int = 4096,
+                                skip_patterns=("ln", "norm", "router",
+                                               "A_log", "mix", "dt_bias",
+                                               "D_skip", "w0")):
+    """One Pallas launch per round: all eligible tensors padded to a common
+    unique-value length and solved together (the PTQ throughput path)."""
+    leaves = []
+    jax.tree_util.tree_map_with_path(
+        lambda p, l: leaves.append((p, l)) if should_quantize(p, l, skip_patterns)
+        else None, params)
+    probs = []
+    for path, leaf in leaves:
+        vals, counts, inv = unique_with_counts(np.asarray(leaf))
+        if len(vals) > max_unique:   # bucket ultra-high-cardinality tensors
+            edges = np.quantile(vals, np.linspace(0, 1, max_unique + 1)[1:-1])
+            bucket = np.searchsorted(edges, vals)
+            bvals = np.zeros(max_unique)
+            bcnt = np.zeros(max_unique)
+            np.add.at(bcnt, bucket, counts)
+            np.add.at(bvals, bucket, counts * vals)
+            nz = bcnt > 0
+            vals2 = bvals[nz] / bcnt[nz]
+            counts2 = bcnt[nz]
+            remap = np.cumsum(nz) - 1
+            inv = remap[bucket[inv]]
+            vals, counts = vals2, counts2
+        probs.append((path, leaf, vals, counts, inv))
+
+    M = max(len(v) for _, _, v, _, _ in probs)
+    B = len(probs)
+    W = np.zeros((B, M), np.float32)
+    D = np.zeros((B, M), np.float32)
+    N = np.zeros((B, M), np.float32)
+    for i, (_, _, vals, counts, _) in enumerate(probs):
+        m = len(vals)
+        W[i, :m] = vals
+        D[i, :m] = np.diff(vals, prepend=0.0)
+        N[i, :m] = counts if weighted else 1.0
+    alpha = solve_fista_batch(W, D, N, lam, n_iters=n_iters)
+
+    qtree_flat = {}
+    report = {}
+    for i, (path, leaf, vals, counts, inv) in enumerate(probs):
+        m = len(vals)
+        prob = make_problem(vals, counts, weighted=weighted)
+        sup = support_of(alpha[i, :m])
+        recon, _ = refit_support(prob, sup)
+        qt = from_dense(np.asarray(leaf), np.asarray(recon), inv)
+        key = "/".join(_names(path))
+        qtree_flat[key] = qt
+        report[key] = {"n_values": qt.num_values, "bytes": qt.nbytes()}
+
+    def per_leaf(path, leaf):
+        return qtree_flat.get("/".join(_names(path)), leaf)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params), report
+
+
+def dequantize_tree(qtree):
+    return jax.tree.map(
+        lambda l: l.to_dense() if isinstance(l, QuantizedTensor) else l,
+        qtree, is_leaf=lambda l: isinstance(l, QuantizedTensor))
+
+
+def compression_ratio(report) -> float:
+    dense = sum(r.get("dense_bytes", 0) for r in report.values())
+    comp = sum(r["bytes"] for r in report.values())
+    return dense / max(comp, 1)

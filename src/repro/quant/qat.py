@@ -1,0 +1,27 @@
+"""Quantization-aware training: straight-through fake-quant + periodic
+re-clustering (Deep-Compression-style retraining with the paper's
+quantizers providing the codebooks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant(x, codebook):
+    """Snap x to its nearest codebook value; identity gradient (STE)."""
+    cb = jnp.sort(codebook)
+    mid = 0.5 * (cb[1:] + cb[:-1])
+    idx = jnp.searchsorted(mid, x)
+    snapped = cb[idx]
+    return x + jax.lax.stop_gradient(snapped - x)
+
+
+def qat_params(params, codebooks):
+    """Apply fake-quant everywhere a codebook is provided (path-keyed)."""
+
+    def per_leaf(path, leaf):
+        key = "/".join(getattr(k, "key", str(k)) for k in path)
+        cb = codebooks.get(key)
+        return fake_quant(leaf, cb) if cb is not None else leaf
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)

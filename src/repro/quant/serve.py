@@ -1,0 +1,33 @@
+"""Quantized serving: value-shared weights feed the fused dequant matmul.
+
+A QuantizedTensor leaf replaces `x @ W` with kernels.quant_matmul(x, idx,
+codebook) - weights cross HBM as uint8 codes (+ tiny codebook), which is the
+decode-bandwidth win the paper's compression buys at serving time.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import QuantizedTensor
+from repro.kernels import quant_matmul
+
+
+def qmatmul(x, w):
+    """Drop-in for x @ w accepting dense or QuantizedTensor weights."""
+    if isinstance(w, QuantizedTensor):
+        idx2d = w.indices.reshape(w.shape)
+        orig = x.shape
+        out = quant_matmul(x.reshape(-1, orig[-1]), idx2d, w.codebook,
+                           out_dtype=x.dtype)
+        return out.reshape(*orig[:-1], w.shape[1])
+    return x @ w
+
+
+def estimate_decode_bytes(params_bytes_dense: int, ratio: float,
+                          cache_bytes: int) -> dict:
+    """Decode is memory-bound: step time ~ (weights + cache) / HBM_bw."""
+    from repro.analysis.roofline import HBM_BW
+
+    dense = (params_bytes_dense + cache_bytes) / HBM_BW
+    quant = (params_bytes_dense / ratio + cache_bytes) / HBM_BW
+    return {"t_dense_s": dense, "t_quant_s": quant, "speedup": dense / quant}

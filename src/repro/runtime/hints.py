@@ -1,0 +1,75 @@
+"""Activation-sharding hints decoupled from model code.
+
+Model code calls ``hint(x, "hidden")`` etc.; the distributed step builder
+installs a mapping kind -> PartitionSpec for the active mesh. Outside a
+context (unit tests, single-host smoke runs) hints are no-ops, so the same
+model code serves 1-device tests and 512-chip dry-runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding
+
+_CTX = contextvars.ContextVar("shard_hints", default=None)
+
+
+@contextlib.contextmanager
+def hint_context(mesh, specs: dict):
+    tok = _CTX.set((mesh, specs))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def _axsize(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        out = 1
+        for a in ax:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[ax]
+
+
+# kinds where a non-divisible dim may still shard with GSPMD padding
+PAD_OK_KINDS = frozenset({"wkv"})
+
+
+def model_axis_size() -> int:
+    ctx = _CTX.get()
+    if ctx is None:
+        return 1
+    mesh, _ = ctx
+    return int(mesh.shape.get("model", 1))
+
+
+def hint(x, kind: str):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, specs = ctx
+    spec = specs.get(kind)
+    if spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    if kind not in PAD_OK_KINDS:
+        # drop sharding on axes the runtime shape doesn't divide (e.g. the
+        # sequence-parallel 'model' axis on S=1 decode steps)
+        fitted = []
+        for dim, ax in zip(x.shape,
+                           tuple(spec) + (None,) * (x.ndim - len(spec))):
+            fitted.append(ax if ax is not None
+                          and dim % _axsize(mesh, ax) == 0 else None)
+        spec = P(*fitted)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh():
+    ctx = _CTX.get()
+    return None if ctx is None else ctx[0]

@@ -1,0 +1,214 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs per mesh.
+
+Name-based rules (DESIGN.md §6): TP over 'model' (heads / ffn / experts /
+vocab), FSDP 2-D sharding of weights and optimizer state over
+('data','model') within a pod, batch over ('pod','data'); pods replicate
+params (DP across pods - where quantized gradient all-reduce applies).
+
+Rules degrade gracefully: any dim not divisible by its axis size falls back
+to replication for that dim (GSPMD would pad; we'd rather keep the bytes
+honest and flag it - see roofline notes for glm4 kv=2 / granite 40e / rwkv
+40 heads).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ------------------------------------------------------------------ helpers
+
+
+def _axsize(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def _fit(mesh, spec: P, shape) -> P:
+    """Drop sharding on dims the shape doesn't divide evenly."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        out.append(ax if ax is not None and dim % _axsize(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+# ------------------------------------------------------------- param rules
+
+# matched against the LAST path component; first hit wins. (in_dim-sharded
+# matrices put 'data' on dim 0 = FSDP; out-dim 'model' = TP megatron split)
+_PARAM_RULES_2D = {
+    # (d_in, out*) column-parallel
+    "wq": P("data", "model"), "wk": P("data", "model"), "wv": P("data", "model"),
+    "c_wq": P("data", "model"), "c_wk": P("data", "model"), "c_wv": P("data", "model"),
+    "w_gate": P("data", "model"), "w_up": P("data", "model"),
+    "w_in": P("data", "model"), "w_r": P("data", "model"), "w_k": P("data", "model"),
+    "w_v": P("data", "model"), "w_g": P("data", "model"), "c_k": P("data", "model"),
+    "c_r": P("data", "model"), "w_lora_a": P("data", None),
+    # (in*, d_out) row-parallel
+    "wo": P("model", "data"), "c_wo": P("model", "data"),
+    "w_down": P("model", "data"), "w_out": P("model", "data"),
+    "w_o": P("model", "data"), "c_v": P("model", "data"),
+    "w_lora_b": P(None, "data"),
+    # embeddings
+    "embed": P("model", "data"), "lm_head": P("data", "model"),
+    # mla
+    "wdkv": P("data", None), "wkr": P("data", None), "wukv": P(None, "model"),
+    # mamba
+    "w_bcdt": P("model", None), "w_dt": P(None, "model"),
+    "A_log": P("model", None), "conv_w": P(None, "model"),
+    # router: replicated (tiny, f32)
+    "router": P(None, None),
+}
+_PARAM_RULES_3D = {   # MoE expert-stacked weights: experts over 'model'
+    "w_gate": P("model", "data", None), "w_up": P("model", "data", None),
+    "w_down": P("model", None, "data"),
+}
+_PARAM_RULES_1D = {
+    "dt_bias": P("model"), "D_skip": P("model"),
+}
+
+
+def param_spec(mesh, path, leaf) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    last = names[-1]
+    stacked = "groups" in names           # scanned layer stack: leading G axis
+    core_shape = leaf.shape[1:] if stacked else leaf.shape
+    rank = len(core_shape)
+    spec = None
+    if rank == 3 and last in _PARAM_RULES_3D:
+        spec = _PARAM_RULES_3D[last]
+    elif rank == 2 and last in _PARAM_RULES_2D:
+        spec = _PARAM_RULES_2D[last]
+    elif rank == 1 and last in _PARAM_RULES_1D:
+        spec = _PARAM_RULES_1D[last]
+    if spec is None:
+        spec = P(*([None] * rank))        # norms, biases, mix coeffs: replicate
+    spec = _fit(mesh, spec, core_shape)
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def param_shardings(mesh, params_shape):
+    """Pytree of NamedShardings matching a params (shape-)pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(mesh, path, leaf)),
+        params_shape)
+
+
+# ------------------------------------------------------- activations hints
+
+
+def hint_specs(cfg, mesh) -> dict:
+    bax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bax = bax if len(bax) > 1 else (bax[0] if bax else None)
+    msize = mesh.shape.get("model", 1)
+    kv_ok = (cfg.n_kv_heads % msize) == 0
+    heads_ok = (cfg.n_heads % msize) == 0
+    return {
+        # sequence parallelism: the residual stream (and thus every
+        # remat-boundary save) shards S over 'model' - 16x less activation
+        # memory than replicating; GSPMD inserts the Megatron-SP
+        # all-gather / reduce-scatter pairs around attention/ffn.
+        # hint() drops the constraint when S doesn't divide (decode S=1).
+        "hidden": P(bax, "model", None),
+        # heads divide the model axis -> head-parallel attention (scores
+        # shard on heads); otherwise context-parallel: q's SEQ dim shards
+        # over 'model' and the grouped einsum keeps KV un-repeated. Either
+        # way the (B,*,Sq,Skv) score tiles are 1/model-axis sized -
+        # replication was the 16x memory/traffic failure mode.
+        "qkv": (P(bax, None, "model", None) if heads_ok
+                else P(bax, "model", None, None)),
+        "kv": P(bax, None, "model" if kv_ok else None, None),
+        "ffn": P(bax, None, "model"),
+        "logits": P(bax, None, "model"),
+        "moe_buf": P(bax, "model", None, None),
+        "moe_h": P(bax, "model", None, None),
+        # combine path: token(xK) dim over 'model' - aligns with the SP'd
+        # sequence so the K-sum stays local and the expert->token movement
+        # lowers to permutes instead of a (B,S*K,D) f32 all-reduce
+        "moe_tok": P(bax, "model", None),
+        "ssm_inner": P(bax, None, "model"),
+        # rwkv wkv region: on a single pod, shard BATCH over (data x model)
+        # (exact & collective-cheap: no weight matmuls inside); on multi-pod
+        # the global batch doesn't divide pod*data*model, so pad-shard the
+        # 40 heads over 'model' instead (hints.PAD_OK_KINDS).
+        "wkv": (P(("data", "model"), None, None, None)
+                if "pod" not in mesh.axis_names
+                else P(bax, None, "model", None)),
+    }
+
+
+# ------------------------------------------------------------- cache specs
+
+
+def cache_spec(mesh, cfg, path, leaf, *, batch_size: int) -> P:
+    """KV/state cache sharding; when batch < data-axis size, shard the
+    sequence dim of KV buffers instead (sequence-parallel decode)."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    last = names[-1]
+    stacked = "groups" in names or "cross" in names
+    core_shape = leaf.shape[1:] if stacked else leaf.shape
+    dsize = mesh.shape.get("data", 1)
+    msize = mesh.shape.get("model", 1)
+    batch_ok = batch_size % dsize == 0
+
+    def heads_spec(n_heads):
+        return "model" if n_heads % msize == 0 else None
+
+    if last in ("k", "v", "k_s", "v_s"):   # (B, L, Hkv, Dh|1)
+        hs = heads_spec(cfg.n_kv_heads)
+        if batch_ok:
+            # heads divide the model axis -> head sharding (no softmax
+            # all-reduce); otherwise shard the KV LENGTH over 'model'
+            # (sequence-parallel decode; replicating a 32k cache across 16
+            # model shards would cost 16x HBM - EXPERIMENTS.md §Dry-run)
+            spec = (P("data", None, hs, None) if hs is not None
+                    else P("data", "model", None, None))
+        else:                        # batch too small: SP over everything
+            spec = (P(None, "data", hs, None) if hs is not None
+                    else P(None, ("data", "model"), None, None))
+    elif last in ("ckv", "krope"):   # MLA latent (B, L, r)
+        spec = (P("data", "model", None) if batch_ok
+                else P(None, ("data", "model"), None))
+    elif last == "h":                # mamba state (B, E, N)
+        spec = P("data" if batch_ok else None, "model", None)
+    elif last == "conv":             # (B, dc-1, E)
+        spec = P("data" if batch_ok else None, None, "model")
+    elif last == "s":                # rwkv state (B, H, hd, hd)
+        hs = heads_spec(cfg.d_model // cfg.rwkv_head_dim)
+        spec = P("data" if batch_ok else None, hs, None, None)
+    elif last in ("shift_t", "shift_c"):
+        spec = P("data" if batch_ok else None, None)
+    else:
+        spec = P(*([None] * len(core_shape)))
+    spec = _fit(mesh, spec, core_shape)
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def cache_shardings(mesh, cfg, cache_shape, *, batch_size: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(mesh, cfg, path, leaf, batch_size=batch_size)),
+        cache_shape)
+
+
+def batch_shardings(mesh, batch_shape):
+    """Token/label/embed inputs: batch dim over ('pod','data') when divisible."""
+    bax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bax = bax if len(bax) > 1 else (bax[0] if bax else None)
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        shape = leaf.shape
+        if names and names[-1] == "positions" and len(shape) == 3:
+            return NamedSharding(mesh, _fit(mesh, P(None, bax, None), shape))
+        return NamedSharding(
+            mesh, _fit(mesh, P(bax, *([None] * (len(shape) - 1))), shape))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)

@@ -1,0 +1,231 @@
+"""Step builders: train / prefill / decode, with shardings for pjit.
+
+Everything here is AOT-friendly: ``input_specs`` produces ShapeDtypeStruct
+stand-ins for all inputs of every assigned (arch x shape) cell, and the
+builders return (fn, in_shardings, out_shardings) ready for
+``jax.jit(...).lower().compile()`` - the multi-pod dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.optim import for_config
+from repro.runtime.hints import hint_context
+from repro.runtime.sharding import (batch_shardings, cache_shardings,
+                                    hint_specs, param_shardings)
+
+# ---------------------------------------------------------------- shapes
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+WHISPER_ENC_LEN = 1504   # whisper's 30s window (1500 frames, padded to 32*47)
+
+
+def shape_skip_reason(cfg, shape_name: str) -> str | None:
+    """Cells skipped BY DESIGN (recorded in EXPERIMENTS.md, not silent)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 512k decode needs sub-quadratic "
+                "attention (DESIGN.md §4)")
+    return None
+
+
+def input_specs(cfg, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.compute_dtype)
+    specs: dict[str, Any] = {}
+    if info["kind"] in ("train", "prefill"):
+        if cfg.family == "encdec":
+            specs["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        elif cfg.input_kind == "embeds":
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f)
+            if cfg.mrope_sections is not None:
+                specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if info["kind"] == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode: one new token against a seq-long cache
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+    return specs
+
+
+def cache_specs(cfg, shape_name: str):
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    enc_len = WHISPER_ENC_LEN if cfg.family == "encdec" else None
+    return jax.eval_shape(
+        functools.partial(models.init_cache, cfg, B, S, enc_len=enc_len))
+
+
+# ---------------------------------------------------------------- loss
+
+
+def lm_loss(params, cfg, batch, *, train=True, loss_chunk: int = 512):
+    """Next-token CE + z-loss, computed in sequence chunks.
+
+    Chunking the head projection + softmax (with remat on the chunk body)
+    bounds the f32 logits live-set to (B, chunk, V) instead of (B, S, V) -
+    at vocab 152k x seq 4k this is the difference between ~7.5 GB/device and
+    ~0.1 GB/device (memory notes in EXPERIMENTS.md §Dry-run).
+    """
+    x = models.forward(params, cfg, batch, train=train, return_hidden=True)
+    B, S, D = x.shape
+    labels = batch["labels"]
+
+    def chunk_loss(xc, lc):
+        logits = models.lm_head(params, cfg, xc).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        ce_sum = jnp.sum(lse - picked)
+        z_sum = jnp.sum(lse ** 2)
+        return ce_sum, z_sum
+
+    if S % loss_chunk == 0 and S > loss_chunk:
+        nc = S // loss_chunk
+        xs = (x.reshape(B, nc, loss_chunk, D).swapaxes(0, 1),
+              labels.reshape(B, nc, loss_chunk).swapaxes(0, 1))
+
+        def body(carry, xs_i):
+            ce_sum, z_sum = jax.checkpoint(chunk_loss)(xs_i[0], xs_i[1])
+            return (carry[0] + ce_sum, carry[1] + z_sum), None
+
+        (ce_sum, z_sum), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    else:
+        ce_sum, z_sum = chunk_loss(x, labels)
+    n = B * S
+    loss = ce_sum / n
+    zl = 1e-4 * z_sum / n
+    return loss + zl, {"ce": loss, "zloss": zl}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------- builders
+
+
+def make_train_step(cfg, mesh, *, lr: float = 3e-4, clip_norm: float = 1.0,
+                    grad_compress=None):
+    """Returns (train_step, state_shardings, batch_shardings_fn).
+
+    grad_compress: optional fn(grads)->grads applied before the optimizer
+    (cross-pod quantized all-reduce with error feedback lives there).
+    """
+    opt = for_config(cfg)
+    hs = hint_specs(cfg, mesh)
+
+    def train_step(state, batch):
+        with hint_context(mesh, hs):
+            (loss, metrics), grads = jax.value_and_grad(
+                lm_loss, has_aux=True)(state["params"], cfg, batch)
+            if grad_compress is not None:
+                grads = grad_compress(grads)
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            params, opt_state = opt.update(grads, state["opt"],
+                                           state["params"], lr=lr)
+            metrics = dict(metrics, loss=loss, grad_norm=gn)
+            new_state = {"params": params, "opt": opt_state,
+                         "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg, mesh, shape_name: str):
+    """Prefill allocates + fills the cache inside the step (counted by
+    memory_analysis as outputs). Returns last-position logits + cache."""
+    hs = hint_specs(cfg, mesh)
+    info = SHAPES[shape_name]
+
+    def prefill_step(params, batch):
+        with hint_context(mesh, hs):
+            enc_len = WHISPER_ENC_LEN if cfg.family == "encdec" else None
+            cache = models.init_cache(cfg, info["batch"], info["seq"],
+                                      enc_len=enc_len)
+            logits, cache = models.prefill(params, cfg, batch, cache)
+            return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh, shape_name: str):
+    """One token in, one token out, cache updated in place (donated)."""
+    hs = hint_specs(cfg, mesh)
+    info = SHAPES[shape_name]
+    cache_index = info["seq"] - 1
+
+    def decode_step(params, tokens, cache):
+        with hint_context(mesh, hs):
+            logits, new_cache = models.decode_step(params, cfg, tokens, cache,
+                                                   cache_index)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok[:, None], new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------- shardings
+
+
+def _names(path):
+    return tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+
+
+def opt_state_shardings(mesh, params_sharding_tree, opt_state_shape):
+    """Optimizer state mirrors param shardings; adafactor vr/vc reduce the
+    spec along the factored dim; scalars replicate."""
+    flat = {}
+    jax.tree_util.tree_map_with_path(
+        lambda p, s: flat.__setitem__(_names(p), s), params_sharding_tree)
+
+    def per_leaf(path, leaf):
+        names = _names(path)
+        if names[-1] == "count" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        sub = names[1:]  # drop leading "m"/"v"
+        if sub in flat:
+            return flat[sub]
+        if names[-1] in ("vr", "vc", "v") and sub[:-1] in flat:
+            spec = flat[sub[:-1]].spec
+            if names[-1] == "vr":      # reduced over last dim
+                return NamedSharding(mesh, P(*spec[:-1]))
+            if names[-1] == "vc":      # reduced over second-to-last dim
+                return NamedSharding(mesh, P(*(tuple(spec[:-2]) + tuple(spec[-1:]))))
+            return flat[sub[:-1]]
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, opt_state_shape)
+
+
+def train_state_specs(cfg, mesh, opt):
+    """(state_shape, state_shardings) via eval_shape - no allocation."""
+    params_shape = jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = param_shardings(mesh, params_shape)
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    o_shard = opt_state_shardings(mesh, p_shard, opt_shape)
+    state_shape = {"params": params_shape, "opt": opt_shape,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_shard = {"params": p_shard, "opt": o_shard,
+                   "step": NamedSharding(mesh, P())}
+    return state_shape, state_shard

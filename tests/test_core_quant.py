@@ -1,0 +1,220 @@
+"""Unit + property tests for the paper's core algorithms (repro.core)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ALL_METHODS, COUNT_METHODS, LAM_METHODS, LSQProblem, cd_solve, kmeans_1d,
+    kmeans_ls_quantize, make_problem, max_stable_lam2, objective,
+    optimal_kmeans_1d, quantize, reconstruct, refit_support, support_of,
+    tv_solve_problem, unique_with_counts,
+)
+from repro.core.cd import cd_solve_dense_reference
+from repro.core.refit import refit_support_dense_reference
+from repro.core.kmeans_ls import kmeans_ls_dense_reference
+
+
+def _data(seed=0, n=400, round_to=2):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, 1, n).round(round_to)
+
+
+# ---------------------------------------------------------------- CD solver
+
+@pytest.mark.parametrize("lam,lam2", [(0.01, 0.0), (0.1, 0.0), (0.05, "auto")])
+def test_cd_matches_dense_reference(lam, lam2):
+    """The O(m)-per-sweep CD must produce the same iterates as textbook CD."""
+    vals, counts, _ = unique_with_counts(_data(1))
+    prob = make_problem(vals, counts)
+    l2 = 0.25 * max_stable_lam2(prob) if lam2 == "auto" else lam2
+    a_fast, _ = cd_solve(prob, lam, l2, max_sweeps=30)
+    a_ref, _ = cd_solve_dense_reference(prob, lam, l2, max_sweeps=30)
+    np.testing.assert_allclose(np.asarray(a_fast), a_ref, atol=5e-4)
+
+
+def test_cd_monotone_objective():
+    vals, counts, _ = unique_with_counts(_data(2))
+    prob = make_problem(vals, counts)
+    prev = float("inf")
+    alpha = jnp.ones((prob.m,), jnp.float32)
+    from repro.core.cd import cd_sweep
+    lamv = jnp.full((prob.m,), jnp.float32(0.05))
+    for _ in range(10):
+        alpha, _ = cd_sweep(alpha, prob, lamv, 0.0)
+        f = float(objective(prob, alpha, 0.05))
+        assert f <= prev + 1e-5, "CD objective must be non-increasing"
+        prev = f
+
+
+def test_cd_init_ones_zero_ls_loss():
+    """Paper §3.2.1: alpha=1 reconstructs w_hat exactly."""
+    vals, counts, _ = unique_with_counts(_data(3))
+    prob = make_problem(vals, counts)
+    r = np.asarray(prob.w_hat) - np.asarray(reconstruct(jnp.ones(prob.m), prob.d))
+    assert np.abs(r).max() < 1e-5
+
+
+def test_l1l2_sparser_at_equal_lam1():
+    """Paper §3.3/fig.4: negative-l2 yields fewer distinct values at equal lam1."""
+    w = _data(4)
+    _, i1 = quantize(w, "l1", lam=0.05)
+    _, i2 = quantize(w, "l1l2", lam=0.05)
+    assert i2["n_values"] <= i1["n_values"]
+
+
+def test_tv_exact_beats_or_matches_cd():
+    """TV solves eq.6 (penalize_first=False) globally: objective <= CD's."""
+    vals, counts, _ = unique_with_counts(_data(5))
+    prob = make_problem(vals, counts)
+    for lam in (0.01, 0.05, 0.2):
+        a_cd, _ = cd_solve(prob, lam, penalize_first=False, max_sweeps=300, tol=1e-9)
+        u_tv = tv_solve_problem(prob, lam)
+        d = np.asarray(prob.d)
+        a_tv = np.diff(u_tv, prepend=0.0) / np.where(d == 0, 1.0, d)
+        f_cd = float(objective(prob, a_cd, lam, penalize_first=False))
+        f_tv = float(objective(prob, jnp.asarray(a_tv, jnp.float32), lam,
+                               penalize_first=False))
+        assert f_tv <= f_cd + 1e-3
+        # and they agree when CD is converged tightly (loose: f32 CD has a slow
+        # tail near merge boundaries where the objective is nearly flat)
+        np.testing.assert_allclose(np.asarray(reconstruct(a_cd, prob.d)), u_tv,
+                                   atol=5e-2)
+
+
+# ---------------------------------------------------------------- refit
+
+def test_refit_matches_lstsq_oracle():
+    vals, counts, _ = unique_with_counts(_data(6))
+    for weighted in (False, True):
+        prob = make_problem(vals, counts, weighted=weighted)
+        alpha, _ = cd_solve(prob, 0.05)
+        sup = support_of(alpha)
+        w_star, _ = refit_support(prob, sup)
+        w_ref = refit_support_dense_reference(prob, np.asarray(sup))
+        np.testing.assert_allclose(np.asarray(w_star), w_ref, atol=1e-4)
+
+
+def test_refit_reduces_loss():
+    """Paper claim 2: LS refit strictly improves the raw l1 result."""
+    w = _data(7)
+    _, raw = quantize(w, "l1", lam=0.08)
+    _, ls = quantize(w, "l1_ls", lam=0.08)
+    assert ls["l2_loss"] <= raw["l2_loss"]
+
+
+# ---------------------------------------------------------------- alg 3 / kmeans
+
+def test_kmeans_ls_matches_eq20_oracle():
+    vals, counts, _ = unique_with_counts(_data(8))
+    prob = make_problem(vals, counts)
+    w_star, _, idx, _ = kmeans_ls_quantize(prob, 7)
+    w_ref = kmeans_ls_dense_reference(prob, np.asarray(idx))
+    np.testing.assert_allclose(np.asarray(w_star), w_ref, atol=1e-4)
+
+
+def test_kmeans_interval_invariant():
+    """1-D clusters are intervals: assignment must be sorted."""
+    vals, counts, _ = unique_with_counts(_data(9))
+    _, idx, _, _ = kmeans_1d(jnp.asarray(vals, jnp.float32),
+                             jnp.asarray(counts, jnp.float32), 10)
+    assert bool(jnp.all(jnp.diff(idx) >= 0))
+
+
+def test_dp_is_loss_lower_bound():
+    vals, counts, _ = unique_with_counts(_data(10))
+    ones = np.ones_like(counts)
+    _, _, _, sse = optimal_kmeans_1d(vals, ones, 9)
+    prob = make_problem(vals, counts)
+    for meth in ("kmeans", "kmeans_ls", "mog", "dtc"):
+        _, info = quantize(_data(10), meth, num_values=9)
+        assert sse <= info["l2_loss_unique"] + 1e-6, meth
+
+
+# ---------------------------------------------------------------- API invariants
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_api_end_to_end(method):
+    w = _data(11, n=300)
+    kw = dict(lam=0.05) if method in LAM_METHODS else dict(num_values=10)
+    qt, info = quantize(w, method, **kw)
+    dense = np.asarray(qt.to_dense())
+    assert dense.shape == w.shape
+    assert np.isfinite(dense).all()
+    # value sharing: distinct values == codebook size
+    assert len(np.unique(dense)) == info["n_values"]
+    if method in COUNT_METHODS:
+        assert info["n_values"] <= 10
+
+
+def test_count_methods_respect_l():
+    w = _data(12)
+    for method in COUNT_METHODS:
+        for l in (2, 5, 33):
+            _, info = quantize(w, method, num_values=l)
+            assert info["n_values"] <= l, (method, l)
+
+
+def test_hard_sigmoid_clip():
+    """Eq. 21: outputs must live in [a, b] after clipping."""
+    w = np.linspace(-0.5, 1.5, 200)
+    qt, _ = quantize(w, "kmeans", num_values=7, clip=(0.0, 1.0))
+    d = np.asarray(qt.to_dense())
+    assert d.min() >= 0.0 and d.max() <= 1.0
+
+
+def test_weighted_improves_full_vector_loss():
+    rng = np.random.default_rng(13)
+    w = np.concatenate([np.full(900, 1.0), rng.normal(5, 1, 100)]).round(1)
+    _, unw = quantize(w, "kmeans_ls", num_values=4, weighted=False)
+    _, wt = quantize(w, "kmeans_ls", num_values=4, weighted=True)
+    assert wt["l2_loss"] <= unw["l2_loss"] + 1e-9
+
+
+# ---------------------------------------------------------------- properties
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32), min_size=3,
+                max_size=120),
+       st.integers(2, 12))
+def test_property_quantize_invariants(data, l):
+    """For any input and target count: (1) <= l distinct values, (2) codebook
+    within data range for count methods, (3) reconstruction shape preserved,
+    (4) loss is zero when l >= number of unique values."""
+    w = np.asarray(data, np.float32)
+    qt, info = quantize(w, "kmeans_ls", num_values=l)
+    assert info["n_values"] <= l
+    cb = np.asarray(qt.codebook)
+    assert cb.min() >= w.min() - 1e-4 and cb.max() <= w.max() + 1e-4
+    if len(np.unique(w)) <= l:
+        assert info["l2_loss"] < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_tv_optimality_random(seed):
+    """TV solution's objective never exceeds CD's on random problems."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(3, 60))
+    vals = np.unique(rng.normal(0, 1, m))
+    prob = make_problem(vals, np.ones_like(vals))
+    lam = float(rng.uniform(0.001, 0.5))
+    u_tv = tv_solve_problem(prob, lam)
+    a_cd, _ = cd_solve(prob, lam, penalize_first=False, max_sweeps=500, tol=1e-10)
+    d = np.asarray(prob.d)
+    a_tv = np.diff(u_tv, prepend=0.0) / np.where(d == 0, 1.0, d)
+    f_tv = float(objective(prob, jnp.asarray(a_tv, jnp.float32), lam, penalize_first=False))
+    f_cd = float(objective(prob, a_cd, lam, penalize_first=False))
+    assert f_tv <= f_cd + 1e-4 * max(1.0, abs(f_cd))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_idempotence(seed):
+    """Quantizing an already-quantized vector with the same l is lossless."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, 200)
+    qt, _ = quantize(w, "kmeans_ls", num_values=6)
+    w2 = np.asarray(qt.to_dense())
+    qt2, info2 = quantize(w2, "kmeans_ls", num_values=6)
+    assert info2["l2_loss"] < 1e-8

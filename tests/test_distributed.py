@@ -1,0 +1,119 @@
+"""Distribution-layer tests on 8 host devices (2 data x 4 model mesh):
+real execution of sharded train/prefill/decode for a dense and a MoE arch,
+sharding-rule sanity, and loss-goes-down."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_reduced_config
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.sharding import (batch_shardings, cache_shardings,
+                                    param_shardings)
+from repro.train.step import (cache_specs, input_specs, make_decode_step,
+                              make_train_step, train_state_specs)
+
+pytestmark = pytest.mark.skipif(len(jax.devices()) < 8,
+                                reason="needs 8 host devices")
+
+
+def _mesh():
+    return make_host_mesh(2, 4)
+
+
+def _small_cfg(arch):
+    cfg = get_reduced_config(arch)
+    # make dims divide the 4-way model axis
+    return dataclasses.replace(cfg, d_model=64, n_heads=4, n_kv_heads=4,
+                               head_dim=16, d_ff=128, vocab=512)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "granite_moe_3b_a800m"])
+def test_sharded_train_step_runs_and_learns(arch):
+    mesh = _mesh()
+    cfg = _small_cfg(arch)
+    step_fn, opt = make_train_step(cfg, mesh, lr=1e-2)
+    state_shape, state_shard = train_state_specs(cfg, mesh, opt)
+
+    with jax.set_mesh(mesh):
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        params = jax.device_put(params, state_shard["params"])
+        state = {"params": params, "opt": jax.device_put(opt.init(params),
+                                                         state_shard["opt"]),
+                 "step": jnp.zeros((), jnp.int32)}
+
+        B, S = 8, 32
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        pipe = SyntheticLM(cfg, B, S, seed=0)
+        bshard = batch_shardings(mesh, specs)
+        jit_step = jax.jit(step_fn, in_shardings=(state_shard, bshard),
+                           out_shardings=(state_shard, None),
+                           donate_argnums=(0,))
+        losses = []
+        for i in range(8):
+            batch = pipe.next_batch(0, mesh, specs)  # same batch: must overfit
+            state, metrics = jit_step(state, batch)
+            losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], losses  # learning on a repeated batch
+
+
+def test_param_shardings_cover_and_divide():
+    mesh = _mesh()
+    cfg = _small_cfg("jamba_1_5_large_398b")
+    pshape = jax.eval_shape(lambda: models.init_params(cfg, jax.random.PRNGKey(0)))
+    shards = param_shardings(mesh, pshape)
+
+    def check(path, leaf, sh):
+        for dim, ax in zip(leaf.shape,
+                           tuple(sh.spec) + (None,) * (len(leaf.shape) - len(sh.spec))):
+            if ax is not None:
+                size = (np.prod([mesh.shape[a] for a in ax])
+                        if isinstance(ax, tuple) else mesh.shape[ax])
+                assert dim % size == 0, (path, leaf.shape, sh.spec)
+
+    jax.tree_util.tree_map_with_path(check, pshape, shards)
+    # at least half the parameter bytes are actually sharded
+    tot = shard = 0
+    for leaf, sh in zip(jax.tree.leaves(pshape), jax.tree.leaves(
+            shards, is_leaf=lambda x: hasattr(x, "spec"))):
+        tot += leaf.size
+        if any(ax is not None for ax in sh.spec):
+            shard += leaf.size
+    assert shard > 0.5 * tot
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "rwkv6_3b"])
+def test_sharded_decode_executes(arch):
+    mesh = _mesh()
+    cfg = _small_cfg(arch)
+    with jax.set_mesh(mesh):
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        pshard = param_shardings(
+            mesh, jax.eval_shape(lambda: models.init_params(cfg, jax.random.PRNGKey(0))))
+        params = jax.device_put(params, pshard)
+        B, L = 4, 32
+        cache = models.init_cache(cfg, B, L)
+        cshape = jax.eval_shape(lambda: models.init_cache(cfg, B, L))
+        cshard = cache_shardings(mesh, cfg, cshape, batch_size=B)
+        cache = jax.device_put(cache, cshard)
+        tokens = jnp.zeros((B, 1), jnp.int32)
+
+        def step(p, t, c):
+            logits, nc = models.decode_step(p, cfg, t, c, L - 1)
+            return jnp.argmax(logits[:, -1], -1), nc
+
+        out, new_cache = jax.jit(step, in_shardings=(pshard, None, cshard),
+                                 out_shardings=(None, cshard))(params, tokens,
+                                                               cache)
+        assert out.shape == (B,)
+        assert bool(jnp.isfinite(out.astype(jnp.float32)).all())

@@ -1,0 +1,27 @@
+"""Degenerate-input edge cases: constant vectors, singletons, zeros, and
+already-k-valued inputs must quantize losslessly and finitely."""
+import numpy as np
+import pytest
+
+from repro.core import LAM_METHODS, quantize
+
+EDGE_VECS = [
+    (np.full(50, 3.14), "constant"),
+    (np.array([1.0, 2.0]), "two-values"),
+    (np.array([-5.0]), "singleton"),
+    (np.zeros(10), "zeros"),
+]
+METHODS = ["l1_ls", "kmeans_ls", "tv", "dp", "iter_l1", "l0", "kmeans"]
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("w,name", EDGE_VECS)
+def test_degenerate_inputs(method, w, name):
+    kw = dict(lam=0.01) if method in LAM_METHODS else dict(num_values=2)
+    qt, info = quantize(w, method, **kw)
+    dense = np.asarray(qt.to_dense())
+    assert np.isfinite(dense).all(), (method, name)
+    assert dense.shape == w.shape
+    # <= 2 unique input values means the quantization must be exact
+    if len(np.unique(w)) <= 2 and method not in LAM_METHODS:
+        assert info["l2_loss"] < 1e-10, (method, name)

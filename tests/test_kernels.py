@@ -1,0 +1,106 @@
+"""Pallas kernel tests: shape/dtype sweeps against pure-jnp oracles
+(interpret mode on CPU), plus solver-quality checks vs coordinate descent."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cd_solve, make_problem, objective, unique_with_counts
+from repro.kernels import (
+    fista_quant, quant_matmul, ref_fista, ref_quant_matmul, solve_fista_batch,
+    power_iter_lipschitz,
+)
+
+
+# ------------------------------------------------------------ quant_matmul
+
+@pytest.mark.parametrize("M,K,N", [(8, 32, 16), (16, 128, 128), (128, 256, 64),
+                                   (5, 33, 17)])  # last one exercises padding
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_matches_ref(M, K, N, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    idx = jnp.asarray(rng.integers(0, 16, (K, N)), jnp.uint8)
+    cb = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    out = quant_matmul(x, idx, cb, bm=8, bn=16, bk=32, interpret=True)
+    ref = ref_quant_matmul(x, idx, cb)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2  # blocked-k accumulation order
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_quant_matmul_int32_codes_large_codebook():
+    rng = np.random.default_rng(1)
+    C = 1000
+    x = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, C, (64, 32)), jnp.int32)
+    cb = jnp.asarray(rng.normal(size=(C,)), jnp.float32)
+    out = quant_matmul(x, idx, cb, bm=8, bn=16, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_quant_matmul(x, idx, cb)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------ fista_quant
+
+@pytest.mark.parametrize("B,M,T", [(1, 128, 128), (3, 256, 128), (2, 100, 128),
+                                   (4, 64, 64)])
+def test_fista_kernel_matches_ref(B, M, T):
+    """Kernel iterates == pure-jnp FISTA iterates (same math, blocked scans)."""
+    rng = np.random.default_rng(2)
+    w = np.sort(rng.normal(size=(B, M)), axis=1).astype(np.float32)
+    d = np.diff(w, axis=1, prepend=0.0).astype(np.float32)
+    n = np.ones((B, M), np.float32)
+    lam = np.full((B, M), 0.05, np.float32)
+    eta = (1.0 / (power_iter_lipschitz(d, n) * 1.01)).astype(np.float32)
+
+    padM = (-M) % T
+    pad = lambda a: np.pad(a, ((0, 0), (0, padM)))
+    nb = (M + padM) // T
+    a_kern = fista_quant(
+        jnp.asarray(pad(w).reshape(B, nb, T)), jnp.asarray(pad(d).reshape(B, nb, T)),
+        jnp.asarray(pad(n).reshape(B, nb, T)), jnp.asarray(pad(lam).reshape(B, nb, T)),
+        jnp.asarray(eta.reshape(B, 1, 1)), n_iters=50, block_t=T, interpret=True,
+    )
+    a_kern = np.asarray(a_kern).reshape(B, -1)[:, :M]
+    a_ref = np.asarray(ref_fista(jnp.asarray(w), jnp.asarray(d), jnp.asarray(n),
+                                 jnp.asarray(lam), jnp.asarray(eta), n_iters=50))
+    np.testing.assert_allclose(a_kern, a_ref, atol=2e-4, rtol=1e-3)
+
+
+def test_fista_converges_to_cd_objective():
+    """Solver quality: FISTA reaches the CD (global) objective within 1%."""
+    rng = np.random.default_rng(3)
+    w = rng.normal(0, 1, 500).round(2)
+    vals, counts, _ = unique_with_counts(w)
+    prob = make_problem(vals, counts)
+    m = prob.m
+    d = np.asarray(prob.d)[None, :]
+    wv = np.asarray(prob.w_hat)[None, :]
+    n = np.ones((1, m), np.float32)
+    lam = 0.05
+    alpha = solve_fista_batch(wv, d, n, lam, n_iters=2000, interpret=True)
+    a_cd, _ = cd_solve(prob, lam, max_sweeps=500, tol=1e-9)
+    f_fista = float(objective(prob, jnp.asarray(alpha[0]), lam))
+    f_cd = float(objective(prob, a_cd, lam))
+    assert f_fista <= f_cd * 1.01 + 1e-4
+
+
+def test_fista_batch_padding_mask():
+    """Zero-weight padded tail must not leak into real coordinates."""
+    rng = np.random.default_rng(4)
+    m1, m2 = 60, 90
+    rows_w = np.zeros((2, m2), np.float32)
+    rows_d = np.zeros((2, m2), np.float32)
+    rows_n = np.zeros((2, m2), np.float32)
+    for i, m in enumerate((m1, m2)):
+        v = np.sort(rng.normal(size=m)).astype(np.float32)
+        rows_w[i, :m] = v
+        rows_d[i, :m] = np.diff(v, prepend=0.0)
+        rows_n[i, :m] = 1.0
+    a2 = solve_fista_batch(rows_w, rows_d, rows_n, 0.05, n_iters=200, interpret=True)
+    # row 0 solved alone must equal row 0 solved in the batch
+    a1 = solve_fista_batch(rows_w[:1, :m1], rows_d[:1, :m1], rows_n[:1, :m1],
+                           0.05, n_iters=200, interpret=True)
+    np.testing.assert_allclose(a2[0, :m1], a1[0], atol=1e-4)
+    assert np.all(a2[:, m2:] == 0) if a2.shape[1] > m2 else True
+    assert np.all(a2[0, m1:] == 0)

@@ -1,0 +1,66 @@
+"""Framework-level quantization: PTQ over model params, batched-FISTA PTQ,
+QAT straight-through, quantized serving matmul equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_reduced_config
+from repro.core import QuantizedTensor
+from repro.quant.ptq import (compression_ratio, dequantize_tree,
+                             quantize_tree, quantize_tree_batched_fista)
+from repro.quant.qat import fake_quant
+from repro.quant.serve import qmatmul
+
+
+def _params():
+    cfg = get_reduced_config("qwen3_0_6b")
+    return cfg, models.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_ptq_tree_roundtrip_and_compression():
+    cfg, params = _params()
+    qtree, report = quantize_tree(params, method="kmeans_ls", num_values=16)
+    assert report, "nothing quantized"
+    assert all(r["n_values"] <= 16 for r in report.values())
+    ratio = compression_ratio(report)
+    assert ratio > 3.0, ratio           # 16 values = 4 bits vs f32
+    dense = dequantize_tree(qtree)
+    # quantized model still runs and is close-ish
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+             "labels": jnp.zeros((1, 8), jnp.int32)}
+    out_q = models.forward(dense, cfg, batch, train=False)
+    assert bool(jnp.isfinite(out_q).all())
+
+
+def test_ptq_batched_fista_quantizes_everything():
+    cfg, params = _params()
+    qtree, report = quantize_tree_batched_fista(params, lam=2e-4, n_iters=150)
+    n_q = sum(isinstance(l, QuantizedTensor)
+              for l in jax.tree.leaves(
+                  qtree, is_leaf=lambda l: isinstance(l, QuantizedTensor)))
+    assert n_q == len(report) and n_q > 0
+    for key, r in report.items():
+        assert r["n_values"] >= 1
+
+
+def test_qat_fake_quant_ste():
+    cb = jnp.asarray([-1.0, 0.0, 1.0])
+    x = jnp.asarray([-0.9, -0.2, 0.4, 2.0])
+    y = fake_quant(x, cb)
+    np.testing.assert_allclose(np.asarray(y), [-1.0, 0.0, 0.0, 1.0], atol=0.26)
+    g = jax.grad(lambda t: jnp.sum(fake_quant(t, cb) ** 2))(x)
+    assert bool(jnp.isfinite(g).all()) and float(jnp.abs(g).sum()) > 0
+
+
+def test_quantized_serving_matmul_matches_dense():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    from repro.core import quantize
+    qt, _ = quantize(w, "kmeans_ls", num_values=16)
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    out_q = qmatmul(x, qt)
+    out_d = x @ jnp.asarray(np.asarray(qt.to_dense()))
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_d),
+                               atol=1e-4, rtol=1e-4)
