@@ -1,0 +1,74 @@
+"""Continuous-batching serving benchmark: tokens/s, TTFT, and p50/p99 TPOT
+under Poisson arrivals at several request rates, fp vs codebook-quantized
+KV pages. Emits CSV rows plus the standard BENCH_serving.json artifact.
+
+    PYTHONPATH=src python -m benchmarks.run serving
+    PYTHONPATH=src python -m benchmarks.bench_serving --rates 2,8 --gen 12
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import bench_json, emit
+
+ARCH = "qwen3_0_6b"
+
+
+def _one(params, cfg, *, rate, n, prompt_len, gen, kv_quant, kv_num_values,
+         max_slots, block_size, seed):
+    from repro.serving import ContinuousBatchingEngine
+    from repro.serving.scheduler import poisson_trace
+
+    eng = ContinuousBatchingEngine(
+        params, cfg, max_slots=max_slots, block_size=block_size,
+        max_seq_len=-(-(prompt_len + gen) // block_size) * block_size,
+        kv_quant=kv_quant, kv_num_values=kv_num_values)
+    trace = poisson_trace(n, rate, vocab=cfg.vocab, prompt_len=prompt_len,
+                          max_new_tokens=gen, seed=seed)
+    s = eng.run(trace)
+    s.update(rate=rate, kv="fp" if kv_quant is None else
+             f"{kv_quant}@{kv_num_values}", num_requests=n,
+             prompt_len=prompt_len, gen=gen)
+    return s
+
+
+def run(rates=(2.0, 8.0), n=6, prompt_len=32, gen=12, kv_num_values=16,
+        max_slots=4, block_size=16, seed=0) -> None:
+    import jax
+
+    from repro import models
+    from repro.configs import get_reduced_config
+
+    cfg = get_reduced_config(ARCH)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    results = []
+    for kv_quant in (None, "kmeans_ls"):
+        for rate in rates:
+            s = _one(params, cfg, rate=rate, n=n, prompt_len=prompt_len,
+                     gen=gen, kv_quant=kv_quant, kv_num_values=kv_num_values,
+                     max_slots=max_slots, block_size=block_size, seed=seed)
+            results.append(s)
+            emit(f"serving/{s['kv']}/rate{rate:g}", s["tpot_p50_s"] * 1e6,
+                 f"tok_s={s['throughput_tok_s']:.1f};"
+                 f"ttft_p50_ms={s['ttft_p50_s']*1e3:.0f};"
+                 f"tpot_p99_ms={s['tpot_p99_s']*1e3:.1f};"
+                 f"compress={s.get('cache_compression_final', 1.0):.2f}x")
+    bench_json("serving", results,
+               meta={"arch": ARCH, "reduced": True, "max_slots": max_slots,
+                     "block_size": block_size, "kv_num_values": kv_num_values})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default="2,8")
+    ap.add_argument("--num-requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--kv-num-values", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    args = ap.parse_args()
+    run(rates=tuple(float(r) for r in args.rates.split(",")),
+        n=args.num_requests, prompt_len=args.prompt_len, gen=args.gen,
+        kv_num_values=args.kv_num_values, max_slots=args.max_slots,
+        block_size=args.block_size)

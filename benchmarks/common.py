@@ -1,7 +1,10 @@
 """Shared benchmark utilities: data generators matching the paper's §4 setup,
-timing, and CSV output (`name,us_per_call,derived`)."""
+timing, CSV output (`name,us_per_call,derived`), and the standard
+BENCH_<name>.json result files."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -11,6 +14,18 @@ import numpy as np
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def bench_json(name: str, results, *, meta: dict | None = None,
+               out_dir: str = "."):
+    """Write the standard BENCH_<name>.json artifact:
+    {"bench": name, "meta": {...}, "results": [...]}."""
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "meta": meta or {}, "results": results},
+                  f, indent=1, sort_keys=True)
+    print(f"[bench] wrote {path}")
+    return path
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):

@@ -7,7 +7,7 @@ import sys
 import time
 
 SUITES = ["nn_weights", "l1l2", "alpha_dist", "image", "synthetic",
-          "scaling", "kernels", "roofline"]
+          "scaling", "kernels", "roofline", "serving"]
 
 
 def main() -> None:

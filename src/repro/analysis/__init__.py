@@ -1,0 +1,1 @@
+"""Static analysis of lowered HLO: bytes/FLOPs accounting and roofline."""

@@ -1,0 +1,1 @@
+"""Checkpointing: save/restore of sharded pytrees with reshard-on-load."""

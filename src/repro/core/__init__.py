@@ -15,7 +15,7 @@ from .mog import mog_quantize_unique
 from .problem import LSQProblem, make_problem, objective, reconstruct, unique_with_counts
 from .refit import refit_support, support_of
 from .tv_exact import tv1d_weighted, tv_solve_problem
-from .types import QuantizedTensor, from_dense, hard_sigmoid
+from .types import QuantizedTensor, from_dense, hard_sigmoid, stack_quantized
 
 __all__ = [
     "ALL_METHODS", "COUNT_METHODS", "LAM_METHODS", "quantize",
@@ -25,5 +25,5 @@ __all__ = [
     "l0_quantize", "l0_solve", "mog_quantize_unique",
     "LSQProblem", "make_problem", "objective", "reconstruct", "unique_with_counts",
     "refit_support", "support_of", "tv1d_weighted", "tv_solve_problem",
-    "QuantizedTensor", "from_dense", "hard_sigmoid",
+    "QuantizedTensor", "from_dense", "hard_sigmoid", "stack_quantized",
 ]

@@ -30,14 +30,27 @@ class QuantizedTensor:
     shape: tuple
     dtype: Any
 
+    @property
+    def stacked(self) -> bool:
+        """Stacked form: leading group axis on codebook (G, L) and indices
+        (G, prod(shape)); ``shape`` describes one slice. Built by
+        ``stack_quantized`` so scanned layer groups can carry per-group
+        codebooks through ``lax.scan`` (which slices both children)."""
+        return self.indices.ndim == 2
+
     def to_dense(self) -> jax.Array:
-        return jnp.take(self.codebook, self.indices.astype(jnp.int32), axis=0).reshape(
+        idx = self.indices.astype(jnp.int32)
+        if self.stacked:
+            dense = jnp.take_along_axis(self.codebook, idx, axis=1)
+            return dense.reshape((idx.shape[0],) + tuple(self.shape)
+                                 ).astype(self.dtype)
+        return jnp.take(self.codebook, idx, axis=0).reshape(
             self.shape
         ).astype(self.dtype)
 
     @property
     def num_values(self) -> int:
-        return int(self.codebook.shape[0])
+        return int(self.codebook.shape[-1])
 
     def bits_per_value(self) -> int:
         l = max(self.num_values, 2)
@@ -45,8 +58,10 @@ class QuantizedTensor:
 
     def nbytes(self) -> int:
         """Compressed storage footprint (codebook fp32 + packed indices)."""
-        n = int(np.prod(self.shape))
-        return self.num_values * 4 + (n * self.bits_per_value() + 7) // 8
+        n = int(np.prod(self.shape)) * (
+            self.indices.shape[0] if self.stacked else 1)
+        cb = int(np.prod(self.codebook.shape))
+        return cb * 4 + (n * self.bits_per_value() + 7) // 8
 
     def tree_flatten(self):
         return (self.codebook, self.indices), (self.shape, self.dtype)
@@ -76,6 +91,30 @@ def from_dense(w: jax.Array, reconstructed_unique: np.ndarray, inverse_idx: np.n
         indices=jnp.asarray(indices.astype(idx_dtype)),
         shape=tuple(w.shape),
         dtype=dtype,
+    )
+
+
+def stack_quantized(qts: list[QuantizedTensor]) -> QuantizedTensor:
+    """Stack per-slice QuantizedTensors (same shape) into the stacked form:
+    codebook (G, L) / indices (G, n). Codebooks shorter than the widest are
+    right-padded with their last value (codes never reference the padding),
+    so every slice shares one static width for lax.scan."""
+    assert len({qt.shape for qt in qts}) == 1, "slices must share a shape"
+    L = max(qt.num_values for qt in qts)
+    cbs = []
+    for qt in qts:
+        cb = np.asarray(qt.codebook, np.float32)
+        if cb.shape[0] < L:
+            cb = np.concatenate([cb, np.full(L - cb.shape[0], cb[-1],
+                                             np.float32)])
+        cbs.append(cb)
+    idx_dtype = np.uint8 if L <= 256 else np.int32
+    idx = np.stack([np.asarray(qt.indices, idx_dtype) for qt in qts])
+    return QuantizedTensor(
+        codebook=jnp.asarray(np.stack(cbs)),
+        indices=jnp.asarray(idx),
+        shape=qts[0].shape,
+        dtype=qts[0].dtype,
     )
 
 

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (sharded host loading)."""
+from .pipeline import SyntheticLM
+
+__all__ = ["SyntheticLM"]

@@ -29,6 +29,9 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _blocked_cumsum(x, triu_t, triu_nb_strict):
     """(nb, T) row-major cumulative sum via two triangular matmuls."""
@@ -99,7 +102,7 @@ def fista_quant(
                   pl.BlockSpec((nb, nb), lambda b: (0, 0))],
         out_specs=row,
         out_shape=jax.ShapeDtypeStruct((B, nb, T), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)
         ),
         interpret=interpret,

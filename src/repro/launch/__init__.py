@@ -1,0 +1,1 @@
+"""Entry points: train, serve (static + continuous batching), dryrun."""

@@ -9,6 +9,18 @@ import jax
 import numpy as np
 
 
+def compat_mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: pass axis_types=Auto only where
+    jax.sharding.AxisType exists (older releases are implicitly auto)."""
+    kw = {}
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        kw["axis_types"] = (at.Auto,) * len(axes)
+    if devices is not None:
+        kw["devices"] = devices
+    return jax.make_mesh(shape, axes, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod (v5e); multi_pod stacks 2 pods -> 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -20,14 +32,12 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, have {len(devices)}; the dry-run "
             "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before any jax import")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto, devices=devices[:n])
+    return compat_mesh(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host devices for tests (e.g. 2x4 with device_count=8)."""
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+    return compat_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -1,27 +1,28 @@
-"""Serving launcher: batched prefill + decode with optional PTQ weights.
+"""Serving launcher.
+
+Static engine (one-shot fixed batch, the original path):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
         --quantize kmeans_ls --num-values 16 --gen 16
+
+Continuous-batching engine under Poisson arrivals, optionally with
+codebook-quantized KV pages (the paper's solvers applied to the cache):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
+        --engine continuous --request-rate 4 \
+        --kv-quant kmeans_ls --kv-num-values 16
+
+With --kv-quant the run also replays a deterministic subset against the fp
+paged cache and reports the logit deviation. Documented tolerance (reduced
+configs, f32, per-page codebooks): max |dlogit| <= 2.5 and <= 8% of the
+logit range at 16 values; greedy tokens typically agree exactly.
 """
 import argparse
 import os
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3_0_6b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--quantize", default=None,
-                    help="PTQ method (e.g. kmeans_ls, l1_ls, tv)")
-    ap.add_argument("--num-values", type=int, default=16)
-    args = ap.parse_args()
-    os.environ.setdefault("XLA_FLAGS",
-                          "--xla_force_host_platform_device_count=8")
-
+def _run_static(args):
     import jax
     import jax.numpy as jnp
 
@@ -69,6 +70,147 @@ def main():
     dt = time.perf_counter() - t0
     print(f"[serve] {B} requests x {G} tokens in {dt:.2f}s "
           f"({B*G/dt:.1f} tok/s incl. compile); sample: {gen[0][:10].tolist()}")
+
+
+def _verify_kv_quant(params, cfg, args):
+    """Replay a deterministic batch fp-paged vs quantized-paged and report
+    the logit deviation the quantized cache introduces."""
+    import numpy as np
+
+    from repro.serving import ContinuousBatchingEngine
+
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab, args.prompt_len).tolist()
+               for _ in range(min(3, args.max_slots))]
+    outs, engines = [], []
+    for kvq in (None, args.kv_quant):
+        eng = ContinuousBatchingEngine(
+            params, cfg, max_slots=args.max_slots,
+            block_size=args.block_size, max_seq_len=args.max_seq_len,
+            kv_quant=kvq, kv_num_values=args.kv_num_values,
+            record_logits=True)
+        outs.append(eng.generate(prompts, max_new_tokens=args.gen))
+        engines.append(eng)
+    fp, q = engines
+    dmax = scale = dsum = dcount = 0.0
+    agree, total = 0, 0
+    for i in range(len(prompts)):
+        a, b = fp.request_logits[i], q.request_logits[i]
+        d = np.abs(a - b)
+        dmax = max(dmax, float(d.max()))
+        dsum += float(d.sum())
+        dcount += d.size
+        scale = max(scale, float(np.abs(a).max()))
+        agree += sum(int(x == y) for x, y in zip(outs[0][i], outs[1][i]))
+        total += len(outs[0][i])
+    dmean = dsum / max(dcount, 1)
+    rel = dmax / max(scale, 1e-9)
+    tol_abs, tol_rel = 2.5, 0.08
+    ok = dmax <= tol_abs and rel <= tol_rel
+    print(f"[serve] kv-quant check ({args.kv_quant}@{args.kv_num_values}): "
+          f"max|dlogit|={dmax:.3f} mean={dmean:.4f} rel={rel:.3%} "
+          f"(tolerance: abs<={tol_abs}, rel<={tol_rel:.0%}) "
+          f"greedy-token agreement {agree}/{total} -> "
+          f"{'OK' if ok else 'EXCEEDED'}")
+    return ok
+
+
+def _run_continuous(args):
+    import jax
+
+    from repro import models
+    from repro.configs import get_config, get_reduced_config
+    from repro.serving import ContinuousBatchingEngine
+    from repro.serving.scheduler import poisson_trace
+
+    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    if args.quantize:
+        from repro.quant.ptq import compression_ratio, quantize_tree
+
+        # QuantizedTensor leaves are served as-is: attention/ffn projections
+        # route through qmatmul's fused dequant path, never densifying.
+        params, report = quantize_tree(
+            params, method=args.quantize, num_values=args.num_values,
+            weighted=True,
+            skip_patterns=("ln", "norm", "router", "A_log", "mix", "dt_bias",
+                           "D_skip", "w0", "embed", "lm_head"))
+        print(f"[serve] PTQ {args.quantize}@{args.num_values}: "
+              f"{len(report)} tensors, {compression_ratio(report):.1f}x, "
+              "serving undequantized via qmatmul")
+
+    eng = ContinuousBatchingEngine(
+        params, cfg, max_slots=args.max_slots, block_size=args.block_size,
+        max_seq_len=args.max_seq_len, kv_quant=args.kv_quant,
+        kv_num_values=args.kv_num_values)
+    trace = poisson_trace(args.num_requests, args.request_rate,
+                          vocab=cfg.vocab, prompt_len=args.prompt_len,
+                          max_new_tokens=args.gen, seed=args.seed)
+    print(f"[serve] continuous batching: {args.num_requests} requests, "
+          f"Poisson rate {args.request_rate}/s, prompt {args.prompt_len}, "
+          f"gen {args.gen}, {args.max_slots} slots x "
+          f"{args.max_seq_len} tokens, block {args.block_size}, "
+          f"kv={args.kv_quant or 'fp'}")
+    s = eng.run(trace)
+    if not s["completed"]:
+        print(f"[serve] no requests completed ({s['rejected']} rejected — "
+              f"prompt+gen must fit --max-seq-len {args.max_seq_len})")
+        return
+    print(f"[serve] completed {s['completed']}/{args.num_requests} "
+          f"(rejected {s['rejected']}) in {s['makespan_s']:.2f}s: "
+          f"{s['throughput_tok_s']:.1f} gen tok/s")
+    print(f"[serve] TTFT mean {s['ttft_mean_s']*1e3:.0f}ms "
+          f"p50 {s['ttft_p50_s']*1e3:.0f}ms p99 {s['ttft_p99_s']*1e3:.0f}ms | "
+          f"TPOT p50 {s['tpot_p50_s']*1e3:.1f}ms p99 {s['tpot_p99_s']*1e3:.1f}ms")
+    occ = s.get("cache_occupancy_mean", 0.0)
+    print(f"[serve] cache occupancy mean {occ:.1%} "
+          f"max {s.get('cache_occupancy_max', 0.0):.1%}")
+    if args.kv_quant:
+        print(f"[serve] cache bytes: frozen-page compression "
+              f"{s['page_compression']:.1f}x per page; measured mean "
+              f"{s.get('cache_compression_mean', 1.0):.1f}x, at last "
+              f"occupied step {s.get('cache_compression_final', 1.0):.1f}x "
+              f"(partial pages stay fp)")
+        if not _verify_kv_quant(params, cfg, args):
+            raise SystemExit(1)     # tolerance breach must fail the run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--gen", type=int, default=None)
+    ap.add_argument("--quantize", default=None,
+                    help="PTQ method for weights (e.g. kmeans_ls, l1_ls, tv)")
+    ap.add_argument("--num-values", type=int, default=16)
+    # continuous engine
+    ap.add_argument("--request-rate", type=float, default=4.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--num-requests", type=int, default=12)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-seq-len", type=int, default=256)
+    ap.add_argument("--kv-quant", default=None,
+                    help="page codebook method (kmeans_ls, tv, kmeans, dtc)")
+    ap.add_argument("--kv-num-values", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.engine == "continuous" and args.request_rate <= 0:
+        ap.error("--request-rate must be > 0 (requests per second)")
+    if args.prompt_len is None:
+        args.prompt_len = 64 if args.engine == "continuous" else 16
+    if args.gen is None:
+        args.gen = 32 if args.engine == "continuous" else 16
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    if args.engine == "continuous":
+        _run_continuous(args)
+    else:
+        _run_static(args)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 """Attention mixers: GQA (RoPE / M-RoPE / qk-norm / softcap / local window),
 MLA (deepseek multi-head latent attention), and cross-attention (whisper).
 
-Pure functions over parameter dicts; a KV cache (decode) is a dict of
-ring-buffer arrays plus a scalar length carried by the caller.
+Pure functions over parameter dicts; a KV cache (decode) is any pytree a
+cache adapter understands (see .cache): dict ring buffers plus a scalar
+length carried by the caller, or an object carrying its own layout (the
+paged serving cache).
 """
 from __future__ import annotations
 
@@ -10,7 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.quant.serve import qmatmul
 from repro.runtime.hints import hint
+from .cache import as_adapter
 from .norms import init_rms, rms_norm
 from .rope import apply_mrope, apply_rope
 
@@ -44,6 +48,27 @@ def init_attention(cfg, spec, rng, dtype):
     return p
 
 
+def _pos_mask(Sq, Skv, *, k_start, causal, window, q_offset, kv_valid_len):
+    """Position mask (Bm, Sq, Skv) with Bm in {1, B}.
+
+    q_offset / kv_valid_len may be scalars (all rows share one length — the
+    classic single-sequence ring cache) or (B,) vectors (continuous batching:
+    every slot is at its own decode position).
+    """
+    q_off = jnp.asarray(q_offset, jnp.int32).reshape(-1)          # (Bm,)
+    q_pos = q_off[:, None, None] + jnp.arange(Sq)[None, :, None]  # (Bm,Sq,1)
+    k_pos = k_start + jnp.arange(Skv)[None, None, :]              # (1,1,Skv)
+    mask = jnp.ones((q_off.shape[0], Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_valid_len is not None:
+        kv = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1)
+        mask &= k_pos < kv[:, None, None]
+    return mask
+
+
 def _sdpa_block(q, k, v, *, causal, window, softcap, q_offset, kv_valid_len,
                 repeat_kv=True):
     """One q-block of grouped attention. q: (B,Sq,Hq,Dh); k,v: (B,Skv,Hkv,*).
@@ -67,16 +92,9 @@ def _sdpa_block(q, k, v, *, causal, window, softcap, q_offset, kv_valid_len,
     logits = logits / np.sqrt(Dh).astype(np.float32)
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
-    q_pos = q_offset + jnp.arange(Sq)[:, None]          # (Sq,1)
-    k_pos = jnp.arange(Skv)[None, :]                    # (1,Skv)
-    mask = jnp.ones((Sq, Skv), bool)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window is not None:
-        mask &= k_pos > q_pos - window
-    if kv_valid_len is not None:
-        mask &= k_pos < kv_valid_len
-    logits = jnp.where(mask[None, None, None], logits, BIG_NEG)
+    mask = _pos_mask(Sq, Skv, k_start=0, causal=causal, window=window,
+                     q_offset=q_offset, kv_valid_len=kv_valid_len)
+    logits = jnp.where(mask[:, None, None], logits, BIG_NEG)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
     return out.reshape(B, Sq, Hq, Dv)
@@ -97,7 +115,6 @@ def _sdpa_flash(q, k, v, *, causal, window, softcap, q_offset, kv_valid_len,
     scale = 1.0 / np.sqrt(Dh).astype(np.float32)
     k_ch = k.reshape(B, n, kv_chunk, Hkv, Dh).swapaxes(0, 1)
     v_ch = v.reshape(B, n, kv_chunk, Hkv, Dv).swapaxes(0, 1)
-    q_pos = q_offset + jnp.arange(Sq)[:, None]
 
     q5 = q.reshape(B, Sq, Hkv, G, Dh)
 
@@ -117,18 +134,13 @@ def _sdpa_flash(q, k, v, *, causal, window, softcap, q_offset, kv_valid_len,
                            preferred_element_type=jnp.float32) * scale
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
-        k_pos = j * kv_chunk + jnp.arange(kv_chunk)[None, :]
-        mask = jnp.ones((Sq, kv_chunk), bool)
-        if causal:
-            mask &= k_pos <= q_pos
-        if window is not None:
-            mask &= k_pos > q_pos - window
-        if kv_valid_len is not None:
-            mask &= k_pos < kv_valid_len
-        s = jnp.where(mask[None, None], s, BIG_NEG)
+        mask = _pos_mask(Sq, kv_chunk, k_start=j * kv_chunk, causal=causal,
+                         window=window, q_offset=q_offset,
+                         kv_valid_len=kv_valid_len)
+        s = jnp.where(mask[:, None], s, BIG_NEG)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
-        p = jnp.where(mask[None, None], p, 0.0)
+        p = jnp.where(mask[:, None], p, 0.0)
         corr = jnp.exp(m - m_new)
         l = l * corr + p.sum(-1)
         if G > 1 and not repeat_kv:
@@ -202,14 +214,19 @@ def attention(params, cfg, spec, x, positions, *, cache=None, cache_index=None,
               causal=True, cross_kv=None):
     """Self-attention (+ optional appended cross-attention for whisper).
 
-    cache (decode/prefill-extend): {"k","v"} ring buffers (B, L, Hkv, Dh);
-    cache_index: scalar current length. Returns (out, new_cache).
+    cache (decode/prefill-extend): any pytree ``cache.as_adapter`` accepts —
+    {"k","v"} ring buffers (B, L, Hkv, Dh), the int8 variant, or a paged
+    cache object; cache_index: scalar current length (ring caches only;
+    adapters that track per-sequence lengths ignore it). Returns
+    (out, new_cache).
     """
     B, S, D = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = (x @ params["wq"]).reshape(B, S, H, Dh)
-    k = (x @ params["wk"]).reshape(B, S, Hkv, Dh)
-    v = (x @ params["wv"]).reshape(B, S, Hkv, Dh)
+    # qmatmul: dense weights -> plain matmul; QuantizedTensor leaves -> the
+    # fused codebook-dequant kernel (PTQ'd checkpoints serve undequantized)
+    q = qmatmul(x, params["wq"]).reshape(B, S, H, Dh)
+    k = qmatmul(x, params["wk"]).reshape(B, S, Hkv, Dh)
+    v = qmatmul(x, params["wv"]).reshape(B, S, Hkv, Dh)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"])
         k = rms_norm(k, params["k_norm"])
@@ -224,39 +241,15 @@ def attention(params, cfg, spec, x, positions, *, cache=None, cache_index=None,
 
     new_cache = None
     if cache is not None:
-        if "k_s" in cache:   # int8 scalar-quantized cache
-            def q8(t):
-                s = jnp.max(jnp.abs(t), axis=-1, keepdims=True
-                            ).astype(jnp.float32) / 127.0
-                s = jnp.maximum(s, 1e-8)
-                codes = jnp.clip(jnp.round(t.astype(jnp.float32) / s),
-                                 -127, 127).astype(jnp.int8)
-                return codes, s
-
-            kq, ks = q8(k)
-            vq, vs = q8(v)
-            upd = lambda buf, t, rank4=True: jax.lax.dynamic_update_slice(
-                buf, t, (0, cache_index, 0, 0))
-            cache = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
-                     "k_s": upd(cache["k_s"], ks), "v_s": upd(cache["v_s"], vs)}
-            new_cache = cache
-            k_all = (cache["k"].astype(k.dtype)
-                     * cache["k_s"].astype(k.dtype))
-            v_all = (cache["v"].astype(v.dtype)
-                     * cache["v_s"].astype(v.dtype))
-        else:
-            k_all = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
-            v_all = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
-            new_cache = {"k": k_all, "v": v_all}
+        new_cache, k_all, v_all, q_off, valid = as_adapter(cache).update(
+            k, v, cache_index)
         out = sdpa(q, k_all, v_all, causal=causal, window=spec.window,
-                   softcap=cfg.attn_softcap, q_offset=cache_index,
-                   kv_valid_len=cache_index + S, q_chunk=cfg.attn_q_chunk)
+                   softcap=cfg.attn_softcap, q_offset=q_off,
+                   kv_valid_len=valid, q_chunk=cfg.attn_q_chunk)
     else:
         out = sdpa(q, k, v, causal=causal, window=spec.window,
                    softcap=cfg.attn_softcap, q_chunk=cfg.attn_q_chunk)
-    y = out.reshape(B, S, H * Dh) @ params["wo"]
+    y = qmatmul(out.reshape(B, S, H * Dh), params["wo"])
 
     if spec.cross_attn:
         assert cross_kv is not None, "cross-attention needs encoder kv"

@@ -1,0 +1,87 @@
+"""KV-cache adapters: the one interface between attention and cache storage.
+
+Attention never touches cache layout directly; it calls
+
+    new_cache, k_all, v_all, q_offset, kv_valid_len = adapter.update(k, v, idx)
+
+where ``k, v`` are the new projected keys/values (B, S, Hkv, Dh) and ``idx``
+the scalar write position for contiguous ring-buffer caches (ignored by
+caches that track their own per-sequence lengths, e.g. the paged cache in
+``repro.serving.kv_cache``). ``q_offset`` / ``kv_valid_len`` are either
+scalars or per-sequence (B,) vectors and feed straight into ``sdpa``.
+
+Built-in adapters wrap the plain-dict caches produced by
+``transformer.init_layer_cache`` so the pytree that flows through
+``lax.scan`` stays a dict; any object exposing ``.update`` (duck-typed) is
+used as-is, which is how the paged serving cache plugs in without models
+importing serving code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class DenseRingCache:
+    """Contiguous (B, L, Hkv, Dh) ring buffers {"k","v"} written at idx."""
+
+    def __init__(self, cache: dict):
+        self.cache = cache
+
+    def update(self, k, v, cache_index):
+        c = self.cache
+        k_all = jax.lax.dynamic_update_slice(
+            c["k"], k.astype(c["k"].dtype), (0, cache_index, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            c["v"], v.astype(c["v"].dtype), (0, cache_index, 0, 0))
+        valid = cache_index + k.shape[1]
+        return {"k": k_all, "v": v_all}, k_all, v_all, cache_index, valid
+
+
+class Int8RingCache:
+    """Scalar-quantized ring buffer: int8 codes + one f32 scale per
+    (token, head) — the paper's value-sharing idea applied per-token.
+
+    Storage dict: {"k","v"} int8 (B, L, Hkv, Dh) + {"k_s","v_s"} f32
+    (B, L, Hkv, 1). Reads dequantize the whole buffer (decode is
+    bandwidth-bound, so the HBM win is the int8 crossing; the multiply is
+    free on the VPU).
+    """
+
+    def __init__(self, cache: dict):
+        self.cache = cache
+
+    @staticmethod
+    def _q8(t):
+        s = jnp.max(jnp.abs(t), axis=-1, keepdims=True
+                    ).astype(jnp.float32) / 127.0
+        s = jnp.maximum(s, 1e-8)
+        codes = jnp.clip(jnp.round(t.astype(jnp.float32) / s),
+                         -127, 127).astype(jnp.int8)
+        return codes, s
+
+    def update(self, k, v, cache_index):
+        c = self.cache
+        kq, ks = self._q8(k)
+        vq, vs = self._q8(v)
+        upd = lambda buf, t: jax.lax.dynamic_update_slice(
+            buf, t, (0, cache_index, 0, 0))
+        new = {"k": upd(c["k"], kq), "v": upd(c["v"], vq),
+               "k_s": upd(c["k_s"], ks), "v_s": upd(c["v_s"], vs)}
+        k_all = new["k"].astype(k.dtype) * new["k_s"].astype(k.dtype)
+        v_all = new["v"].astype(v.dtype) * new["v_s"].astype(v.dtype)
+        valid = cache_index + k.shape[1]
+        return new, k_all, v_all, cache_index, valid
+
+
+def as_adapter(cache):
+    """Dispatch a cache pytree to its adapter (ducks pass through).
+
+    Dicts are checked first — a plain dict's own ``.update`` is not the
+    adapter protocol.
+    """
+    if isinstance(cache, dict):
+        return Int8RingCache(cache) if "k_s" in cache else DenseRingCache(cache)
+    if hasattr(cache, "update"):
+        return cache
+    raise TypeError(f"no KV-cache adapter for {type(cache)!r}")

@@ -1,10 +1,16 @@
-"""Feed-forward blocks: gated MLP (SwiGLU / GeGLU)."""
+"""Feed-forward blocks: gated MLP (SwiGLU / GeGLU).
+
+Projections go through ``quant.serve.qmatmul``: dense weights hit the plain
+matmul, value-shared QuantizedTensor leaves (PTQ checkpoints served without
+dequantizing) hit the fused codebook-dequant kernel.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.quant.serve import qmatmul
 from repro.runtime.hints import hint
 
 
@@ -28,6 +34,6 @@ def _act(x, kind: str):
 
 
 def ffn(params, cfg, x):
-    h = _act(x @ params["w_gate"], cfg.act) * (x @ params["w_up"])
+    h = _act(qmatmul(x, params["w_gate"]), cfg.act) * qmatmul(x, params["w_up"])
     h = hint(h, "ffn")
-    return hint(h @ params["w_down"], "hidden")
+    return hint(qmatmul(h, params["w_down"]), "hidden")

@@ -268,14 +268,21 @@ def lm_prefill(params, cfg, batch, cache):
 
 
 def lm_decode_step(params, cfg, tokens, cache, cache_index):
-    """One decode step: tokens (B, 1) -> (logits (B,1,V), new_cache)."""
+    """One decode step: tokens (B, 1) -> (logits (B,1,V), new_cache).
+
+    cache_index is a scalar (every row at the same length — static batch) or
+    a (B,) vector of per-sequence lengths (continuous batching over a paged
+    cache, which carries its own write positions).
+    """
     batch = {"tokens": tokens}
     x = _embed_in(params, cfg, batch)
     B = x.shape[0]
+    ci = jnp.asarray(cache_index, jnp.int32)
+    pos = ci.reshape(B, 1) if ci.ndim >= 1 else jnp.broadcast_to(ci, (B, 1))
     if cfg.mrope_sections is not None:
-        positions = jnp.broadcast_to(cache_index, (3, B, 1)).astype(jnp.int32)
+        positions = jnp.broadcast_to(pos[None], (3, B, 1)).astype(jnp.int32)
     else:
-        positions = jnp.broadcast_to(cache_index, (B, 1)).astype(jnp.int32)
+        positions = pos.astype(jnp.int32)
     x, new_cache = _scan_groups(params, cfg, x, positions, cache=cache,
                                 cache_index=cache_index)
     return _lm_head(params, cfg, x), new_cache

@@ -1,0 +1,7 @@
+"""Quantization applications of the paper's solvers: PTQ, QAT, gradient
+compression, and the quantized-serving matmul path."""
+from .ptq import compression_ratio, dequantize_tree, quantize_tree
+from .serve import estimate_decode_bytes, qmatmul
+
+__all__ = ["quantize_tree", "dequantize_tree", "compression_ratio",
+           "qmatmul", "estimate_decode_bytes"]

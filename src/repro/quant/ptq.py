@@ -13,7 +13,7 @@ import re
 import jax
 import numpy as np
 
-from repro.core import QuantizedTensor, quantize
+from repro.core import QuantizedTensor, quantize, stack_quantized
 from repro.core.problem import make_problem, unique_with_counts
 from repro.core.refit import refit_support, support_of
 from repro.core.types import from_dense
@@ -34,16 +34,33 @@ def should_quantize(path, leaf, skip_patterns) -> bool:
 def quantize_tree(params, *, method: str = "kmeans_ls", num_values: int = 256,
                   lam: float | None = None, weighted: bool = True,
                   skip_patterns=("ln", "norm", "router", "A_log", "mix",
-                                 "dt_bias", "D_skip", "w0")):
-    """Quantize every eligible leaf. Returns (qtree, report)."""
+                                 "dt_bias", "D_skip", "w0"),
+                  stacked_paths=("groups",)):
+    """Quantize every eligible leaf. Returns (qtree, report).
+
+    Leaves under a ``stacked_paths`` subtree (the transformer's scanned
+    layer groups) carry a leading group axis; each slice is quantized
+    independently and restacked (``stack_quantized``), so the resulting
+    QuantizedTensor still scans — lax.scan slices codebook and indices in
+    lockstep.
+    """
     report = {}
 
     def per_leaf(path, leaf):
         if not should_quantize(path, leaf, skip_patterns):
             return leaf
         kw = dict(num_values=num_values) if lam is None else dict(lam=lam)
-        qt, info = quantize(np.asarray(leaf), method, weighted=weighted, **kw)
-        report["/".join(_names(path))] = {
+        names = _names(path)
+        arr = np.asarray(leaf)
+        if names and names[0] in stacked_paths and arr.ndim >= 3:
+            parts = [quantize(arr[g], method, weighted=weighted, **kw)
+                     for g in range(arr.shape[0])]
+            qt = stack_quantized([q for q, _ in parts])
+            info = {"n_values": qt.num_values,
+                    "l2_loss": float(sum(i["l2_loss"] for _, i in parts))}
+        else:
+            qt, info = quantize(arr, method, weighted=weighted, **kw)
+        report["/".join(names)] = {
             "n_values": info["n_values"], "l2_loss": info["l2_loss"],
             "bytes": qt.nbytes(), "dense_bytes": leaf.size * leaf.dtype.itemsize,
         }

@@ -1,0 +1,2 @@
+"""Runtime layer: sharding rules, activation hints, pipeline parallelism,
+and fault tolerance."""

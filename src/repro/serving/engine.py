@@ -1,0 +1,246 @@
+"""Continuous-batching serving engine over the paged (optionally
+codebook-quantized) KV cache.
+
+One engine iteration = admit new prefills (they join the in-flight batch),
+one fused decode step over every active slot, freeze any page that just
+filled (host-side sparse-LSQ quantization), evict finished sequences and
+recycle their pages. The decode batch is a fixed (max_slots, 1) shape so
+the jitted step compiles once; idle slots write to the null page and their
+logits are ignored. Prefill runs per-request at block-rounded lengths
+(bounded retraces) — the new sequence decodes together with the rest of
+the batch in the same iteration, which is iteration-level (continuous)
+batching.
+
+Weights flow through ``repro.quant.serve.qmatmul`` untouched: dense params
+hit the plain matmul path, PTQ'd QuantizedTensor leaves would hit the fused
+dequant kernel — the engine is agnostic.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from .kv_cache import (BlockAllocator, freeze_blocks, init_paged_cache,
+                       merge_pools, page_bytes, thaw_blocks, with_tables)
+from .metrics import MetricsCollector
+from .scheduler import ContinuousBatchingScheduler, Request, SeqState
+
+
+class _Slot:
+    """Engine-side per-slot state (token io + page bookkeeping)."""
+
+    def __init__(self):
+        self.rid = None
+        self.blocks: list[int] = []
+        self.frozen_upto = 0          # block-table slots already quantized
+        self.last_token = 0
+        self.out: list[int] = []
+        self.logits: list[np.ndarray] = []
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, params, cfg, *, max_slots: int = 8,
+                 block_size: int = 16, max_seq_len: int = 256,
+                 num_blocks: int | None = None, kv_quant: str | None = None,
+                 kv_num_values: int = 16, max_queue: int = 256,
+                 eos_id: int | None = None, record_logits: bool = False):
+        assert cfg.family == "lm", "paged serving drives decoder-only LMs"
+        if kv_quant is not None:
+            from repro.core import COUNT_METHODS
+
+            allowed = set(COUNT_METHODS) | {"tv"}
+            if kv_quant not in allowed:
+                raise ValueError(f"kv_quant {kv_quant!r}: need a "
+                                 f"count-parameterised method, one of "
+                                 f"{sorted(allowed)}")
+        self.params, self.cfg = params, cfg
+        self.block_size = block_size
+        self.max_blocks = -(-max_seq_len // block_size)
+        self.max_seq_len = self.max_blocks * block_size
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else max_slots * self.max_blocks + 1)
+        self.kv_quant = kv_quant
+        self.kv_num_values = kv_num_values
+        self.eos_id = eos_id
+        self.record_logits = record_logits
+
+        self.tree = init_paged_cache(
+            cfg, num_blocks=self.num_blocks, block_size=block_size,
+            batch=max_slots, max_blocks=self.max_blocks,
+            quantized=kv_quant is not None, num_values=kv_num_values)
+        self.alloc = BlockAllocator(self.num_blocks)
+        self.sched = ContinuousBatchingScheduler(
+            max_slots=max_slots, block_size=block_size, max_queue=max_queue)
+        self.metrics = MetricsCollector()
+        self.table = np.zeros((max_slots, self.max_blocks), np.int32)
+        self.lens = np.zeros((max_slots,), np.int32)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.outputs: dict[int, list[int]] = {}
+        self.request_logits: dict[int, np.ndarray] = {}
+        self._pb = page_bytes(cfg, block_size, quantized=kv_quant is not None,
+                              num_values=kv_num_values)
+
+        self._prefill_fn = jax.jit(
+            lambda p, toks, tree: models.prefill(p, cfg, {"tokens": toks},
+                                                 tree))
+        self._decode_fn = jax.jit(
+            lambda p, toks, tree, lens: models.decode_step(p, cfg, toks,
+                                                           tree, lens))
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, req: Request, now: float) -> bool:
+        if (req.prompt_len + req.max_new_tokens > self.max_seq_len
+                or self.sched.blocks_for(req) > self.num_blocks - 1):
+            # reject what can never fit (seq budget or whole page pool) —
+            # admitting it would head-of-line-block the queue forever
+            self.sched.rejected.append(req.id)
+            return False
+        ok = self.sched.submit(req)
+        if ok:
+            self.metrics.arrival(req.id, now, req.prompt_len)
+        return ok
+
+    # ------------------------------------------------------------ steps
+
+    def _do_prefill(self, st: SeqState, now_fn) -> None:
+        req, slot = st.req, st.slot
+        blocks = self.alloc.alloc(self.sched.blocks_for(req))
+        s = self.slots[slot]
+        s.rid, s.blocks, s.frozen_upto = req.id, blocks, 0
+        s.out, s.logits = [], []
+        self.table[slot] = 0
+        self.table[slot, :len(blocks)] = blocks
+        self.lens[slot] = 0
+
+        P = req.prompt_len
+        ppad = -(-P // self.block_size) * self.block_size
+        toks = np.zeros((1, ppad), np.int32)
+        toks[0, :P] = req.prompt
+        tree1 = with_tables(self.tree, self.table[slot:slot + 1],
+                            np.zeros((1,), np.int32))
+        logits, new1 = self._prefill_fn(self.params, jnp.asarray(toks), tree1)
+        self.tree = merge_pools(self.tree, new1)
+        self.lens[slot] = P
+        st.length, st.generated = P, 1
+        last = np.asarray(logits[0, P - 1])     # materializes the prefill
+        now = now_fn()                          # TTFT includes prefill time
+        s.last_token = int(np.argmax(last))
+        s.out.append(s.last_token)
+        if self.record_logits:
+            s.logits.append(last)
+        self.metrics.first_token(req.id, now)
+        self._freeze(slot)
+        if st.done or s.last_token == self.eos_id:
+            self._finish(st, now)
+
+    def _decode_step(self, now_fn) -> None:
+        active = self.sched.active_slots()
+        if not active:
+            return
+        toks = np.zeros((len(self.slots), 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].last_token
+        tree = with_tables(self.tree, self.table, self.lens)
+        lens = jnp.asarray(self.lens)
+        logits, new = self._decode_fn(self.params, jnp.asarray(toks), tree,
+                                      lens)
+        self.tree = merge_pools(self.tree, new)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        full = np.asarray(logits[:, -1]) if self.record_logits else None
+        now = now_fn()
+        finished = []
+        for i in active:
+            st = self.sched.active[i]
+            s = self.slots[i]
+            self.lens[i] += 1
+            st.length += 1
+            st.generated += 1
+            s.last_token = int(nxt[i])
+            s.out.append(s.last_token)
+            if full is not None:
+                s.logits.append(full[i])
+            self.metrics.token(st.req.id)
+            self._freeze(i)
+            if st.done or s.last_token == self.eos_id:
+                finished.append(st)
+        for st in finished:
+            self._finish(st, now)
+
+    def _freeze(self, slot: int) -> None:
+        """Quantize pages of this sequence that just became full."""
+        if self.kv_quant is None:
+            return
+        s = self.slots[slot]
+        full = int(self.lens[slot]) // self.block_size
+        if full > s.frozen_upto:
+            bids = [int(self.table[slot, j])
+                    for j in range(s.frozen_upto, full)]
+            self.tree = freeze_blocks(self.tree, bids, method=self.kv_quant,
+                                      num_values=self.kv_num_values)
+            s.frozen_upto = full
+
+    def _finish(self, st: SeqState, now: float) -> None:
+        slot, s = st.slot, self.slots[st.slot]
+        self.outputs[st.req.id] = list(s.out)
+        if self.record_logits and s.logits:
+            self.request_logits[st.req.id] = np.stack(s.logits)
+        self.metrics.finish(st.req.id, now)
+        self.tree = thaw_blocks(self.tree, s.blocks)
+        self.alloc.free(s.blocks)
+        self.table[slot] = 0
+        self.lens[slot] = 0
+        s.rid, s.blocks, s.frozen_upto, s.out = None, [], 0, []
+        self.sched.release(st)
+
+    def _sample_cache(self) -> None:
+        allocated = (self.num_blocks - 1) - self.alloc.num_free
+        frozen = sum(s.frozen_upto for s in self.slots)
+        actual = (frozen * self._pb["frozen"]
+                  + (allocated - frozen) * self._pb["fp"])
+        self.metrics.sample_cache(allocated / (self.num_blocks - 1),
+                                  actual, allocated * self._pb["fp"])
+
+    # ------------------------------------------------------------ run loop
+
+    def run(self, requests: list[Request], *, poll_s: float = 0.002) -> dict:
+        """Serve a trace of requests (arrival_time = seconds from start).
+
+        Wall-clock driven: a request becomes visible when the loop's clock
+        passes its arrival_time; the loop sleeps only when fully idle.
+        """
+        pending = deque(sorted(requests, key=lambda r: (r.arrival_time, r.id)))
+        t0 = time.perf_counter()
+        now_fn = lambda: time.perf_counter() - t0
+        while pending or self.sched.has_work:
+            now = now_fn()
+            while pending and pending[0].arrival_time <= now:
+                self.submit(pending.popleft(), now)
+            if not self.sched.has_work:
+                if not pending:     # everything left was rejected at submit
+                    break
+                nxt = pending[0].arrival_time
+                time.sleep(min(max(nxt - now, 0.0), poll_s) or poll_s)
+                continue
+            for st in self.sched.schedule(self.alloc.num_free):
+                self._do_prefill(st, now_fn)
+            self._decode_step(now_fn)
+            self._sample_cache()
+        out = self.metrics.summary()
+        # steady-state per-page ratio: what a fully frozen cache saves
+        out["page_compression"] = self._pb["fp"] / self._pb["frozen"]
+        out["rejected"] = len(self.sched.rejected)
+        return out
+
+    def generate(self, prompts: list[list[int]], max_new_tokens: int) -> dict:
+        """Batch convenience: all requests arrive at t=0; returns outputs
+        (None for requests rejected by admission control)."""
+        reqs = [Request(id=i, prompt=tuple(p), max_new_tokens=max_new_tokens)
+                for i, p in enumerate(prompts)]
+        self.run(reqs)
+        return {i: self.outputs.get(i) for i in range(len(prompts))}

@@ -1,0 +1,340 @@
+"""Paged KV cache: fixed-size blocks, a free-list allocator, per-sequence
+block tables, and optional codebook-quantized pages.
+
+Layout (per attention layer, leading group axis added by the stacked model
+cache exactly like ``transformer.init_lm_cache``):
+
+  k_fp/v_fp     (nb, bs, Hkv, Dh)  fp pages — the write-hot pool; every
+                token lands here first.
+  k_codes/...   (nb, bs, Hkv, Dc)  uint8 codes for quantized pages
+                (Dc = Dh/2 when two 4-bit codes pack per byte).
+  k_cb/v_cb     (nb, L) f32        per-block codebooks from the paper's
+                solvers (kmeans_ls / tv via repro.core.quantize).
+  blk_q         (nb,) bool         page i is served from codes, not fp.
+  block_table   (B, mb) int32      per-sequence page ids (0 = null page).
+  seq_lens      (B,) int32         per-sequence lengths (write positions).
+
+Block 0 is reserved as the null page: idle batch slots point every table
+entry at it, so their (masked) decode writes land in the trash instead of a
+live page.
+
+Writes always go to the fp pool inside the jitted step; the engine freezes
+a page once it is full by running the paper's quantizer on the host and
+scattering codes + codebook back (``quantize_page`` / ``freeze_blocks``).
+Reads overlay: pages flagged in ``blk_q`` dequantize ``cb[codes]``, the
+rest gather fp — so the hot (partial) page stays exact while cold context
+crosses HBM at ~4 bits/value.
+
+``PagedKVCache.update`` implements the adapter protocol of
+``repro.models.cache``; model code never learns about pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ------------------------------------------------------------- allocator
+
+
+class BlockAllocator:
+    """Host-side free-list page allocator. Block 0 is never handed out."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "need at least one allocatable block"
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids first
+        self._used: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(f"asked {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, ids) -> None:
+        for b in ids:
+            if b not in self._used:
+                raise ValueError(f"double free / foreign block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+
+
+# ------------------------------------------------------------- paged cache
+
+
+def _pack4(codes: np.ndarray) -> np.ndarray:
+    """Two 4-bit codes per byte along the last dim (must be even)."""
+    lo, hi = codes[..., 0::2], codes[..., 1::2]
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def _unpack4(packed: jax.Array) -> jax.Array:
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                                packed.shape[-1] * 2)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """One attention layer's paged KV pools + this batch's table view."""
+
+    k_fp: jax.Array
+    v_fp: jax.Array
+    k_codes: jax.Array
+    v_codes: jax.Array
+    k_cb: jax.Array
+    v_cb: jax.Array
+    blk_q: jax.Array
+    block_table: jax.Array
+    seq_lens: jax.Array
+    # static
+    block_size: int
+    quantized: bool
+    packed: bool
+
+    _LEAVES = ("k_fp", "v_fp", "k_codes", "v_codes", "k_cb", "v_cb",
+               "blk_q", "block_table", "seq_lens")
+    _POOL_LEAVES = ("k_fp", "v_fp", "k_codes", "v_codes", "k_cb", "v_cb",
+                    "blk_q")
+
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in self._LEAVES),
+                (self.block_size, self.quantized, self.packed))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # ---------------------------------------------- adapter protocol
+
+    def update(self, k, v, cache_index):
+        """Write k/v (B,S,Hkv,Dh) at per-sequence positions; gather pages.
+
+        cache_index (the ring-cache scalar) is ignored: this cache carries
+        its own per-sequence lengths.
+        """
+        del cache_index
+        B, S, Hkv, Dh = k.shape
+        bs = self.block_size
+        pos = self.seq_lens[:, None] + jnp.arange(S)[None]          # (B,S)
+        blk = jnp.take_along_axis(self.block_table, pos // bs, axis=1)
+        off = pos % bs
+        new = dataclasses.replace(
+            self,
+            k_fp=self.k_fp.at[blk.reshape(-1), off.reshape(-1)].set(
+                k.reshape(B * S, Hkv, Dh).astype(self.k_fp.dtype)),
+            v_fp=self.v_fp.at[blk.reshape(-1), off.reshape(-1)].set(
+                v.reshape(B * S, Hkv, Dh).astype(self.v_fp.dtype)),
+        )
+        k_all = new._gather(new.k_fp, new.k_codes, new.k_cb)
+        v_all = new._gather(new.v_fp, new.v_codes, new.v_cb)
+        return new, k_all, v_all, self.seq_lens, self.seq_lens + S
+
+    def _gather(self, fp, codes, cb):
+        """Pages for this batch: (B, mb*bs, Hkv, Dh), dequantizing frozen
+        pages from their per-block codebooks."""
+        t = self.block_table                                # (B, mb)
+        B, mb = t.shape
+        pages = fp[t]                                       # (B,mb,bs,H,D)
+        if self.quantized:
+            c = codes[t]                                    # (B,mb,bs,H,Dc)
+            if self.packed:
+                c = _unpack4(c)
+            c = c.astype(jnp.int32)
+            deq = jnp.take_along_axis(
+                cb[t], c.reshape(B, mb, -1), axis=-1).reshape(c.shape)
+            frozen = self.blk_q[t][:, :, None, None, None]
+            pages = jnp.where(frozen, deq.astype(pages.dtype), pages)
+        nb, bs, H, D = fp.shape
+        return pages.reshape(B, mb * bs, H, D)
+
+
+def init_paged_layer(cfg, *, num_blocks, block_size, batch, max_blocks,
+                     quantized, num_values, dtype) -> PagedKVCache:
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    packed = quantized and num_values <= 16
+    assert Dh % 2 == 0 or not packed
+    Dc = Dh // 2 if packed else Dh
+    cshape = (num_blocks, block_size, Hkv, Dc) if quantized else (1, 1, 1, 1)
+    cbshape = (num_blocks, num_values) if quantized else (1, 1)
+    return PagedKVCache(
+        k_fp=jnp.zeros((num_blocks, block_size, Hkv, Dh), dtype),
+        v_fp=jnp.zeros((num_blocks, block_size, Hkv, Dh), dtype),
+        k_codes=jnp.zeros(cshape, jnp.uint8),
+        v_codes=jnp.zeros(cshape, jnp.uint8),
+        k_cb=jnp.zeros(cbshape, jnp.float32),
+        v_cb=jnp.zeros(cbshape, jnp.float32),
+        blk_q=jnp.zeros((num_blocks if quantized else 1,), bool),
+        block_table=jnp.zeros((batch, max_blocks), jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+        block_size=block_size, quantized=quantized, packed=packed,
+    )
+
+
+def init_paged_cache(cfg, *, num_blocks, block_size, batch, max_blocks,
+                     quantized=False, num_values=16):
+    """Model-shaped cache tree mirroring ``transformer.init_lm_cache`` with
+    PagedKVCache leaves (leading group axis on scanned groups)."""
+    for spec in tuple(cfg.group) + tuple(cfg.head_layers):
+        assert spec.mixer == "attn", (
+            f"paged serving supports attention mixers only, got {spec.mixer}")
+    dtype = cfg.dtype("compute")
+    kw = dict(num_blocks=num_blocks, block_size=block_size, batch=batch,
+              max_blocks=max_blocks, quantized=quantized,
+              num_values=num_values, dtype=dtype)
+
+    def stack(_spec):
+        one = init_paged_layer(cfg, **kw)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape).copy(),
+            one)
+
+    cache = {"groups": {f"l{i}": stack(s) for i, s in enumerate(cfg.group)}}
+    for i, spec in enumerate(cfg.head_layers):
+        cache[f"head_{i}"] = init_paged_layer(cfg, **kw)
+    return cache
+
+
+# ----------------------------------------------- tree-surgery helpers
+
+
+def _is_leaf(x):
+    return isinstance(x, PagedKVCache)
+
+
+def map_layers(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_leaf)
+
+
+def with_tables(tree, block_table: np.ndarray, seq_lens: np.ndarray):
+    """Install host-managed table/lens into every layer leaf (broadcast over
+    the stacked group axis when present)."""
+    bt = jnp.asarray(block_table, jnp.int32)
+    sl = jnp.asarray(seq_lens, jnp.int32)
+
+    def per(leaf: PagedKVCache):
+        g = leaf.k_fp.ndim == 5            # stacked group axis present
+        G = leaf.k_fp.shape[0] if g else None
+        b = jnp.broadcast_to(bt, (G,) + bt.shape).copy() if g else bt
+        s = jnp.broadcast_to(sl, (G,) + sl.shape).copy() if g else sl
+        return dataclasses.replace(leaf, block_table=b, seq_lens=s)
+
+    return map_layers(per, tree)
+
+
+def merge_pools(held, returned):
+    """Adopt jit-updated fp pools; keep host-managed quantization state and
+    tables from ``held``."""
+    return jax.tree_util.tree_map(
+        lambda h, r: dataclasses.replace(h, k_fp=r.k_fp, v_fp=r.v_fp),
+        held, returned, is_leaf=_is_leaf)
+
+
+# ----------------------------------------------- host-side quantization
+
+
+def quantize_page(data: np.ndarray, method: str, num_values: int):
+    """Run the paper's solver on one page; returns (codes u8, codebook f32).
+
+    method "tv" maps to the exact-count tv_iter (tv itself is
+    lam-parameterised).
+    """
+    from repro.core import quantize
+
+    m = {"tv": "tv_iter"}.get(method, method)
+    qt, _ = quantize(data.astype(np.float32), method=m,
+                     num_values=num_values, weighted=True)
+    cb = np.asarray(qt.codebook, np.float32)
+    codes = np.asarray(qt.indices, np.uint8).reshape(data.shape)
+    if cb.shape[0] < num_values:                    # pad to the static width
+        cb = np.concatenate([cb, np.full(num_values - cb.shape[0], cb[-1],
+                                         np.float32)])
+    return codes, cb
+
+
+def freeze_blocks(tree, block_ids, *, method="kmeans_ls", num_values=16):
+    """Quantize full pages ``block_ids`` in every attention layer (host side,
+    between engine steps) and scatter codes/codebooks/flags back."""
+    if not block_ids:
+        return tree
+    bids = np.asarray(sorted(block_ids), np.int32)
+
+    def per(leaf: PagedKVCache):
+        assert leaf.quantized
+        stacked = leaf.k_fp.ndim == 5
+        groups = range(leaf.k_fp.shape[0]) if stacked else (None,)
+        axis = 1 if stacked else 0
+        # pull only the pages being frozen to host, not the whole pool
+        jb = jnp.asarray(bids)
+        kf = np.asarray(jnp.take(leaf.k_fp, jb, axis=axis))
+        vf = np.asarray(jnp.take(leaf.v_fp, jb, axis=axis))
+        kc, vc = leaf.k_codes, leaf.v_codes
+        kcb, vcb = leaf.k_cb, leaf.v_cb
+        for g in groups:
+            sel = () if g is None else (g,)
+            for pool, tag in ((kf, "k"), (vf, "v")):
+                new_codes, new_cbs = [], []
+                for bi in range(len(bids)):
+                    codes, cb = quantize_page(pool[sel + (bi,)], method,
+                                              num_values)
+                    if leaf.packed:
+                        codes = _pack4(codes)
+                    new_codes.append(codes)
+                    new_cbs.append(cb)
+                nc = jnp.asarray(np.stack(new_codes))
+                ncb = jnp.asarray(np.stack(new_cbs))
+                if tag == "k":
+                    kc = kc.at[sel + (bids,)].set(nc)
+                    kcb = kcb.at[sel + (bids,)].set(ncb)
+                else:
+                    vc = vc.at[sel + (bids,)].set(nc)
+                    vcb = vcb.at[sel + (bids,)].set(ncb)
+        blk_q = leaf.blk_q.at[..., bids].set(True)
+        return dataclasses.replace(leaf, k_codes=kc, v_codes=vc,
+                                   k_cb=kcb, v_cb=vcb, blk_q=blk_q)
+
+    return map_layers(per, tree)
+
+
+def thaw_blocks(tree, block_ids):
+    """Clear the quantized flag for freed pages (reallocation starts fp)."""
+    if not block_ids:
+        return tree
+    bids = np.asarray(sorted(block_ids), np.int32)
+
+    def per(leaf: PagedKVCache):
+        if not leaf.quantized:
+            return leaf
+        return dataclasses.replace(leaf,
+                                   blk_q=leaf.blk_q.at[..., bids].set(False))
+
+    return map_layers(per, tree)
+
+
+# ----------------------------------------------- footprint accounting
+
+
+def page_bytes(cfg, block_size: int, *, quantized: bool, num_values: int,
+               n_layers_attn: int | None = None) -> dict:
+    """Bytes one page costs across all attention layers, fp vs frozen."""
+    n_attn = (n_layers_attn if n_layers_attn is not None
+              else sum(1 for s in (tuple(cfg.head_layers)
+                                   + tuple(cfg.group) * cfg.n_groups)
+                       if s.mixer == "attn"))
+    elems = block_size * cfg.n_kv_heads * cfg.head_dim
+    fp = 2 * elems * cfg.dtype("compute").itemsize          # k and v
+    if not quantized:
+        return {"fp": n_attn * fp, "frozen": n_attn * fp, "n_attn": n_attn}
+    bits = 4 if num_values <= 16 else 8
+    frozen = 2 * ((elems * bits + 7) // 8 + num_values * 4)
+    return {"fp": n_attn * fp, "frozen": n_attn * frozen, "n_attn": n_attn}

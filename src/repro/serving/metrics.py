@@ -1,0 +1,104 @@
+"""Serving metrics: per-request latency (TTFT / TPOT), aggregate
+throughput, and KV-cache occupancy counters.
+
+TTFT = first token time - arrival (queueing + prefill).
+TPOT = mean inter-token time over the remaining tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def percentile(xs, p: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else float("nan")
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    arrival_t: float
+    prompt_len: int
+    first_token_t: float | None = None
+    finish_t: float | None = None
+    tokens: int = 0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def tpot(self) -> float:
+        if self.tokens <= 1:
+            return 0.0
+        return (self.finish_t - self.first_token_t) / (self.tokens - 1)
+
+
+class MetricsCollector:
+    def __init__(self):
+        self.traces: dict[int, RequestTrace] = {}
+        self.occupancy: list[float] = []        # allocated / total pages
+        self.cache_bytes: list[tuple[float, float]] = []  # (actual, fp-equiv)
+        self.steps = 0
+
+    # ----------------------------------------------------- request events
+
+    def arrival(self, rid: int, t: float, prompt_len: int) -> None:
+        self.traces[rid] = RequestTrace(arrival_t=t, prompt_len=prompt_len)
+
+    def first_token(self, rid: int, t: float) -> None:
+        tr = self.traces[rid]
+        tr.first_token_t = t
+        tr.tokens = 1
+
+    def token(self, rid: int) -> None:
+        self.traces[rid].tokens += 1
+
+    def finish(self, rid: int, t: float) -> None:
+        self.traces[rid].finish_t = t
+
+    # ----------------------------------------------------- cache sampling
+
+    def sample_cache(self, occupancy: float, actual_bytes: float,
+                     fp_bytes: float) -> None:
+        self.steps += 1
+        self.occupancy.append(occupancy)
+        self.cache_bytes.append((actual_bytes, fp_bytes))
+
+    # ----------------------------------------------------- aggregation
+
+    def summary(self) -> dict:
+        done = [t for t in self.traces.values() if t.finish_t is not None]
+        if not done:
+            return {"completed": 0}
+        t0 = min(t.arrival_t for t in done)
+        t1 = max(t.finish_t for t in done)
+        gen = sum(t.tokens for t in done)
+        ttfts = [t.ttft for t in done]
+        tpots = [t.tpot for t in done if t.tokens > 1]
+        out = {
+            "completed": len(done),
+            "gen_tokens": gen,
+            "makespan_s": t1 - t0,
+            "throughput_tok_s": gen / max(t1 - t0, 1e-9),
+            "ttft_mean_s": float(np.mean(ttfts)),
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p99_s": percentile(ttfts, 99),
+            "tpot_p50_s": percentile(tpots, 50),
+            "tpot_p99_s": percentile(tpots, 99),
+        }
+        if self.occupancy:
+            out["cache_occupancy_mean"] = float(np.mean(self.occupancy))
+            out["cache_occupancy_max"] = float(np.max(self.occupancy))
+        if self.cache_bytes:
+            act, fp = np.asarray(self.cache_bytes).T
+            nz = np.flatnonzero(fp > 0)
+            if nz.size:
+                # "final" = last step the cache held anything (after the last
+                # eviction both sides are zero)
+                j = nz[-1]
+                out["cache_bytes_final"] = float(act[j])
+                out["cache_bytes_fp_final"] = float(fp[j])
+                out["cache_compression_mean"] = float(np.mean(fp[nz] / act[nz]))
+                out["cache_compression_final"] = float(fp[j] / act[j])
+        return out

@@ -1,0 +1,137 @@
+"""Continuous-batching scheduler: iteration-level batching with admission
+control.
+
+Pure decision logic over a virtual "now" and a free-page count — no model,
+no arrays — so a whole serving day can be simulated deterministically in a
+unit test. The engine calls ``schedule()`` once per iteration; new prefills
+join the in-flight decode batch whenever a slot and enough pages are free,
+and finished sequences are evicted the same step they complete
+(``release``), their pages immediately reusable.
+
+Admission is conservative: a request is only scheduled when its *worst
+case* page need — ceil((prompt + max_new) / block_size) — fits, so a
+scheduled request can never deadlock the pool mid-decode (no preemption
+needed). ``submit`` applies queue-depth admission control and is safe to
+call from an async producer: it only appends to a deque, so an
+``asyncio``/thread frontend can feed arrivals while the engine loop runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request."""
+
+    id: int
+    prompt: tuple          # token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclasses.dataclass
+class SeqState:
+    """Scheduler-side state of an admitted sequence."""
+
+    req: Request
+    slot: int
+    length: int            # tokens with KV in cache
+    generated: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.req.max_new_tokens
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, *, max_slots: int, block_size: int,
+                 max_queue: int = 256):
+        self.max_slots = max_slots
+        self.block_size = block_size
+        self.max_queue = max_queue
+        self.waiting: deque[Request] = deque()
+        self.active: dict[int, SeqState] = {}       # slot -> state
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+        self.rejected: list[int] = []
+
+    # ------------------------------------------------------------ intake
+
+    def blocks_for(self, req: Request) -> int:
+        total = req.prompt_len + req.max_new_tokens
+        return -(-total // self.block_size)
+
+    def submit(self, req: Request) -> bool:
+        """Admission control at the queue door; False = rejected (429)."""
+        if len(self.waiting) >= self.max_queue:
+            self.rejected.append(req.id)
+            return False
+        self.waiting.append(req)
+        return True
+
+    # ------------------------------------------------------------ per step
+
+    def schedule(self, free_blocks: int) -> list[SeqState]:
+        """Admit FCFS from the queue into free slots while pages last.
+
+        Returns newly admitted sequences (their prefill runs this
+        iteration). Head-of-line blocking is intentional: FCFS keeps the
+        schedule deterministic and starvation-free.
+        """
+        admitted = []
+        while self.waiting and self._free_slots:
+            need = self.blocks_for(self.waiting[0])
+            if need > free_blocks:
+                break
+            req = self.waiting.popleft()
+            slot = self._free_slots.pop()
+            st = SeqState(req=req, slot=slot, length=0)
+            self.active[slot] = st
+            admitted.append(st)
+            free_blocks -= need
+        return admitted
+
+    def step_decoded(self) -> list[SeqState]:
+        """Account one decoded token per active sequence; return the ones
+        that just finished (caller evicts them this same iteration)."""
+        finished = []
+        for st in self.active.values():
+            st.length += 1
+            st.generated += 1
+            if st.done:
+                finished.append(st)
+        return finished
+
+    def release(self, st: SeqState) -> None:
+        del self.active[st.slot]
+        self._free_slots.append(st.slot)
+        self._free_slots.sort(reverse=True)   # deterministic reuse order
+
+    # ------------------------------------------------------------ queries
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    def active_slots(self) -> list[int]:
+        return sorted(self.active)
+
+
+def poisson_trace(n: int, rate: float, *, vocab: int, prompt_len: int,
+                  max_new_tokens: int, seed: int = 0) -> list[Request]:
+    """n requests with exp(1/rate) inter-arrival gaps (rate in req/s)."""
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [Request(id=i,
+                    prompt=tuple(int(x) for x in
+                                 rng.integers(0, vocab, prompt_len)),
+                    max_new_tokens=max_new_tokens,
+                    arrival_time=float(t[i]))
+            for i in range(n)]

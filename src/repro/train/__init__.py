@@ -1,0 +1,1 @@
+"""Training step builders (loss, grad accumulation, optimizer wiring)."""

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro import models
 from repro.configs import get_reduced_config
 from repro.data.pipeline import SyntheticLM
@@ -21,8 +22,11 @@ from repro.runtime.sharding import (batch_shardings, cache_shardings,
 from repro.train.step import (cache_specs, input_specs, make_decode_step,
                               make_train_step, train_state_specs)
 
-pytestmark = pytest.mark.skipif(len(jax.devices()) < 8,
-                                reason="needs 8 host devices")
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(len(jax.devices()) < 8,
+                       reason="needs 8 host devices"),
+]
 
 
 def _mesh():

@@ -9,13 +9,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro.checkpoint import ckpt
 from repro.runtime.ftolerance import StragglerMonitor, Trainer
 from repro.quant.gradcomp import (init_error_feedback,
                                   pod_quantized_allreduce)
 
-pytestmark = pytest.mark.skipif(len(jax.devices()) < 8,
-                                reason="needs 8 host devices")
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(len(jax.devices()) < 8,
+                       reason="needs 8 host devices"),
+]
 
 
 # ------------------------------------------------------------- checkpoints

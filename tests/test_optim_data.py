@@ -82,6 +82,7 @@ def test_pipeline_deterministic_and_sharded():
     assert a["tokens"].sharding.mesh.shape["data"] == 2
 
 
+@pytest.mark.slow
 def test_dryrun_single_cell_subprocess():
     """The required deliverable path end-to-end: lower+compile one cell on
     the 256-chip mesh in a fresh process (512 forced host devices)."""

@@ -1,0 +1,295 @@
+"""Continuous-batching serving subsystem tests: deterministic scheduler
+simulation, paged-allocator invariants, paged-cache round-trip vs the dense
+ring cache, and quantized-KV numerics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_reduced_config
+from repro.serving import (BlockAllocator, ContinuousBatchingEngine,
+                           ContinuousBatchingScheduler, Request, freeze_blocks,
+                           thaw_blocks)
+from repro.serving.kv_cache import (_pack4, _unpack4, init_paged_layer,
+                                    quantize_page)
+
+pytestmark = pytest.mark.serving
+
+
+# ------------------------------------------------------------- scheduler
+
+
+def _simulate(sched, free_blocks):
+    """Drive the scheduler like the engine does (prefill emits token #1,
+    one decode step per iteration); returns the exact iteration schedule."""
+    log = []
+    free = free_blocks
+    guard = 0
+    while sched.has_work:
+        admitted = sched.schedule(free)
+        for st in admitted:
+            free -= sched.blocks_for(st.req)
+            st.length = st.req.prompt_len
+            st.generated = 1                       # prefill's first token
+        finished = sched.step_decoded()
+        for st in finished:
+            free += sched.blocks_for(st.req)
+            sched.release(st)
+        log.append((sorted(st.req.id for st in admitted),
+                    sorted(st.req.id for st in finished)))
+        guard += 1
+        assert guard < 100, "scheduler did not converge"
+    return log
+
+
+def test_scheduler_exact_schedule():
+    """Arrival trace in -> exact admission/eviction schedule out."""
+    sched = ContinuousBatchingScheduler(max_slots=2, block_size=4,
+                                        max_queue=8)
+    for i in range(4):
+        # 8 prompt + 4 new = 12 tokens = 3 blocks each
+        assert sched.submit(Request(id=i, prompt=(1,) * 8, max_new_tokens=4))
+    log = _simulate(sched, free_blocks=6)
+    # 2 slots, 6 pages: r0+r1 run together; r2+r3 wait for both to evict
+    assert log == [
+        ([0, 1], []), ([], []), ([], [0, 1]),
+        ([2, 3], []), ([], []), ([], [2, 3]),
+    ]
+
+
+def test_scheduler_page_budget_limits_admission():
+    """Only one request fits the page budget; the second joins mid-flight
+    as soon as pages free up (iteration-level batching)."""
+    sched = ContinuousBatchingScheduler(max_slots=2, block_size=4,
+                                        max_queue=8)
+    for i in range(2):
+        sched.submit(Request(id=i, prompt=(1,) * 8, max_new_tokens=4))
+    log = _simulate(sched, free_blocks=3)
+    assert log == [
+        ([0], []), ([], []), ([], [0]),
+        ([1], []), ([], []), ([], [1]),
+    ]
+
+
+def test_scheduler_queue_admission_control():
+    sched = ContinuousBatchingScheduler(max_slots=1, block_size=4,
+                                        max_queue=1)
+    assert sched.submit(Request(id=0, prompt=(1,), max_new_tokens=1))
+    assert not sched.submit(Request(id=1, prompt=(1,), max_new_tokens=1))
+    assert sched.rejected == [1]
+
+
+# ------------------------------------------------------------- allocator
+
+
+def test_allocator_invariants():
+    alloc = BlockAllocator(8)            # block 0 reserved -> 7 allocatable
+    assert alloc.num_free == 7
+    a = alloc.alloc(3)
+    b = alloc.alloc(2)
+    assert len(set(a) | set(b)) == 5 and 0 not in a + b
+    with pytest.raises(MemoryError):
+        alloc.alloc(3)
+    alloc.free(a)
+    with pytest.raises(ValueError):      # double free
+        alloc.free(a)
+    with pytest.raises(ValueError):      # foreign block
+        alloc.free([0])
+    assert alloc.num_free == 5
+    c = alloc.alloc(5)
+    assert 0 not in c
+
+
+# ------------------------------------------------------------- paged cache
+
+
+def _mini_cfg():
+    return get_reduced_config("qwen3_0_6b")
+
+
+def test_paged_layer_roundtrip_matches_dense():
+    """Block-table scatter/gather == a dense (B, L, H, D) cache."""
+    cfg = _mini_cfg()
+    bs, mb, B, S = 4, 3, 2, 4
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    leaf = init_paged_layer(cfg, num_blocks=8, block_size=bs, batch=B,
+                            max_blocks=mb, quantized=False, num_values=16,
+                            dtype=jnp.float32)
+    table = np.zeros((B, mb), np.int32)
+    table[0] = [3, 1, 2]
+    table[1] = [5, 4, 0]
+    lens = np.array([1, 2], np.int32)
+    leaf = dataclasses.replace(leaf, block_table=jnp.asarray(table),
+                               seq_lens=jnp.asarray(lens))
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+    new, k_all, v_all, q_off, valid = leaf.update(k, v, 0)
+    assert np.array_equal(np.asarray(q_off), lens)
+    assert np.array_equal(np.asarray(valid), lens + S)
+    dense = np.zeros((B, mb * bs, Hkv, Dh), np.float32)
+    for b in range(B):
+        dense[b, lens[b]:lens[b] + S] = np.asarray(k[b])
+    for b in range(B):
+        np.testing.assert_allclose(np.asarray(k_all)[b, lens[b]:lens[b] + S],
+                                   dense[b, lens[b]:lens[b] + S])
+    # a second write continues where the first stopped
+    new = dataclasses.replace(new, seq_lens=new.seq_lens + S)
+    k2 = jnp.asarray(rng.normal(size=(B, 1, Hkv, Dh)), jnp.float32)
+    _, k_all2, _, _, _ = new.update(k2, k2, 0)
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(k_all2)[b, lens[b]:lens[b] + S],
+            np.asarray(k_all)[b, lens[b]:lens[b] + S])
+        np.testing.assert_allclose(np.asarray(k_all2)[b, lens[b] + S],
+                                   np.asarray(k2)[b, 0])
+
+
+def test_pack4_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 16, (5, 4, 2, 32)).astype(np.uint8)
+    packed = _pack4(codes)
+    assert packed.shape == (5, 4, 2, 16)
+    out = np.asarray(_unpack4(jnp.asarray(packed)))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_freeze_thaw_dequantizes_within_tolerance():
+    cfg = _mini_cfg()
+    bs = 4
+    leaf = init_paged_layer(cfg, num_blocks=4, block_size=bs, batch=1,
+                            max_blocks=2, quantized=True, num_values=16,
+                            dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    kd = rng.normal(size=leaf.k_fp.shape).astype(np.float32)
+    leaf = dataclasses.replace(
+        leaf, k_fp=jnp.asarray(kd), v_fp=jnp.asarray(kd * 0.5),
+        block_table=jnp.asarray([[1, 2]], np.int32),
+        seq_lens=jnp.asarray([2 * bs], np.int32))
+    frozen = freeze_blocks(leaf, [1, 2], method="kmeans_ls", num_values=16)
+    k_all = frozen._gather(frozen.k_fp, frozen.k_codes, frozen.k_cb)
+    ref = np.concatenate([kd[1], kd[2]], axis=0)
+    err = np.abs(np.asarray(k_all)[0] - ref)
+    rms = np.sqrt((err ** 2).mean()) / np.sqrt((ref ** 2).mean())
+    assert rms < 0.25, rms               # 16 shared values per page
+    # thaw: page served from fp again -> exact
+    thawed = thaw_blocks(frozen, [1, 2])
+    k_fp = thawed._gather(thawed.k_fp, thawed.k_codes, thawed.k_cb)
+    np.testing.assert_allclose(np.asarray(k_fp)[0], ref)
+
+
+def test_quantize_page_tv_method():
+    data = np.random.default_rng(0).normal(size=(4, 2, 8)).astype(np.float32)
+    codes, cb = quantize_page(data, "tv", 8)
+    assert codes.shape == data.shape and cb.shape == (8,)
+    err = np.abs(cb[codes] - data).mean()
+    assert err < np.abs(data).mean()
+
+
+# ------------------------------------------------------------- engine
+
+
+@pytest.fixture(scope="module")
+def qwen_reduced():
+    cfg = get_reduced_config("qwen3_0_6b")
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _dense_reference(cfg, params, prompt, gen):
+    P = len(prompt)
+    toks = jnp.asarray([prompt], jnp.int32)
+    cache = models.init_cache(cfg, 1, P + gen)
+    logits, cache = models.prefill(params, cfg, {"tokens": toks}, cache)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    lg = [np.asarray(logits[0, -1])]
+    tok = jnp.asarray([[out[-1]]], jnp.int32)
+    for i in range(gen - 1):
+        logits, cache = models.decode_step(params, cfg, tok, cache,
+                                           jnp.int32(P + i))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        lg.append(np.asarray(logits[0, -1]))
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+    return out, np.stack(lg)
+
+
+def test_paged_engine_matches_dense_cache(qwen_reduced):
+    """Continuous-batching over the paged fp cache reproduces the dense
+    ring-cache generation exactly (same argmax tokens, logits to 1e-3)."""
+    cfg, params = qwen_reduced
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 12).tolist() for _ in range(3)]
+    gen = 6
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=2, block_size=8,
+                                   max_seq_len=32, record_logits=True)
+    out = eng.generate(prompts, max_new_tokens=gen)
+    for i, p in enumerate(prompts):
+        ref, ref_logits = _dense_reference(cfg, params, p, gen)
+        assert out[i] == ref, f"request {i} diverged"
+        np.testing.assert_allclose(eng.request_logits[i], ref_logits,
+                                   atol=1e-3, rtol=0)
+    s = eng.metrics.summary()
+    assert s["completed"] == 3 and s["gen_tokens"] == 18
+    # all pages recycled
+    assert eng.alloc.num_free == eng.num_blocks - 1
+
+
+def test_quantized_kv_within_tolerance(qwen_reduced):
+    """Codebook-quantized pages track the fp paged cache within the
+    documented tolerance (abs<=2.5, rel<=8% at 16 values/page)."""
+    cfg, params = qwen_reduced
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, 16).tolist() for _ in range(2)]
+    gen = 6
+    runs = {}
+    for kvq in (None, "kmeans_ls"):
+        eng = ContinuousBatchingEngine(params, cfg, max_slots=2, block_size=8,
+                                       max_seq_len=32, kv_quant=kvq,
+                                       kv_num_values=16, record_logits=True)
+        eng.generate(prompts, max_new_tokens=gen)
+        runs[kvq] = eng
+    fp, q = runs[None], runs["kmeans_ls"]
+    for i in range(len(prompts)):
+        d = np.abs(fp.request_logits[i] - q.request_logits[i])
+        scale = np.abs(fp.request_logits[i]).max()
+        assert d.max() <= 2.5, d.max()
+        assert d.max() / scale <= 0.08, (d.max(), scale)
+    s = q.metrics.summary()
+    # frozen pages store 4-bit codes + codebook: >= 3x smaller than fp pages
+    assert fp._pb["fp"] / q._pb["frozen"] >= 3.0
+    assert s.get("cache_compression_final", 0.0) > 1.0
+
+
+def test_engine_serves_quantized_weight_tree(qwen_reduced):
+    """PTQ'd params (QuantizedTensor leaves, stacked per-group codebooks)
+    serve through qmatmul's fused dequant path without densifying, matching
+    the dequantized-dense reference exactly."""
+    from repro.quant.ptq import dequantize_tree, quantize_tree
+
+    cfg, params = qwen_reduced
+    qtree, report = quantize_tree(
+        params, method="kmeans_ls", num_values=16, weighted=True,
+        skip_patterns=("ln", "norm", "router", "A_log", "mix", "dt_bias",
+                       "D_skip", "w0", "embed", "lm_head"))
+    assert any(r["bytes"] < r["dense_bytes"] for r in report.values())
+    prompt = np.random.default_rng(2).integers(0, cfg.vocab, 8).tolist()
+    out = {}
+    for tag, p in (("q", qtree), ("d", dequantize_tree(qtree))):
+        eng = ContinuousBatchingEngine(p, cfg, max_slots=1, block_size=8,
+                                       max_seq_len=16, record_logits=True)
+        eng.generate([prompt], max_new_tokens=4)
+        out[tag] = eng
+    np.testing.assert_allclose(out["q"].request_logits[0],
+                               out["d"].request_logits[0], atol=1e-3, rtol=0)
+    assert out["q"].outputs[0] == out["d"].outputs[0]
+
+
+def test_engine_rejects_oversized_request(qwen_reduced):
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=1, block_size=8,
+                                   max_seq_len=16)
+    ok = eng.submit(Request(id=7, prompt=(1,) * 12, max_new_tokens=8), 0.0)
+    assert not ok and 7 in eng.sched.rejected
