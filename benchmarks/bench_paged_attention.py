@@ -1,0 +1,121 @@
+"""Decode-step paged-attention microbench: fused Pallas kernel vs the
+gather (dense-expand) read path, on a frozen-heavy paged layer and on an
+fp-only one. Reports wall-clock tokens/s plus the modeled HBM bytes/token
+each path moves (the bandwidth a TPU decode step actually pays — off-TPU
+the fused kernel runs interpreted, so bytes/token is the portable metric).
+Emits CSV rows plus the standard BENCH_paged_attention.json artifact.
+
+    PYTHONPATH=src python -m benchmarks.run paged_attention
+    PYTHONPATH=src python -m benchmarks.bench_paged_attention --iters 5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from .common import bench_json, emit, timed
+
+ARCH = "qwen3_0_6b"
+
+
+def _build_state(cfg, *, B, mb, block_size, num_values, quantized, seed=0):
+    """One paged layer: B sequences over mb distinct pages each, every full
+    page frozen (device solver), last page of each sequence left hot."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serving.kv_cache import freeze_blocks, init_paged_layer
+
+    rng = np.random.default_rng(seed)
+    nb = B * mb + 1
+    leaf = init_paged_layer(
+        cfg, num_blocks=nb, block_size=block_size, batch=B, max_blocks=mb,
+        quantized=quantized, num_values=num_values, dtype=jnp.float32,
+        fused=True)
+    table = np.arange(1, nb).reshape(B, mb).astype(np.int32)
+    lens = np.full((B,), mb * block_size - block_size // 2 - 1, np.int32)
+    leaf = dataclasses.replace(
+        leaf,
+        k_fp=jnp.asarray(rng.normal(size=leaf.k_fp.shape), jnp.float32),
+        v_fp=jnp.asarray(rng.normal(size=leaf.v_fp.shape), jnp.float32),
+        block_table=jnp.asarray(table), seq_lens=jnp.asarray(lens))
+    if quantized:
+        full = [int(table[b, j]) for b in range(B)
+                for j in range(int(lens[b]) // block_size)]
+        leaf = freeze_blocks(leaf, full, method="kmeans_ls",
+                             num_values=num_values)
+    return leaf, table, lens
+
+
+def run(B=4, mb=4, block_size=16, num_values=16, iters=5, seed=0) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.kernels import modeled_hbm_bytes_per_token
+    from repro.models.attention import sdpa
+
+    cfg = get_reduced_config(ARCH)
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, Dh)), jnp.float32)
+    k1 = jnp.asarray(rng.normal(size=(B, 1, Hkv, Dh)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(size=(B, 1, Hkv, Dh)), jnp.float32)
+
+    @jax.jit
+    def fused_step(leaf, q, k, v):
+        return leaf.fused_decode(q, k, v)[1]
+
+    @jax.jit
+    def gather_step(leaf, q, k, v):
+        _, k_all, v_all, q_off, valid = leaf.update(k, v, 0)
+        return sdpa(q, k_all, v_all, causal=True, q_offset=q_off,
+                    kv_valid_len=valid)
+
+    results = []
+    for quantized in (True, False):
+        leaf, table, lens = _build_state(
+            cfg, B=B, mb=mb, block_size=block_size, num_values=num_values,
+            quantized=quantized, seed=seed)
+        frozen_frac = (float(np.asarray(leaf.blk_q).mean())
+                       if quantized else 0.0)
+        kv = f"kmeans_ls@{num_values}" if quantized else "fp"
+        bytes_kw = dict(block_size=block_size, n_kv_heads=Hkv, head_dim=Dh,
+                        num_values=num_values, quantized=quantized,
+                        packed=leaf.packed)
+        for path, fn in (("fused", fused_step), ("gather", gather_step)):
+            out, dt = timed(
+                lambda: jax.block_until_ready(fn(leaf, q, k1, v1)),
+                warmup=1, iters=iters)
+            bpt = modeled_hbm_bytes_per_token(
+                table, lens, np.asarray(leaf.blk_q), path=path, **bytes_kw)
+            row = {"path": path, "kv": kv, "tok_s": B / dt,
+                   "us_per_step": dt * 1e6, "hbm_bytes_per_token": bpt,
+                   "frozen_frac": frozen_frac, "batch": B, "max_blocks": mb,
+                   "block_size": block_size}
+            results.append(row)
+            emit(f"paged_attention/{kv}/{path}", dt * 1e6,
+                 f"tok_s={row['tok_s']:.1f};bytes_per_tok={bpt:.0f};"
+                 f"frozen={frozen_frac:.2f}")
+    by = {(r["kv"], r["path"]): r for r in results}
+    qkv = f"kmeans_ls@{num_values}"
+    ratio = (by[(qkv, "gather")]["hbm_bytes_per_token"]
+             / by[(qkv, "fused")]["hbm_bytes_per_token"])
+    emit("paged_attention/hbm_reduction", 0.0, f"gather/fused={ratio:.2f}x")
+    bench_json("paged_attention", results,
+               meta={"arch": ARCH, "reduced": True,
+                     "interpret": jax.default_backend() != "tpu",
+                     "hbm_reduction_frozen": ratio})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-blocks", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-values", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    run(B=args.batch, mb=args.max_blocks, block_size=args.block_size,
+        num_values=args.num_values, iters=args.iters)

@@ -1,6 +1,17 @@
 """Continuous-batching serving benchmark: tokens/s, TTFT, and p50/p99 TPOT
 under Poisson arrivals at several request rates, fp vs codebook-quantized
-KV pages. Emits CSV rows plus the standard BENCH_serving.json artifact.
+KV pages. Each rate is measured two ways:
+
+  cache="unbounded"  both engines get pages for every slot — isolates the
+      pure compute overhead quantization adds (freeze solves + dequant).
+  cache="matched"    both engines get the same KV byte budget (enough fp
+      pages for half the slots) and the trace arrives as one burst, so
+      admission control is the bottleneck; the quantized engine's frozen
+      pages cost ~7x less, the same bytes hold more pages, and more
+      requests decode concurrently — the throughput KV compression
+      actually buys at fixed cache memory.
+
+Emits CSV rows plus the standard BENCH_serving.json artifact.
 
     PYTHONPATH=src python -m benchmarks.run serving
     PYTHONPATH=src python -m benchmarks.bench_serving --rates 2,8 --gen 12
@@ -8,33 +19,69 @@ KV pages. Emits CSV rows plus the standard BENCH_serving.json artifact.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 from .common import bench_json, emit
 
 ARCH = "qwen3_0_6b"
 
 
-def _one(params, cfg, *, rate, n, prompt_len, gen, kv_quant, kv_num_values,
-         max_slots, block_size, seed):
-    from repro.serving import ContinuousBatchingEngine
-    from repro.serving.scheduler import poisson_trace
+def _budget_blocks(cfg, *, block_size, kv_quant, kv_num_values, bpr,
+                   max_slots):
+    """Page counts under a shared byte budget of ``max_slots/2`` requests'
+    fp pages. Steady state keeps one hot (fp) page per sequence and
+    freezes the rest, so quantized pages cost the blended per-request mix."""
+    from repro.serving import page_bytes
 
-    eng = ContinuousBatchingEngine(
+    budget = max(1, max_slots // 2) * bpr * page_bytes(
+        cfg, block_size, quantized=False, num_values=kv_num_values)["fp"]
+    pb = page_bytes(cfg, block_size, quantized=kv_quant is not None,
+                    num_values=kv_num_values)
+    blended = (pb["frozen"] * (bpr - 1) + pb["fp"]) / bpr
+    return int(budget // blended) + 1, budget
+
+
+def _engine(params, cfg, *, prompt_len, gen, kv_quant, kv_num_values,
+            max_slots, block_size, num_blocks=None):
+    from repro.serving import ContinuousBatchingEngine
+
+    return ContinuousBatchingEngine(
         params, cfg, max_slots=max_slots, block_size=block_size,
         max_seq_len=-(-(prompt_len + gen) // block_size) * block_size,
-        kv_quant=kv_quant, kv_num_values=kv_num_values)
+        kv_quant=kv_quant, kv_num_values=kv_num_values,
+        num_blocks=num_blocks)
+
+
+def _one(params, cfg, *, rate, n, prompt_len, gen, kv_quant, kv_num_values,
+         max_slots, block_size, seed, cache="unbounded"):
+    from repro.serving.scheduler import poisson_trace
+
+    num_blocks = budget = None
+    if cache == "matched":
+        bpr = -(-(prompt_len + gen) // block_size)
+        num_blocks, budget = _budget_blocks(
+            cfg, block_size=block_size, kv_quant=kv_quant,
+            kv_num_values=kv_num_values, bpr=bpr, max_slots=max_slots)
+    eng = _engine(params, cfg, prompt_len=prompt_len, gen=gen,
+                  kv_quant=kv_quant, kv_num_values=kv_num_values,
+                  max_slots=max_slots, block_size=block_size,
+                  num_blocks=num_blocks)
     trace = poisson_trace(n, rate, vocab=cfg.vocab, prompt_len=prompt_len,
                           max_new_tokens=gen, seed=seed)
+    if cache == "matched":      # burst: page budget, not arrivals, gates
+        trace = [dataclasses.replace(r, arrival_time=0.0) for r in trace]
     s = eng.run(trace)
     s.update(rate=rate, kv="fp" if kv_quant is None else
              f"{kv_quant}@{kv_num_values}", num_requests=n,
-             prompt_len=prompt_len, gen=gen)
+             prompt_len=prompt_len, gen=gen, cache=cache,
+             num_blocks=eng.num_blocks, cache_budget_bytes=budget)
     return s
 
 
-def run(rates=(2.0, 8.0), n=6, prompt_len=32, gen=12, kv_num_values=16,
+def run(rates=(2.0, 8.0), n=8, prompt_len=32, gen=12, kv_num_values=16,
         max_slots=4, block_size=16, seed=0) -> None:
     import jax
+    import numpy as np
 
     from repro import models
     from repro.configs import get_reduced_config
@@ -43,16 +90,52 @@ def run(rates=(2.0, 8.0), n=6, prompt_len=32, gen=12, kv_num_values=16,
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     results = []
     for kv_quant in (None, "kmeans_ls"):
-        for rate in rates:
-            s = _one(params, cfg, rate=rate, n=n, prompt_len=prompt_len,
-                     gen=gen, kv_quant=kv_quant, kv_num_values=kv_num_values,
-                     max_slots=max_slots, block_size=block_size, seed=seed)
-            results.append(s)
-            emit(f"serving/{s['kv']}/rate{rate:g}", s["tpot_p50_s"] * 1e6,
-                 f"tok_s={s['throughput_tok_s']:.1f};"
-                 f"ttft_p50_ms={s['ttft_p50_s']*1e3:.0f};"
-                 f"tpot_p99_ms={s['tpot_p99_s']*1e3:.1f};"
-                 f"compress={s.get('cache_compression_final', 1.0):.2f}x")
+        for cache in ("unbounded", "matched"):
+            # warm the shared jit caches at this pool geometry (prefill and
+            # decode at every block count, freeze solver shapes) so measured
+            # runs report steady-state serving
+            rng = np.random.default_rng(123)
+            nb = None
+            if cache == "matched":
+                bpr = -(-(prompt_len + gen) // block_size)
+                nb, _ = _budget_blocks(cfg, block_size=block_size,
+                                       kv_quant=kv_quant,
+                                       kv_num_values=kv_num_values, bpr=bpr,
+                                       max_slots=max_slots)
+            warm = _engine(params, cfg, prompt_len=prompt_len, gen=gen,
+                           kv_quant=kv_quant, kv_num_values=kv_num_values,
+                           max_slots=max_slots, block_size=block_size,
+                           num_blocks=nb)
+            # decreasing bursts cover every freeze-flush bucket (aligned
+            # prefills) on top of the prefill/decode block counts
+            for burst in (max_slots, 2, 1):
+                warm.generate([rng.integers(0, cfg.vocab, prompt_len).tolist()
+                               for _ in range(burst)], max_new_tokens=gen)
+            # matched is one burst scenario (arrivals are zeroed, so the
+            # nominal rate is irrelevant); best-of-reps de-noises shared
+            # hosts, since a burst run lasts only a few hundred ms
+            scenarios = ([("burst", r) for r in (rates[:1] * 3)]
+                         if cache == "matched"
+                         else [(f"rate{r:g}", r) for r in rates])
+            best = {}
+            for label, rate in scenarios:
+                s = _one(params, cfg, rate=rate, n=n, prompt_len=prompt_len,
+                         gen=gen, kv_quant=kv_quant,
+                         kv_num_values=kv_num_values, max_slots=max_slots,
+                         block_size=block_size, seed=seed, cache=cache)
+                s["trace"] = label
+                if (label not in best or s["throughput_tok_s"]
+                        > best[label]["throughput_tok_s"]):
+                    best[label] = s
+            for label, s in best.items():
+                results.append(s)
+                emit(f"serving/{s['kv']}/{cache}/{label}",
+                     s["tpot_p50_s"] * 1e6,
+                     f"tok_s={s['throughput_tok_s']:.1f};"
+                     f"ttft_p50_ms={s['ttft_p50_s']*1e3:.0f};"
+                     f"tpot_p99_ms={s['tpot_p99_s']*1e3:.1f};"
+                     f"pages={s['num_blocks']};"
+                     f"compress={s.get('cache_compression_final', 1.0):.2f}x")
     bench_json("serving", results,
                meta={"arch": ARCH, "reduced": True, "max_slots": max_slots,
                      "block_size": block_size, "kv_num_values": kv_num_values})
@@ -61,7 +144,7 @@ def run(rates=(2.0, 8.0), n=6, prompt_len=32, gen=12, kv_num_values=16,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rates", default="2,8")
-    ap.add_argument("--num-requests", type=int, default=6)
+    ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--kv-num-values", type=int, default=16)

@@ -7,7 +7,7 @@ import sys
 import time
 
 SUITES = ["nn_weights", "l1l2", "alpha_dist", "image", "synthetic",
-          "scaling", "kernels", "roofline", "serving"]
+          "scaling", "kernels", "roofline", "paged_attention", "serving"]
 
 
 def main() -> None:

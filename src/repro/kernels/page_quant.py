@@ -1,0 +1,142 @@
+"""Batched on-device page quantization for KV-cache freezing.
+
+PR 1 froze full pages by pulling them to host and running the paper's
+solvers one page at a time through `repro.core.quantize` (numpy CD /
+host-orchestrated k-means), which stalls the serving engine for the whole
+solve. This module runs the same clustering-based least-square recipe
+(Algorithm 3: fix the membership matrix by clustering, then solve the
+representative values by least squares) as one batched, jitted device
+computation: every (page, group, k/v) row of a freeze event is solved in a
+single dispatch, so the engine's freeze becomes an async device call that
+overlaps subsequent decode steps.
+
+Implementation, chosen for the serving hot loop:
+
+  - each row is sketched to <= ``sketch_mult * L`` equal-mass quantiles
+    *including both extremes* (the largest-magnitude KV values dominate
+    attention logits; dropping the tail measurably breaks serve-time logit
+    fidelity);
+  - the clustering is the exact dynamic program for 1-D k-means on the
+    sketch (`core.dp_optimal`'s method, vectorized over rows with O(1)
+    interval costs from prefix sums) — globally optimal and fully
+    deterministic, where restarted Lloyd is a local-optimum lottery whose
+    realization wobbles with batch shape;
+  - the final assignment (nearest center == midpoint intervals in 1-D) and
+    LS refit run on the *full* row: per-cluster means are the eq. 17-20
+    closed form on the chosen membership, so the reported codebook is the
+    exact least-squares solution for its intervals (Algorithm 3 step 2).
+
+The serving logit tolerance (abs<=2.5 / rel<=8% at 16 values) under this
+solver is asserted in tests/test_serving.py.
+
+lam-parameterized freezing (routing rows through the batched FISTA Pallas
+kernel in `kernels.fista_quant` plus a per-row lambda bisection to hit the
+4-bit budget) is the designed follow-on; count methods other than
+kmeans/kmeans_ls keep the host fallback in `serving.kv_cache`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_BIG = 1e30
+
+
+def _assign(rows, centers):
+    """Interval assignment: cluster id per value given sorted centers."""
+    mid = 0.5 * (centers[:, 1:] + centers[:, :-1])           # (N, L-1)
+    return jnp.sum(rows[:, :, None] > mid[:, None, :], axis=-1)
+
+
+def _seg_mean(rows, idx, centers, L):
+    """Per-cluster means (empty clusters keep their previous center)."""
+    oh = jax.nn.one_hot(idx, L, dtype=jnp.float32)           # (N, E, L)
+    num = jnp.einsum("re,rel->rl", rows, oh)
+    den = jnp.sum(oh, axis=1)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-20), centers)
+
+
+def _dp_centers(sketch, L):
+    """Exact 1-D k-means on sorted rows via DP over segment boundaries.
+
+    sketch: (R, Es) sorted. Returns (R, L) sorted centers (the segment
+    means of the optimal L-partition; empty segments inherit the previous
+    center). Interval SSE comes from prefix sums in O(1):
+    cost[j, i] = sum_{t in [j, i)} (s_t - mean)^2.
+    """
+    R, Es = sketch.shape
+    z = jnp.zeros((R, 1), jnp.float32)
+    p1 = jnp.concatenate([z, jnp.cumsum(sketch, axis=1)], axis=1)
+    p2 = jnp.concatenate([z, jnp.cumsum(sketch * sketch, axis=1)], axis=1)
+    i = jnp.arange(Es + 1)
+    n = jnp.maximum(i[None, :] - i[:, None], 1)              # (j, i)
+    s1 = p1[:, None, :] - p1[:, :, None]                     # (R, j, i)
+    s2 = p2[:, None, :] - p2[:, :, None]
+    cost = s2 - s1 * s1 / n
+    # j <= i are real (j == i is an empty segment at zero cost, which rows
+    # with < L distinct values need); j > i is unreachable
+    cost = jnp.where((i[None, :] >= i[:, None])[None],
+                     jnp.maximum(cost, 0.0), _BIG)
+
+    D = cost[:, 0, :]                                        # 1 segment
+    def step(D, _):
+        T = D[:, :, None] + cost                             # (R, j, i)
+        return jnp.min(T, axis=1), jnp.argmin(T, axis=1)
+    D, Js = lax.scan(step, D, None, length=L - 1)            # Js (L-1, R, Es+1)
+
+    b = jnp.full((R,), Es, jnp.int32)                        # backtrack
+    bounds = [b]
+    for k in range(L - 2, -1, -1):
+        b = Js[k][jnp.arange(R), b].astype(jnp.int32)
+        bounds.append(b)
+    bounds.append(jnp.zeros((R,), jnp.int32))
+    bnd = jnp.stack(bounds[::-1], axis=1)                    # (R, L+1) ascending
+    lo, hi = bnd[:, :-1], bnd[:, 1:]
+    cnt = (hi - lo).astype(jnp.float32)
+    seg = (jnp.take_along_axis(p1, hi, axis=1)
+           - jnp.take_along_axis(p1, lo, axis=1))
+    mean = seg / jnp.maximum(cnt, 1.0)
+    # empty segments: carry the running max so centers stay sorted
+    first = jnp.where(cnt[:, :1] > 0, mean[:, :1], sketch[:, :1])
+    mean = jnp.concatenate([first, jnp.where(cnt[:, 1:] > 0, mean[:, 1:],
+                                             -_BIG)], axis=1)
+    return lax.associative_scan(jnp.maximum, mean, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_values", "refit",
+                                             "sketch_mult"))
+def quantize_pages_device(
+    rows: jax.Array,        # (R, E) one row per (page, group, k/v) tensor
+    *,
+    num_values: int,
+    refit: bool = True,
+    sketch_mult: int = 4,   # DP runs on ~sketch_mult*L quantiles; DP cost
+                            # is O(L * (sketch_mult*L)^2) per row
+):
+    """Batched exact-sketch kmeans_ls. Returns (codes (R, E) uint8,
+    cb (R, L) f32).
+
+    Deterministic: the DP is the global optimum of 1-D k-means on the
+    quantile sketch, so results don't depend on batch composition or
+    seeding. Codebooks are sorted ascending and always exactly
+    ``num_values`` wide (empty clusters inherit their left neighbor,
+    mirroring the host solver's pad-to-width behavior).
+    """
+    R, E = rows.shape
+    L = num_values
+    rows = rows.astype(jnp.float32)
+    svals = jnp.sort(rows, axis=1)
+    Es = min(E, max(L * sketch_mult, 2))
+    # linspace ranks, *including both extremes* (see module docstring)
+    spos = jnp.round(jnp.linspace(0, E - 1, Es)).astype(jnp.int32)
+    centers = _dp_centers(svals[:, spos], L)
+    idx = _assign(rows, centers)
+    if refit:
+        # eq. 20 closed form on the full-row assignment: per-cluster
+        # (count-weighted) means == the LS refit on the interval support
+        # (membership fixed, values solved — Algorithm 3's step 2)
+        centers = _seg_mean(rows, idx, centers, L)
+    return idx.astype(jnp.uint8), centers.astype(jnp.float32)

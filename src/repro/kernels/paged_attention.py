@@ -1,0 +1,266 @@
+"""Fused paged-attention flash-decode kernel - Pallas TPU (serving hot path).
+
+One decode step reads the whole KV history of every batch slot. With the
+paged cache (repro.serving.kv_cache) that history lives in two pools: an fp
+pool for write-hot pages and a 4-bit codes + per-block codebook form for
+frozen pages (the paper's sparse-LSQ quantizers). The pre-existing read path
+(`PagedKVCache._gather`) dequantizes frozen pages to full width in HBM
+before attention ever runs, so quantization compressed storage but decode
+still crossed HBM at 32 bits/value.
+
+This kernel walks each sequence's block table on-core instead:
+
+  grid = (B,); block_table / kv_valid_len / blk_q ride in as scalar-prefetch
+  (SMEM) so page ids are known before the body runs. Per page the kernel
+  issues a *conditional* DMA - frozen pages copy packed codes + the two
+  (L,) codebooks, hot pages copy the fp tile - so cold context crosses HBM
+  at ~4 bits/value and is dequantized (`cb[codes]`) in VMEM. Attention is
+  online-softmax (flash) over pages with per-sequence `kv_valid_len`
+  masking; pages past `ceil(valid/bs)` skip their DMA entirely, which is
+  what makes short sequences in a long-table batch cheap.
+
+GQA is handled natively: a static per-kv-head loop computes (G, bs) score
+tiles without repeating K/V across the group. `window` is not supported
+(serving decodes are full-context); callers fall back to the gather path.
+
+The pure-jnp oracle is `ref.ref_paged_decode`; `_gather` + masked sdpa
+remains the CPU fallback read path. `modeled_hbm_bytes_per_token` is the
+analytic bytes model the paged-attention benchmark and tests use to compare
+the two paths' HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+BIG_NEG = -2.3819763e38
+
+
+# ------------------------------------------------------------ 4-bit packing
+
+
+def pack4(codes: jax.Array) -> jax.Array:
+    """Pack two 4-bit codes per byte along the last dim (must be even).
+
+    Split-half layout: byte i holds codes[i] (low nibble) and codes[i + D/2]
+    (high nibble), so unpacking is a concatenate - lane-friendly on TPU,
+    where a minor-dim interleave would shuffle within vector registers.
+    """
+    D = codes.shape[-1]
+    assert D % 2 == 0, f"pack4 needs an even last dim, got {D}"
+    lo, hi = codes[..., : D // 2], codes[..., D // 2:]
+    return (lo.astype(jnp.uint8) | (hi.astype(jnp.uint8) << 4))
+
+
+def unpack4(packed: jax.Array) -> jax.Array:
+    """Inverse of pack4: (..., Dc) uint8 -> (..., 2*Dc) int32 codes."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+# ------------------------------------------------------------ kernel body
+
+
+def _kernel(bs, Hkv, G, Dh, scale, softcap, quantized, packed,
+            table_ref, valid_ref, blkq_ref,
+            q_ref, kfp_ref, vfp_ref, kc_ref, vc_ref, kcb_ref, vcb_ref,
+            o_ref,
+            k_tile, v_tile, kc_tile, vc_tile, cb_tile, sems):
+    b = pl.program_id(0)
+    mb = table_ref.shape[1]
+    Hq = Hkv * G
+    valid = valid_ref[b]
+    n_pages = lax.div(valid + bs - 1, bs)
+
+    def load_page(j):
+        page = table_ref[b, j]
+
+        def copy_fp():
+            ck = pltpu.make_async_copy(kfp_ref.at[page], k_tile, sems.at[0])
+            cv = pltpu.make_async_copy(vfp_ref.at[page], v_tile, sems.at[1])
+            ck.start()
+            cv.start()
+            ck.wait()
+            cv.wait()
+
+        if not quantized:
+            copy_fp()
+            return
+        frozen = blkq_ref[page] != 0
+
+        @pl.when(frozen)
+        def _():
+            # ~4 bits/value across the wire: packed codes + two (L,) codebooks
+            cks = [pltpu.make_async_copy(kc_ref.at[page], kc_tile, sems.at[0]),
+                   pltpu.make_async_copy(vc_ref.at[page], vc_tile, sems.at[1]),
+                   pltpu.make_async_copy(kcb_ref.at[page], cb_tile.at[0],
+                                         sems.at[2]),
+                   pltpu.make_async_copy(vcb_ref.at[page], cb_tile.at[1],
+                                         sems.at[3])]
+            for c in cks:
+                c.start()
+            for c in cks:
+                c.wait()
+            kc = kc_tile[...]
+            vc = vc_tile[...]
+            k_idx = unpack4(kc) if packed else kc.astype(jnp.int32)
+            v_idx = unpack4(vc) if packed else vc.astype(jnp.int32)
+            k_tile[...] = jnp.take(cb_tile[0], k_idx.reshape(-1), axis=0
+                                   ).reshape(bs, Hkv, Dh).astype(k_tile.dtype)
+            v_tile[...] = jnp.take(cb_tile[1], v_idx.reshape(-1), axis=0
+                                   ).reshape(bs, Hkv, Dh).astype(v_tile.dtype)
+
+        @pl.when(jnp.logical_not(frozen))
+        def _():
+            copy_fp()
+
+    q = q_ref[0].astype(jnp.float32)                       # (Hq, Dh)
+
+    def body(j, carry):
+        m, l, acc = carry
+
+        @pl.when(j < n_pages)
+        def _():
+            load_page(j)
+
+        # Positions >= valid (incl. whole skipped pages reading stale VMEM)
+        # are masked to BIG_NEG below, so they contribute exp(BIG_NEG-m)=0.
+        kt = k_tile[...].astype(jnp.float32)               # (bs, Hkv, Dh)
+        vt = v_tile[...].astype(jnp.float32)
+        s = jnp.concatenate(
+            [lax.dot_general(q[h * G:(h + 1) * G], kt[:, h, :],
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+             for h in range(Hkv)], axis=0) * scale         # (Hq, bs)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = j * bs + lax.broadcasted_iota(jnp.int32, (Hq, bs), 1)
+        mask = pos < valid
+        s = jnp.where(mask, s, BIG_NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jnp.concatenate(
+            [lax.dot_general(p[h * G:(h + 1) * G], vt[:, h, :],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+             for h in range(Hkv)], axis=0)                 # (Hq, Dh)
+        return m_new, l_new, acc * corr + pv
+
+    init = (jnp.full((Hq, 1), BIG_NEG, jnp.float32),
+            jnp.zeros((Hq, 1), jnp.float32),
+            jnp.zeros((Hq, Dh), jnp.float32))
+    _, l, acc = lax.fori_loop(0, mb, body, init)
+    o_ref[0] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+
+
+# ------------------------------------------------------------ entry point
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "quantized", "packed", "interpret")
+)
+def paged_decode_attention(
+    q: jax.Array,            # (B, Hq, Dh) this step's queries
+    k_fp: jax.Array,         # (nb, bs, Hkv, Dh) fp page pool
+    v_fp: jax.Array,         # (nb, bs, Hkv, Dh)
+    k_codes: jax.Array,      # (nb, bs, Hkv, Dc) packed 4-bit (or u8) codes
+    v_codes: jax.Array,      # (nb, bs, Hkv, Dc)
+    k_cb: jax.Array,         # (nb, L) per-block codebooks, f32
+    v_cb: jax.Array,         # (nb, L)
+    blk_q: jax.Array,        # (nb,) page is served from codes
+    block_table: jax.Array,  # (B, mb) page ids (0 = null page)
+    kv_valid_len: jax.Array,  # (B,) tokens valid per sequence (>= 1)
+    *,
+    softcap: float | None = None,
+    quantized: bool = False,
+    packed: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused flash-decode over the paged pools. Returns (B, Hq, Dh)."""
+    B, Hq, Dh = q.shape
+    nb, bs, Hkv, _ = k_fp.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    Dc = k_codes.shape[-1]
+    L = k_cb.shape[1]
+    scale = float(1.0 / np.sqrt(Dh))
+
+    qspec = pl.BlockSpec((1, Hq, Dh), lambda b, *_: (b, 0, 0))
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[qspec, hbm, hbm, hbm, hbm, hbm, hbm],
+        out_specs=pl.BlockSpec((1, Hq, Dh), lambda b, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bs, Hkv, Dh), k_fp.dtype),
+            pltpu.VMEM((bs, Hkv, Dh), v_fp.dtype),
+            pltpu.VMEM((bs, Hkv, Dc), jnp.uint8),
+            pltpu.VMEM((bs, Hkv, Dc), jnp.uint8),
+            pltpu.VMEM((2, L), jnp.float32),
+            pltpu.SemaphoreType.DMA((4,)),
+        ],
+    )
+    kern = functools.partial(_kernel, bs, Hkv, G, Dh, scale, softcap,
+                             quantized, packed)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), kv_valid_len.astype(jnp.int32),
+      blk_q.astype(jnp.int32), q, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb)
+
+
+# ------------------------------------------------------------ bytes model
+
+
+def modeled_hbm_bytes_per_token(
+    block_table, seq_lens, blk_q, *, block_size: int, n_kv_heads: int,
+    head_dim: int, num_values: int, quantized: bool, packed: bool,
+    path: str, fp_bytes: int = 4,
+) -> float:
+    """Analytic HBM read bytes per decoded token, one attention layer.
+
+    ``seq_lens`` are pre-write lengths (the kernel sees valid = len + 1).
+    The gather path materializes every table column for every row at full
+    width (frozen pages' reconstructions live in the fp pool, so every page
+    crosses HBM at fp_bytes/value); the fused path reads, per sequence,
+    only ``ceil((len+1)/bs)`` pages, each as *either* codes+codebooks
+    (frozen, ~4 bits/value) or fp (hot). K and V both counted; q/output
+    traffic is identical for both paths and excluded.
+    """
+    table = np.asarray(block_table)
+    lens = np.asarray(seq_lens)
+    bq = np.asarray(blk_q).astype(bool).reshape(-1)
+    B, mb = table.shape
+    bs = block_size
+    elems = bs * n_kv_heads * head_dim
+    fp_page = 2 * elems * fp_bytes
+    Dc = head_dim // 2 if packed else head_dim
+    code_page = 2 * (bs * n_kv_heads * Dc + num_values * 4)
+    if path == "gather":
+        return float(mb * fp_page)
+    assert path == "fused", path
+    total = 0
+    for b in range(B):
+        n_pages = -(-(int(lens[b]) + 1) // bs)
+        for j in range(min(n_pages, mb)):
+            frozen = quantized and bq[table[b, j]]
+            total += code_page if frozen else fp_page
+    return total / B

@@ -13,6 +13,50 @@ def ref_quant_matmul(x, idx, codebook, out_dtype=None):
     return out.astype(out_dtype or x.dtype)
 
 
+def ref_paged_decode(q, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb, blk_q,
+                     block_table, kv_valid_len, *, softcap=None,
+                     quantized=False, packed=True):
+    """Dense oracle for kernels.paged_attention: materialize every table
+    page at full width (dequantizing frozen ones), then masked softmax.
+    Numerically the same math as `PagedKVCache._gather` + decode-shaped
+    `models.attention.sdpa`."""
+    from .paged_attention import BIG_NEG, unpack4
+
+    B, Hq, Dh = q.shape
+    nb, bs, Hkv, _ = k_fp.shape
+    G = Hq // Hkv
+    t = block_table
+    mb = t.shape[1]
+
+    def expand(fp, codes, cb):
+        pages = fp[t]                                   # (B, mb, bs, H, D)
+        if quantized:
+            c = codes[t]
+            if packed:
+                c = unpack4(c)
+            deq = jnp.take_along_axis(
+                cb[t], c.reshape(B, mb, -1).astype(jnp.int32), axis=-1
+            ).reshape(c.shape)
+            frozen = blk_q.astype(bool)[t][:, :, None, None, None]
+            pages = jnp.where(frozen, deq.astype(pages.dtype), pages)
+        return pages.reshape(B, mb * bs, Hkv, Dh)
+
+    k_all = expand(k_fp, k_codes, k_cb).astype(jnp.float32)
+    v_all = expand(v_fp, v_codes, v_cb).astype(jnp.float32)
+    qr = q.astype(jnp.float32).reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_all,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(Dh * 1.0)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(mb * bs)[None]                     # (1, S)
+    mask = pos < jnp.asarray(kv_valid_len, jnp.int32)[:, None]
+    s = jnp.where(mask[:, None, None], s, BIG_NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_all)
+    return out.reshape(B, Hq, Dh).astype(q.dtype)
+
+
 def ref_fista(w, d, n, lam, eta, *, n_iters: int = 300):
     """FISTA with the same iterates as kernels.fista_quant, on (B, M) arrays."""
     B, M = w.shape

@@ -88,7 +88,8 @@ def _verify_kv_quant(params, cfg, args):
             params, cfg, max_slots=args.max_slots,
             block_size=args.block_size, max_seq_len=args.max_seq_len,
             kv_quant=kvq, kv_num_values=args.kv_num_values,
-            record_logits=True)
+            record_logits=True, attn_impl=args.attn_impl,
+            freeze_async=False)     # deterministic install step for replay
         outs.append(eng.generate(prompts, max_new_tokens=args.gen))
         engines.append(eng)
     fp, q = engines
@@ -142,7 +143,7 @@ def _run_continuous(args):
     eng = ContinuousBatchingEngine(
         params, cfg, max_slots=args.max_slots, block_size=args.block_size,
         max_seq_len=args.max_seq_len, kv_quant=args.kv_quant,
-        kv_num_values=args.kv_num_values)
+        kv_num_values=args.kv_num_values, attn_impl=args.attn_impl)
     trace = poisson_trace(args.num_requests, args.request_rate,
                           vocab=cfg.vocab, prompt_len=args.prompt_len,
                           max_new_tokens=args.gen, seed=args.seed)
@@ -165,6 +166,12 @@ def _run_continuous(args):
     occ = s.get("cache_occupancy_mean", 0.0)
     print(f"[serve] cache occupancy mean {occ:.1%} "
           f"max {s.get('cache_occupancy_max', 0.0):.1%}")
+    print(f"[serve] attn_impl={s['attn_impl']} | freeze: "
+          f"{s['freeze_dispatches']} dispatches -> {s['freeze_installs']} "
+          f"installs, {s['host_page_solves']} host page solves, "
+          f"{s['freeze_overlap_steps']} decode steps ran between dispatch "
+          f"and install | gather window <= {s['max_gather_blocks']} blocks "
+          f"(of {eng.max_blocks})")
     if args.kv_quant:
         print(f"[serve] cache bytes: frozen-page compression "
               f"{s['page_compression']:.1f}x per page; measured mean "
@@ -197,6 +204,10 @@ def main():
     ap.add_argument("--kv-quant", default=None,
                     help="page codebook method (kmeans_ls, tv, kmeans, dtc)")
     ap.add_argument("--kv-num-values", type=int, default=16)
+    ap.add_argument("--attn-impl", choices=("auto", "fused", "gather"),
+                    default="auto",
+                    help="decode read path: fused Pallas paged-attention "
+                         "kernel vs dense gather (auto: fused on TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.engine == "continuous" and args.request_rate <= 0:

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.quant.serve import qmatmul
 from repro.runtime.hints import hint
-from .cache import as_adapter
+from .cache import as_adapter, supports_fused_decode
 from .norms import init_rms, rms_norm
 from .rope import apply_mrope, apply_rope
 
@@ -241,11 +241,19 @@ def attention(params, cfg, spec, x, positions, *, cache=None, cache_index=None,
 
     new_cache = None
     if cache is not None:
-        new_cache, k_all, v_all, q_off, valid = as_adapter(cache).update(
-            k, v, cache_index)
-        out = sdpa(q, k_all, v_all, causal=causal, window=spec.window,
-                   softcap=cfg.attn_softcap, q_offset=q_off,
-                   kv_valid_len=valid, q_chunk=cfg.attn_q_chunk)
+        adapter = as_adapter(cache)
+        if supports_fused_decode(adapter, S, spec.window):
+            # paged decode hot path: the adapter attends against its own
+            # storage (Pallas flash-decode kernel, frozen pages dequantized
+            # in VMEM) instead of gathering dense K/V through HBM
+            new_cache, out = adapter.fused_decode(
+                q, k, v, softcap=cfg.attn_softcap)
+        else:
+            new_cache, k_all, v_all, q_off, valid = adapter.update(
+                k, v, cache_index)
+            out = sdpa(q, k_all, v_all, causal=causal, window=spec.window,
+                       softcap=cfg.attn_softcap, q_offset=q_off,
+                       kv_valid_len=valid, q_chunk=cfg.attn_q_chunk)
     else:
         out = sdpa(q, k, v, causal=causal, window=spec.window,
                    softcap=cfg.attn_softcap, q_chunk=cfg.attn_q_chunk)

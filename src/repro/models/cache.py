@@ -15,11 +15,31 @@ Built-in adapters wrap the plain-dict caches produced by
 ``lax.scan`` stays a dict; any object exposing ``.update`` (duck-typed) is
 used as-is, which is how the paged serving cache plugs in without models
 importing serving code.
+
+Fused-decode extension (optional): an adapter may additionally expose
+
+    new_cache, out = adapter.fused_decode(q, k, v, softcap=...)
+
+guarded by a truthy ``use_fused_decode`` attribute. When present, attention
+skips the gather-then-sdpa read for single-token decode steps and lets the
+adapter run attention against its own storage — the paged serving cache
+uses this to run the Pallas flash-decode kernel that dequantizes frozen
+pages in VMEM instead of materializing them in HBM. ``supports_fused_decode``
+below is the one gate attention consults; adapters without the extension
+fall through to ``update`` + sdpa unchanged.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def supports_fused_decode(adapter, seq_len: int, window) -> bool:
+    """True when this decode step can take the adapter's fused-attention
+    path: single-token, full-context (no sliding window), and the adapter
+    opted in via ``use_fused_decode``."""
+    return (seq_len == 1 and window is None
+            and bool(getattr(adapter, "use_fused_decode", False)))
 
 
 class DenseRingCache:

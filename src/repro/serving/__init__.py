@@ -1,14 +1,15 @@
 """Continuous-batching serving subsystem: scheduler + paged
 (codebook-quantized) KV cache + engine + metrics."""
 from .engine import ContinuousBatchingEngine
-from .kv_cache import (BlockAllocator, PagedKVCache, freeze_blocks,
-                       init_paged_cache, page_bytes, thaw_blocks, with_tables)
+from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
+                       freeze_blocks, freeze_markers, init_paged_cache,
+                       page_bytes, thaw_blocks, with_tables)
 from .metrics import MetricsCollector, percentile
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
 
 __all__ = [
     "ContinuousBatchingEngine", "ContinuousBatchingScheduler", "Request",
     "SeqState", "BlockAllocator", "PagedKVCache", "init_paged_cache",
-    "freeze_blocks", "thaw_blocks", "with_tables", "page_bytes",
-    "MetricsCollector", "percentile",
+    "freeze_blocks", "freeze_markers", "thaw_blocks", "with_tables",
+    "page_bytes", "DEVICE_FREEZE_METHODS", "MetricsCollector", "percentile",
 ]

@@ -3,13 +3,21 @@ codebook-quantized) KV cache.
 
 One engine iteration = admit new prefills (they join the in-flight batch),
 one fused decode step over every active slot, freeze any page that just
-filled (host-side sparse-LSQ quantization), evict finished sequences and
-recycle their pages. The decode batch is a fixed (max_slots, 1) shape so
-the jitted step compiles once; idle slots write to the null page and their
-logits are ignored. Prefill runs per-request at block-rounded lengths
-(bounded retraces) — the new sequence decodes together with the rest of
-the batch in the same iteration, which is iteration-level (continuous)
-batching.
+filled (batched on-device sparse-LSQ quantization, dispatched async so
+decode keeps running while it completes), evict finished sequences and
+recycle their pages. The decode batch is a fixed (max_slots, 1) token
+shape; the gathered KV window is clamped to the blocks the longest live
+sequence needs (bounded retraces, one per distinct block count), so short
+batches parked next to idle slots don't pay ``max_blocks`` bandwidth.
+Idle slots write to the null page and their logits are ignored. Prefill
+runs per-request at block-rounded lengths — the new sequence decodes
+together with the rest of the batch in the same iteration, which is
+iteration-level (continuous) batching.
+
+``attn_impl`` picks the decode read path: "fused" routes every decode step
+through the Pallas paged-attention kernel (frozen pages dequantized in
+VMEM), "gather" expands pages to dense K/V in HBM first, "auto" fuses on
+TPU and gathers elsewhere (the kernel only interprets off-TPU).
 
 Weights flow through ``repro.quant.serve.qmatmul`` untouched: dense params
 hit the plain matmul path, PTQ'd QuantizedTensor leaves would hit the fused
@@ -17,6 +25,7 @@ dequant kernel — the engine is agnostic.
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
 
@@ -25,10 +34,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
-from .kv_cache import (BlockAllocator, freeze_blocks, init_paged_cache,
+from .kv_cache import (DEVICE_FREEZE_METHODS, BlockAllocator, dispatch_freeze,
+                       freeze_blocks, init_paged_cache, install_freeze,
                        merge_pools, page_bytes, thaw_blocks, with_tables)
 from .metrics import MetricsCollector
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_step(params, toks, tree, *, cfg):
+    return models.prefill(params, cfg, {"tokens": toks}, tree)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_step_fn(params, toks, tree, lens, *, cfg):
+    return models.decode_step(params, cfg, toks, tree, lens)
 
 
 class _Slot:
@@ -48,8 +68,13 @@ class ContinuousBatchingEngine:
                  block_size: int = 16, max_seq_len: int = 256,
                  num_blocks: int | None = None, kv_quant: str | None = None,
                  kv_num_values: int = 16, max_queue: int = 256,
-                 eos_id: int | None = None, record_logits: bool = False):
+                 eos_id: int | None = None, record_logits: bool = False,
+                 attn_impl: str = "auto", freeze_async: bool = True):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
+        assert attn_impl in ("auto", "fused", "gather"), attn_impl
+        if attn_impl == "auto":
+            attn_impl = "fused" if jax.default_backend() == "tpu" else "gather"
+        self.attn_impl = attn_impl
         if kv_quant is not None:
             from repro.core import COUNT_METHODS
 
@@ -66,13 +91,20 @@ class ContinuousBatchingEngine:
                            else max_slots * self.max_blocks + 1)
         self.kv_quant = kv_quant
         self.kv_num_values = kv_num_values
+        # async freezing: dispatch the device solve, keep serving the exact
+        # fp page until the result is ready, then install. Sync freezing
+        # installs at dispatch (deterministic step at which codes take
+        # over — what logit-replay verification wants).
+        self.freeze_async = (freeze_async and kv_quant is not None
+                             and kv_quant in DEVICE_FREEZE_METHODS)
         self.eos_id = eos_id
         self.record_logits = record_logits
 
         self.tree = init_paged_cache(
             cfg, num_blocks=self.num_blocks, block_size=block_size,
             batch=max_slots, max_blocks=self.max_blocks,
-            quantized=kv_quant is not None, num_values=kv_num_values)
+            quantized=kv_quant is not None, num_values=kv_num_values,
+            fused=attn_impl == "fused")
         self.alloc = BlockAllocator(self.num_blocks)
         self.sched = ContinuousBatchingScheduler(
             max_slots=max_slots, block_size=block_size, max_queue=max_queue)
@@ -84,13 +116,23 @@ class ContinuousBatchingEngine:
         self.request_logits: dict[int, np.ndarray] = {}
         self._pb = page_bytes(cfg, block_size, quantized=kv_quant is not None,
                               num_values=kv_num_values)
+        # freeze/decode overlap accounting: freezes dispatch async to the
+        # device and install once ready (_poll_freezes); until then frozen
+        # pages serve fp, so decode has no data dependency on the solve.
+        # host_page_solves counts fallback per-page numpy solves (0 in the
+        # kmeans_ls steady state).
+        self.counters = {"freeze_dispatches": 0, "freeze_installs": 0,
+                         "host_page_solves": 0, "decode_steps": 0,
+                         "freeze_inflight_steps": 0, "freeze_overlap_steps": 0,
+                         "freeze_pending_max": 0, "max_gather_blocks": 0}
+        self._pending_freezes: list[tuple[int, object]] = []
+        self._freeze_bids: list[int] = []   # queued for the next flush
+        self._frozen_pages: set[int] = set()   # installed (codes serving)
 
-        self._prefill_fn = jax.jit(
-            lambda p, toks, tree: models.prefill(p, cfg, {"tokens": toks},
-                                                 tree))
-        self._decode_fn = jax.jit(
-            lambda p, toks, tree, lens: models.decode_step(p, cfg, toks,
-                                                           tree, lens))
+        # module-level jits keyed on the (hashable) config: engines of the
+        # same geometry share compiles instead of retracing per instance
+        self._prefill_fn = functools.partial(_prefill_step, cfg=cfg)
+        self._decode_fn = functools.partial(_decode_step_fn, cfg=cfg)
 
     # ------------------------------------------------------------ intake
 
@@ -122,7 +164,9 @@ class ContinuousBatchingEngine:
         ppad = -(-P // self.block_size) * self.block_size
         toks = np.zeros((1, ppad), np.int32)
         toks[0, :P] = req.prompt
-        tree1 = with_tables(self.tree, self.table[slot:slot + 1],
+        # clamp the table to the blocks this prompt actually writes/reads
+        tree1 = with_tables(self.tree,
+                            self.table[slot:slot + 1, :ppad // self.block_size],
                             np.zeros((1,), np.int32))
         logits, new1 = self._prefill_fn(self.params, jnp.asarray(toks), tree1)
         self.tree = merge_pools(self.tree, new1)
@@ -143,10 +187,18 @@ class ContinuousBatchingEngine:
         active = self.sched.active_slots()
         if not active:
             return
+        self.counters["decode_steps"] += 1
+        self._poll_freezes()
         toks = np.zeros((len(self.slots), 1), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].last_token
-        tree = with_tables(self.tree, self.table, self.lens)
+        # gather only the blocks the longest live sequence needs this step
+        # (idle slots sit at length 0); retraces are bounded by max_blocks
+        need = int(self.lens.max()) + 1
+        mb_used = max(1, -(-need // self.block_size))
+        self.counters["max_gather_blocks"] = max(
+            self.counters["max_gather_blocks"], mb_used)
+        tree = with_tables(self.tree, self.table[:, :mb_used], self.lens)
         lens = jnp.asarray(self.lens)
         logits, new = self._decode_fn(self.params, jnp.asarray(toks), tree,
                                       lens)
@@ -172,18 +224,79 @@ class ContinuousBatchingEngine:
         for st in finished:
             self._finish(st, now)
 
+    def _poll_freezes(self, drain: bool = False) -> None:
+        """Install completed freezes; count the ones still overlapping this
+        decode step. drain=True blocks on the remainder (end of run)."""
+        still = []
+        for step0, pending in self._pending_freezes:
+            if drain and not pending.is_ready():
+                jax.block_until_ready(pending.markers())
+            if pending.is_ready():
+                self.tree = install_freeze(self.tree, pending)
+                self._frozen_pages.update(
+                    int(b) for b in pending.bids[pending.keep])
+                self.counters["freeze_installs"] += 1
+                self.counters["freeze_overlap_steps"] += (
+                    self.counters["decode_steps"] - step0)
+            else:
+                self.counters["freeze_inflight_steps"] += 1
+                still.append((step0, pending))
+        self._pending_freezes = still
+
     def _freeze(self, slot: int) -> None:
-        """Quantize pages of this sequence that just became full."""
+        """Queue this sequence's just-filled pages for quantization; the
+        engine iteration flushes the whole batch as ONE device dispatch
+        (_flush_freezes), so slots whose pages fill at the same step share
+        a solve."""
         if self.kv_quant is None:
             return
         s = self.slots[slot]
         full = int(self.lens[slot]) // self.block_size
         if full > s.frozen_upto:
-            bids = [int(self.table[slot, j])
-                    for j in range(s.frozen_upto, full)]
-            self.tree = freeze_blocks(self.tree, bids, method=self.kv_quant,
-                                      num_values=self.kv_num_values)
+            self._freeze_bids.extend(int(self.table[slot, j])
+                                     for j in range(s.frozen_upto, full))
             s.frozen_upto = full
+
+    def _flush_freezes(self) -> None:
+        """One batched solve for every page queued this iteration.
+
+        kmeans_ls/kmeans solve on device; with freeze_async the dispatch
+        returns as soon as the work is enqueued and the pages keep serving
+        fp until _poll_freezes installs the codes — decode steps in between
+        carry no data dependency on the solve."""
+        if not self._freeze_bids:
+            return
+        # cap pages per flush: a prefill burst's worth of pages solved as
+        # one chunk would run long enough to delay the next decode steps;
+        # the remainder flushes next iteration (pages serve exact fp until
+        # then, so correctness is unaffected)
+        take = min(len(self._freeze_bids), 4)
+        bids, self._freeze_bids = (self._freeze_bids[:take],
+                                   self._freeze_bids[take:])
+        if self.kv_quant in DEVICE_FREEZE_METHODS:
+            # pad to a power-of-two page count (repeating one page is a
+            # no-op at install) so the jitted solver compiles a handful of
+            # shapes instead of one per distinct flush size; the host
+            # fallback solves per page, where a duplicate is pure waste
+            bucket = 1 << (len(bids) - 1).bit_length()
+            bids = bids + [bids[-1]] * (bucket - len(bids))
+        if self.freeze_async:
+            pending = dispatch_freeze(self.tree, bids,
+                                      num_values=self.kv_num_values,
+                                      refit=self.kv_quant == "kmeans_ls")
+            self._pending_freezes.append(
+                (self.counters["decode_steps"], pending))
+            self.counters["freeze_pending_max"] = max(
+                self.counters["freeze_pending_max"],
+                len(self._pending_freezes))
+        else:
+            self.tree = freeze_blocks(self.tree, bids,
+                                      method=self.kv_quant,
+                                      num_values=self.kv_num_values,
+                                      stats=self.counters)
+            self._frozen_pages.update(bids)
+            self.counters["freeze_installs"] += 1
+        self.counters["freeze_dispatches"] += 1
 
     def _finish(self, st: SeqState, now: float) -> None:
         slot, s = st.slot, self.slots[st.slot]
@@ -191,6 +304,14 @@ class ContinuousBatchingEngine:
         if self.record_logits and s.logits:
             self.request_logits[st.req.id] = np.stack(s.logits)
         self.metrics.finish(st.req.id, now)
+        # freed pages may be reallocated before an in-flight solve lands —
+        # forget them (queued or dispatched) so a stale install can't mark
+        # a reused page frozen
+        freed = set(s.blocks)
+        self._freeze_bids = [b for b in self._freeze_bids if b not in freed]
+        self._frozen_pages -= freed
+        for _, pending in self._pending_freezes:
+            pending.drop(s.blocks)
         self.tree = thaw_blocks(self.tree, s.blocks)
         self.alloc.free(s.blocks)
         self.table[slot] = 0
@@ -200,7 +321,9 @@ class ContinuousBatchingEngine:
 
     def _sample_cache(self) -> None:
         allocated = (self.num_blocks - 1) - self.alloc.num_free
-        frozen = sum(s.frozen_upto for s in self.slots)
+        # count *installed* pages: queued/in-flight solves still serve fp
+        # at full width, so they must not book frozen-page bytes yet
+        frozen = len(self._frozen_pages)
         actual = (frozen * self._pb["frozen"]
                   + (allocated - frozen) * self._pb["fp"])
         self.metrics.sample_cache(allocated / (self.num_blocks - 1),
@@ -229,12 +352,20 @@ class ContinuousBatchingEngine:
                 continue
             for st in self.sched.schedule(self.alloc.num_free):
                 self._do_prefill(st, now_fn)
+            # one batched solve for the pages the prefills (and the
+            # previous iteration's decode) just filled, before this
+            # iteration's decode reads them
+            self._flush_freezes()
             self._decode_step(now_fn)
             self._sample_cache()
+        self._flush_freezes()
+        self._poll_freezes(drain=True)      # land any still-computing solves
         out = self.metrics.summary()
         # steady-state per-page ratio: what a fully frozen cache saves
         out["page_compression"] = self._pb["fp"] / self._pb["frozen"]
         out["rejected"] = len(self.sched.rejected)
+        out["attn_impl"] = self.attn_impl
+        out.update(self.counters)
         return out
 
     def generate(self, prompts: list[list[int]], max_new_tokens: int) -> dict:

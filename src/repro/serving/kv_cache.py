@@ -1,5 +1,5 @@
 """Paged KV cache: fixed-size blocks, a free-list allocator, per-sequence
-block tables, and optional codebook-quantized pages.
+block tables, codebook-quantized pages, and a fused decode read path.
 
 Layout (per attention layer, leading group axis added by the stacked model
 cache exactly like ``transformer.init_lm_cache``):
@@ -7,10 +7,12 @@ cache exactly like ``transformer.init_lm_cache``):
   k_fp/v_fp     (nb, bs, Hkv, Dh)  fp pages — the write-hot pool; every
                 token lands here first.
   k_codes/...   (nb, bs, Hkv, Dc)  uint8 codes for quantized pages
-                (Dc = Dh/2 when two 4-bit codes pack per byte).
+                (Dc = Dh/2 when two 4-bit codes pack per byte, split-half
+                layout — see kernels.paged_attention.pack4).
   k_cb/v_cb     (nb, L) f32        per-block codebooks from the paper's
                 solvers (kmeans_ls / tv via repro.core.quantize).
-  blk_q         (nb,) bool         page i is served from codes, not fp.
+  blk_q         (nb,) bool         page i is frozen: codes are
+                authoritative, fp holds their reconstruction.
   block_table   (B, mb) int32      per-sequence page ids (0 = null page).
   seq_lens      (B,) int32         per-sequence lengths (write positions).
 
@@ -18,23 +20,47 @@ Block 0 is reserved as the null page: idle batch slots point every table
 entry at it, so their (masked) decode writes land in the trash instead of a
 live page.
 
-Writes always go to the fp pool inside the jitted step; the engine freezes
-a page once it is full by running the paper's quantizer on the host and
-scattering codes + codebook back (``quantize_page`` / ``freeze_blocks``).
-Reads overlay: pages flagged in ``blk_q`` dequantize ``cb[codes]``, the
-rest gather fp — so the hot (partial) page stays exact while cold context
-crosses HBM at ~4 bits/value.
+Writes always go to the fp pool inside the jitted step. Freezing a full
+page is split into ``dispatch_freeze`` — every (page, group, k/v) row of
+the event batched through the on-device kmeans_ls solver
+(``kernels.quantize_pages_device``) in one async dispatch per layer — and
+``install_freeze``, which scatters the finished codes/codebooks and flips
+``blk_q``. Between the two, the pages keep serving from the exact fp pool,
+so decode steps carry no data dependency on the solve and truly overlap
+it; no host numpy runs in the steady state (non-kmeans methods keep the
+per-page host fallback).
 
-``PagedKVCache.update`` implements the adapter protocol of
-``repro.models.cache``; model code never learns about pages.
+Reads have two paths:
+
+  fused (TPU decode hot path)   ``fused_decode`` hands the query plus the
+      raw pools/table to ``kernels.paged_decode_attention``, which walks
+      the block table on-core, DMAs frozen pages as packed codes +
+      codebooks, dequantizes in VMEM, and runs online-softmax attention.
+      Frozen pages cross the wire at ~4 bits/value.
+
+  gather (CPU / prefill / fallback)   ``update`` expands every table page
+      to full width from the fp pool and returns dense K/V for the
+      caller's sdpa. Installing a freeze *materializes* ``cb[codes]`` into
+      the frozen pages' fp rows, so this path serves exactly the quantized
+      values with a decode graph identical to the unquantized one — it is
+      the reference the fused kernel is validated against, paying fp
+      bandwidth where the kernel pays ~4 bits/value.
+
+``PagedKVCache`` implements the adapter protocol of ``repro.models.cache``
+(plus its optional fused-decode extension); model code never learns about
+pages.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import (default_interpret, pack4, paged_decode_attention,
+                           quantize_pages_device, unpack4)
 
 # ------------------------------------------------------------- allocator
 
@@ -71,16 +97,14 @@ class BlockAllocator:
 
 
 def _pack4(codes: np.ndarray) -> np.ndarray:
-    """Two 4-bit codes per byte along the last dim (must be even)."""
-    lo, hi = codes[..., 0::2], codes[..., 1::2]
+    """Host-side pack4 (same split-half layout as kernels.pack4)."""
+    D = codes.shape[-1]
+    lo, hi = codes[..., : D // 2], codes[..., D // 2:]
     return (lo | (hi << 4)).astype(np.uint8)
 
 
 def _unpack4(packed: jax.Array) -> jax.Array:
-    lo = (packed & 0xF).astype(jnp.int32)
-    hi = (packed >> 4).astype(jnp.int32)
-    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
-                                                packed.shape[-1] * 2)
+    return unpack4(packed)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -101,6 +125,7 @@ class PagedKVCache:
     block_size: int
     quantized: bool
     packed: bool
+    fused: bool = False       # decode reads go through the Pallas kernel
 
     _LEAVES = ("k_fp", "v_fp", "k_codes", "v_codes", "k_cb", "v_cb",
                "blk_q", "block_table", "seq_lens")
@@ -109,13 +134,29 @@ class PagedKVCache:
 
     def tree_flatten(self):
         return (tuple(getattr(self, f) for f in self._LEAVES),
-                (self.block_size, self.quantized, self.packed))
+                (self.block_size, self.quantized, self.packed, self.fused))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
     # ---------------------------------------------- adapter protocol
+
+    def _write(self, k, v):
+        """Scatter k/v (B, S, Hkv, Dh) into the fp pool at per-sequence
+        positions (block 0 absorbs idle slots' masked writes)."""
+        B, S, Hkv, Dh = k.shape
+        bs = self.block_size
+        pos = self.seq_lens[:, None] + jnp.arange(S)[None]          # (B,S)
+        blk = jnp.take_along_axis(self.block_table, pos // bs, axis=1)
+        off = pos % bs
+        return dataclasses.replace(
+            self,
+            k_fp=self.k_fp.at[blk.reshape(-1), off.reshape(-1)].set(
+                k.reshape(B * S, Hkv, Dh).astype(self.k_fp.dtype)),
+            v_fp=self.v_fp.at[blk.reshape(-1), off.reshape(-1)].set(
+                v.reshape(B * S, Hkv, Dh).astype(self.v_fp.dtype)),
+        )
 
     def update(self, k, v, cache_index):
         """Write k/v (B,S,Hkv,Dh) at per-sequence positions; gather pages.
@@ -124,43 +165,54 @@ class PagedKVCache:
         its own per-sequence lengths.
         """
         del cache_index
-        B, S, Hkv, Dh = k.shape
-        bs = self.block_size
-        pos = self.seq_lens[:, None] + jnp.arange(S)[None]          # (B,S)
-        blk = jnp.take_along_axis(self.block_table, pos // bs, axis=1)
-        off = pos % bs
-        new = dataclasses.replace(
-            self,
-            k_fp=self.k_fp.at[blk.reshape(-1), off.reshape(-1)].set(
-                k.reshape(B * S, Hkv, Dh).astype(self.k_fp.dtype)),
-            v_fp=self.v_fp.at[blk.reshape(-1), off.reshape(-1)].set(
-                v.reshape(B * S, Hkv, Dh).astype(self.v_fp.dtype)),
-        )
+        S = k.shape[1]
+        new = self._write(k, v)
         k_all = new._gather(new.k_fp, new.k_codes, new.k_cb)
         v_all = new._gather(new.v_fp, new.v_codes, new.v_cb)
         return new, k_all, v_all, self.seq_lens, self.seq_lens + S
 
-    def _gather(self, fp, codes, cb):
-        """Pages for this batch: (B, mb*bs, Hkv, Dh), dequantizing frozen
-        pages from their per-block codebooks."""
+    @property
+    def use_fused_decode(self) -> bool:
+        """Fused-adapter extension flag (see repro.models.cache)."""
+        return self.fused
+
+    def fused_decode(self, q, k, v, *, softcap=None):
+        """Decode-step write + fused paged attention (S == 1 only).
+
+        Returns (new_cache, out (B, 1, Hq, Dh)); frozen pages are read as
+        packed codes and dequantized inside the kernel.
+        """
+        B, S, Hq, Dh = q.shape
+        assert S == 1, "fused_decode is the single-token decode path"
+        new = self._write(k, v)
+        out = paged_decode_attention(
+            q[:, 0], new.k_fp, new.v_fp, new.k_codes, new.v_codes,
+            new.k_cb, new.v_cb, new.blk_q, new.block_table,
+            new.seq_lens + 1, softcap=softcap, quantized=new.quantized,
+            packed=new.packed, interpret=default_interpret())
+        return new, out[:, None].astype(q.dtype)
+
+    def _gather(self, fp, codes=None, cb=None):
+        """Pages for this batch: (B, mb*bs, Hkv, Dh).
+
+        No read-time dequantization: installing a freeze materializes the
+        reconstruction ``cb[codes]`` into the frozen pages' fp rows (see
+        ``_install_leaf``), so this path reads plain fp yet returns
+        quantized values for frozen pages — the decode graph is identical
+        to the unquantized one. ``codes``/``cb`` are accepted for call-site
+        symmetry; the packed form is read only by the fused kernel, which
+        is where the ~4-bit HBM crossing actually pays."""
+        del codes, cb
         t = self.block_table                                # (B, mb)
         B, mb = t.shape
         pages = fp[t]                                       # (B,mb,bs,H,D)
-        if self.quantized:
-            c = codes[t]                                    # (B,mb,bs,H,Dc)
-            if self.packed:
-                c = _unpack4(c)
-            c = c.astype(jnp.int32)
-            deq = jnp.take_along_axis(
-                cb[t], c.reshape(B, mb, -1), axis=-1).reshape(c.shape)
-            frozen = self.blk_q[t][:, :, None, None, None]
-            pages = jnp.where(frozen, deq.astype(pages.dtype), pages)
         nb, bs, H, D = fp.shape
         return pages.reshape(B, mb * bs, H, D)
 
 
 def init_paged_layer(cfg, *, num_blocks, block_size, batch, max_blocks,
-                     quantized, num_values, dtype) -> PagedKVCache:
+                     quantized, num_values, dtype,
+                     fused=False) -> PagedKVCache:
     Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
     packed = quantized and num_values <= 16
     assert Dh % 2 == 0 or not packed
@@ -178,11 +230,12 @@ def init_paged_layer(cfg, *, num_blocks, block_size, batch, max_blocks,
         block_table=jnp.zeros((batch, max_blocks), jnp.int32),
         seq_lens=jnp.zeros((batch,), jnp.int32),
         block_size=block_size, quantized=quantized, packed=packed,
+        fused=fused,
     )
 
 
 def init_paged_cache(cfg, *, num_blocks, block_size, batch, max_blocks,
-                     quantized=False, num_values=16):
+                     quantized=False, num_values=16, fused=False):
     """Model-shaped cache tree mirroring ``transformer.init_lm_cache`` with
     PagedKVCache leaves (leading group axis on scanned groups)."""
     for spec in tuple(cfg.group) + tuple(cfg.head_layers):
@@ -191,7 +244,7 @@ def init_paged_cache(cfg, *, num_blocks, block_size, batch, max_blocks,
     dtype = cfg.dtype("compute")
     kw = dict(num_blocks=num_blocks, block_size=block_size, batch=batch,
               max_blocks=max_blocks, quantized=quantized,
-              num_values=num_values, dtype=dtype)
+              num_values=num_values, dtype=dtype, fused=fused)
 
     def stack(_spec):
         one = init_paged_layer(cfg, **kw)
@@ -218,7 +271,9 @@ def map_layers(fn, tree):
 
 def with_tables(tree, block_table: np.ndarray, seq_lens: np.ndarray):
     """Install host-managed table/lens into every layer leaf (broadcast over
-    the stacked group axis when present)."""
+    the stacked group axis when present). The table may be narrower than
+    ``max_blocks``: the engine clamps it to the blocks the longest live
+    sequence actually needs, so short batches don't pay full-window reads."""
     bt = jnp.asarray(block_table, jnp.int32)
     sl = jnp.asarray(seq_lens, jnp.int32)
 
@@ -240,14 +295,22 @@ def merge_pools(held, returned):
         held, returned, is_leaf=_is_leaf)
 
 
+def freeze_markers(tree) -> list[jax.Array]:
+    """One device array per layer whose readiness implies that layer's last
+    freeze dispatch has completed (used by the engine's overlap counters)."""
+    out = []
+    map_layers(lambda leaf: out.append(leaf.k_cb), tree)
+    return out
+
+
 # ----------------------------------------------- host-side quantization
 
 
 def quantize_page(data: np.ndarray, method: str, num_values: int):
     """Run the paper's solver on one page; returns (codes u8, codebook f32).
 
-    method "tv" maps to the exact-count tv_iter (tv itself is
-    lam-parameterised).
+    Host fallback for methods without a batched device solver; method "tv"
+    maps to the exact-count tv_iter (tv itself is lam-parameterised).
     """
     from repro.core import quantize
 
@@ -262,13 +325,168 @@ def quantize_page(data: np.ndarray, method: str, num_values: int):
     return codes, cb
 
 
-def freeze_blocks(tree, block_ids, *, method="kmeans_ls", num_values=16):
-    """Quantize full pages ``block_ids`` in every attention layer (host side,
-    between engine steps) and scatter codes/codebooks/flags back."""
-    if not block_ids:
+#: count methods with a batched on-device solver (no host numpy per page)
+DEVICE_FREEZE_METHODS = ("kmeans_ls", "kmeans")
+
+
+def freeze_blocks(tree, block_ids, *, method="kmeans_ls", num_values=16,
+                  stats=None):
+    """Quantize full pages ``block_ids`` in every attention layer and
+    scatter codes/codebooks/flags back.
+
+    kmeans_ls / kmeans batch every (page, group, k/v) row of the event
+    through ``kernels.quantize_pages_device`` — one async device dispatch
+    per layer, the engine keeps decoding while it runs. Other methods fall
+    back to per-page host solves (``stats["host_page_solves"]`` counts
+    them, so serving tests can assert the steady state performs none).
+    """
+    if not len(block_ids):
         return tree
     bids = np.asarray(sorted(block_ids), np.int32)
+    if method in DEVICE_FREEZE_METHODS:
+        return _freeze_blocks_device(tree, bids, num_values=num_values,
+                                     refit=method == "kmeans_ls")
+    return _freeze_blocks_host(tree, bids, method=method,
+                               num_values=num_values, stats=stats)
 
+
+@functools.partial(jax.jit, static_argnames=("num_values", "refit"))
+def _solve_leaf_pages(leaf: PagedKVCache, jb, *, num_values, refit):
+    """Gather pages ``jb`` from one layer leaf and solve their codebooks as
+    a single jitted computation (one async dispatch per layer). Returns
+    (codes (2, G?, P, bs, Hkv, Dc), cb (2, G?, P, L)) — k stacked over v on
+    the leading axis — without touching the leaf."""
+    stacked = leaf.k_fp.ndim == 5
+    axis = 1 if stacked else 0
+    kf = jnp.take(leaf.k_fp, jb, axis=axis)
+    vf = jnp.take(leaf.v_fp, jb, axis=axis)
+    both = jnp.stack([kf, vf])              # (2, G?, P, bs, Hkv, Dh)
+    page_shape = both.shape[-3:]
+    rows = both.reshape(-1, int(np.prod(page_shape)))
+    codes, cb = quantize_pages_device(rows, num_values=num_values,
+                                      refit=refit)
+    codes = codes.reshape(both.shape)
+    cb = cb.reshape(both.shape[:-3] + (num_values,))
+    if leaf.packed:
+        codes = pack4(codes)
+    return codes, cb
+
+
+@jax.jit
+def _install_leaf(leaf: PagedKVCache, jb, keep, codes, cb):
+    """Scatter one solve's outputs into a leaf, masked by ``keep`` (P,):
+    dropped pages rewrite their current values and stay thawed. Installing
+    also *materializes the reconstruction into the fp pool*, so the gather
+    read path serves quantized values at plain-fp cost; the packed codes
+    stay the source of truth for the fused kernel's ~4-bit HBM reads. One
+    jit dispatch — eager scatter chains on still-computing operands can
+    block the host."""
+    stacked = leaf.k_fp.ndim == 5
+    sel = (slice(None), jb) if stacked else (jb,)
+    # align keep to the (G?, P, ...) result layout of _solve_leaf_pages
+    kpage = keep[None, :, None, None, None] if stacked \
+        else keep[:, None, None, None]
+    kcb_m = keep[None, :, None] if stacked else keep[:, None]
+    kc = jnp.where(kpage, codes[0], leaf.k_codes[sel])
+    vc = jnp.where(kpage, codes[1], leaf.v_codes[sel])
+    kcb = jnp.where(kcb_m, cb[0], leaf.k_cb[sel])
+    vcb = jnp.where(kcb_m, cb[1], leaf.v_cb[sel])
+
+    def recon(codes1, cb1, cur):
+        idx = _unpack4(codes1) if leaf.packed else codes1.astype(jnp.int32)
+        L = cb1.shape[-1]
+        cbb = jnp.broadcast_to(cb1[..., None, None, :],
+                               idx.shape[:-1] + (L,))    # (G?, P, bs, H, L)
+        deq = jnp.take_along_axis(cbb, idx, axis=-1).astype(leaf.k_fp.dtype)
+        return jnp.where(kpage, deq, cur)
+
+    kf = recon(codes[0], cb[0], leaf.k_fp[sel])
+    vf = recon(codes[1], cb[1], leaf.v_fp[sel])
+    return dataclasses.replace(
+        leaf,
+        k_fp=leaf.k_fp.at[sel].set(kf),
+        v_fp=leaf.v_fp.at[sel].set(vf),
+        k_codes=leaf.k_codes.at[sel].set(kc),
+        v_codes=leaf.v_codes.at[sel].set(vc),
+        k_cb=leaf.k_cb.at[sel].set(kcb),
+        v_cb=leaf.v_cb.at[sel].set(vcb),
+        blk_q=leaf.blk_q.at[..., jb].max(keep))
+
+
+class PendingFreeze:
+    """Handle for an in-flight device freeze.
+
+    Holds the solver outputs (one (codes, cb) pair per layer leaf, still
+    computing on device) plus the page ids they target. Until ``install``
+    scatters them into the cache, those pages keep serving from the exact
+    fp pool — so decode steps issued between dispatch and install have NO
+    data dependency on the solve and genuinely overlap it. ``drop`` forgets
+    pages whose sequence finished (freed pages must not be installed later
+    over a reallocated page); it only flips a host-side mask, so it is free
+    to call while the solve is still in flight.
+    """
+
+    def __init__(self, bids: np.ndarray, results: list):
+        self.bids = np.asarray(bids, np.int32)
+        self.keep = np.ones(self.bids.shape, bool)
+        self.results = results
+
+    def is_ready(self) -> bool:
+        return all(cb.is_ready() for _, cb in self.results)
+
+    def markers(self) -> list:
+        return [cb for _, cb in self.results]
+
+    def drop(self, freed_ids) -> None:
+        self.keep &= ~np.isin(self.bids,
+                              np.asarray(list(freed_ids), np.int32))
+
+
+def dispatch_freeze(tree, block_ids, *, num_values=16,
+                    refit=True) -> PendingFreeze:
+    """Start the batched device solve for ``block_ids`` in every layer;
+    returns immediately with a PendingFreeze (the cache is unmodified)."""
+    bids = np.asarray(sorted(block_ids), np.int32)
+    jb = jnp.asarray(bids)
+    results = []
+
+    def per(leaf: PagedKVCache):
+        assert leaf.quantized
+        results.append(_solve_leaf_pages(leaf, jb, num_values=num_values,
+                                         refit=refit))
+        return leaf
+
+    map_layers(per, tree)
+    return PendingFreeze(bids, results)
+
+
+def install_freeze(tree, pending: PendingFreeze):
+    """Scatter a completed (or still-computing) freeze into the cache and
+    flip ``blk_q``; from the next step the kept pages serve from codes.
+    Stacked leaves broadcast ``keep``/``codes`` over the group axis inside
+    ``_install_leaf`` via the (2, G, P, ...) result layout."""
+    if not pending.keep.any():
+        return tree
+    jb = jnp.asarray(pending.bids)
+    keep = jnp.asarray(pending.keep)
+    it = iter(pending.results)
+
+    def per(leaf: PagedKVCache):
+        codes, cb = next(it)
+        return _install_leaf(leaf, jb, keep, codes, cb)
+
+    return map_layers(per, tree)
+
+
+def _freeze_blocks_device(tree, bids, *, num_values, refit):
+    # synchronous-semantics convenience: dispatch and install in one call
+    # (jax's dataflow still runs the solve async behind later dispatches)
+    return install_freeze(tree, dispatch_freeze(tree, bids,
+                                                num_values=num_values,
+                                                refit=refit))
+
+
+def _freeze_blocks_host(tree, bids, *, method, num_values, stats=None):
     def per(leaf: PagedKVCache):
         assert leaf.quantized
         stacked = leaf.k_fp.ndim == 5
@@ -280,35 +498,46 @@ def freeze_blocks(tree, block_ids, *, method="kmeans_ls", num_values=16):
         vf = np.asarray(jnp.take(leaf.v_fp, jb, axis=axis))
         kc, vc = leaf.k_codes, leaf.v_codes
         kcb, vcb = leaf.k_cb, leaf.v_cb
+        kfp, vfp = leaf.k_fp, leaf.v_fp
         for g in groups:
             sel = () if g is None else (g,)
             for pool, tag in ((kf, "k"), (vf, "v")):
-                new_codes, new_cbs = [], []
+                new_codes, new_cbs, new_recon = [], [], []
                 for bi in range(len(bids)):
                     codes, cb = quantize_page(pool[sel + (bi,)], method,
                                               num_values)
+                    if stats is not None:
+                        stats["host_page_solves"] = (
+                            stats.get("host_page_solves", 0) + 1)
+                    new_recon.append(cb[codes])
                     if leaf.packed:
                         codes = _pack4(codes)
                     new_codes.append(codes)
                     new_cbs.append(cb)
                 nc = jnp.asarray(np.stack(new_codes))
                 ncb = jnp.asarray(np.stack(new_cbs))
+                # materialize the reconstruction into the fp rows so the
+                # gather read path serves quantized values at plain-fp cost
+                nr = jnp.asarray(np.stack(new_recon), leaf.k_fp.dtype)
                 if tag == "k":
                     kc = kc.at[sel + (bids,)].set(nc)
                     kcb = kcb.at[sel + (bids,)].set(ncb)
+                    kfp = kfp.at[sel + (bids,)].set(nr)
                 else:
                     vc = vc.at[sel + (bids,)].set(nc)
                     vcb = vcb.at[sel + (bids,)].set(ncb)
+                    vfp = vfp.at[sel + (bids,)].set(nr)
         blk_q = leaf.blk_q.at[..., bids].set(True)
-        return dataclasses.replace(leaf, k_codes=kc, v_codes=vc,
-                                   k_cb=kcb, v_cb=vcb, blk_q=blk_q)
+        return dataclasses.replace(leaf, k_fp=kfp, v_fp=vfp, k_codes=kc,
+                                   v_codes=vc, k_cb=kcb, v_cb=vcb,
+                                   blk_q=blk_q)
 
     return map_layers(per, tree)
 
 
 def thaw_blocks(tree, block_ids):
     """Clear the quantized flag for freed pages (reallocation starts fp)."""
-    if not block_ids:
+    if not len(block_ids):
         return tree
     bids = np.asarray(sorted(block_ids), np.int32)
 

@@ -104,3 +104,96 @@ def test_fista_batch_padding_mask():
     np.testing.assert_allclose(a2[0, :m1], a1[0], atol=1e-4)
     assert np.all(a2[:, m2:] == 0) if a2.shape[1] > m2 else True
     assert np.all(a2[0, m1:] == 0)
+
+
+# ------------------------------------------------------------ paged decode
+
+
+def _paged_state(rng, *, nb, bs, Hkv, Dh, L, quantized, packed, frozen_ids=()):
+    from repro.kernels import pack4
+
+    kfp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, Dh)), jnp.float32)
+    vfp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, Dh)), jnp.float32)
+    if quantized:
+        Dc = Dh // 2 if packed else Dh
+        kcodes = rng.integers(0, L, (nb, bs, Hkv, Dh)).astype(np.uint8)
+        vcodes = rng.integers(0, L, (nb, bs, Hkv, Dh)).astype(np.uint8)
+        if packed:
+            kcodes, vcodes = (np.asarray(pack4(jnp.asarray(c)))
+                              for c in (kcodes, vcodes))
+        kc, vc = jnp.asarray(kcodes), jnp.asarray(vcodes)
+        kcb = jnp.asarray(rng.normal(size=(nb, L)), jnp.float32)
+        vcb = jnp.asarray(rng.normal(size=(nb, L)), jnp.float32)
+        blkq = np.zeros((nb,), np.int32)
+        blkq[list(frozen_ids)] = 1
+        blkq = jnp.asarray(blkq)
+    else:
+        kc = vc = jnp.zeros((1, 1, 1, 1), jnp.uint8)
+        kcb = vcb = jnp.zeros((1, 1), jnp.float32)
+        blkq = jnp.zeros((1,), jnp.int32)
+    return kfp, vfp, kc, vc, kcb, vcb, blkq
+
+
+@pytest.mark.parametrize("quantized,packed,softcap", [
+    (True, True, None), (True, False, None), (False, True, None),
+    (True, True, 30.0)])
+def test_paged_decode_kernel_matches_oracle(quantized, packed, softcap):
+    """Fused flash-decode == dense oracle on mixed frozen/hot pages with
+    per-sequence valid lengths (incl. an idle slot parked on the null
+    page)."""
+    from repro.kernels import paged_decode_attention, ref_paged_decode
+
+    rng = np.random.default_rng(0)
+    nb, bs, Hkv, Dh, L, B, mb, Hq = 7, 8, 2, 16, 16, 3, 3, 4
+    state = _paged_state(rng, nb=nb, bs=bs, Hkv=Hkv, Dh=Dh, L=L,
+                         quantized=quantized, packed=packed,
+                         frozen_ids=(1, 4, 5))
+    table = jnp.asarray([[1, 2, 3], [4, 5, 6], [0, 0, 0]], jnp.int32)
+    valid = jnp.asarray([3 * bs, bs + 3, 1], jnp.int32)   # full / partial / idle
+    q = jnp.asarray(rng.normal(size=(B, Hq, Dh)), jnp.float32)
+    out = paged_decode_attention(q, *state, table, valid, softcap=softcap,
+                                 quantized=quantized, packed=packed,
+                                 interpret=True)
+    ref = ref_paged_decode(q, *state, table, valid, softcap=softcap,
+                           quantized=quantized, packed=packed)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_paged_decode_skips_pages_past_valid():
+    """Pages beyond ceil(valid/bs) must not influence the output: poison
+    them with huge fp values and check against a table that never maps
+    them."""
+    from repro.kernels import paged_decode_attention
+
+    rng = np.random.default_rng(1)
+    nb, bs, Hkv, Dh, B, mb, Hq = 5, 8, 2, 16, 1, 3, 4
+    state = list(_paged_state(rng, nb=nb, bs=bs, Hkv=Hkv, Dh=Dh, L=16,
+                              quantized=False, packed=True))
+    q = jnp.asarray(rng.normal(size=(B, Hq, Dh)), jnp.float32)
+    valid = jnp.asarray([bs + 2], jnp.int32)              # 2 pages needed
+    clean = paged_decode_attention(q, *state, jnp.asarray([[1, 2, 3]],
+                                   jnp.int32), valid, interpret=True)
+    poisoned = [state[0].at[4].set(1e9), state[1].at[4].set(1e9)] + state[2:]
+    out = paged_decode_attention(q, *poisoned, jnp.asarray([[1, 2, 4]],
+                                 jnp.int32), valid, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(clean), atol=1e-6)
+
+
+def test_quantize_pages_device_quality():
+    """Batched on-device kmeans_ls: codes index a sorted L-wide codebook and
+    reconstruction error is small for clusterable rows."""
+    from repro.kernels import quantize_pages_device
+
+    rng = np.random.default_rng(2)
+    centers = rng.normal(size=(3, 8)) * 5
+    rows = (centers[:, rng.integers(0, 8, 256)]
+            + rng.normal(size=(3, 256)) * 0.05).astype(np.float32)
+    codes, cb = quantize_pages_device(jnp.asarray(rows), num_values=8)
+    codes, cb = np.asarray(codes), np.asarray(cb)
+    assert codes.shape == (3, 256) and cb.shape == (3, 8)
+    assert codes.max() < 8
+    assert np.all(np.diff(cb, axis=1) >= 0), "codebooks must be sorted"
+    recon = np.take_along_axis(cb, codes.astype(np.int64), axis=1)
+    rms = np.sqrt(((recon - rows) ** 2).mean()) / np.sqrt((rows ** 2).mean())
+    assert rms < 0.05, rms
