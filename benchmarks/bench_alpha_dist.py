@@ -25,9 +25,9 @@ def _alpha_stats(alpha):
 def run() -> None:
     params, *_ = train_paper_mlp()
     w = np.asarray(params[-1]["w"])
-    for method, kw in [("l1", dict(lam=1e-3)), ("l1_ls", dict(lam=1e-3)),
-                       ("kmeans_ls", dict(num_values=32))]:
-        qt, info = quantize(w, method, **kw)
+    for method, spec in [("l1", "l1:lam=0.001"), ("l1_ls", "l1_ls:lam=0.001"),
+                          ("kmeans_ls", "kmeans_ls@32")]:
+        qt, info = quantize(w, spec)
         s = _alpha_stats(info["alpha"])
         emit(f"alpha_dist/{method}", 0.0,
              f"nnz={s['nnz']};pos_frac={s['pos_frac']:.3f};"

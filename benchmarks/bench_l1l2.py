@@ -19,9 +19,9 @@ def run() -> None:
     prob = make_problem(vals, counts)
     cap = max_stable_lam2(prob)
     for lam1 in [1e-4, 3e-4, 1e-3, 3e-3, 1e-2]:
-        _, a = quantize(w, "l1", lam=lam1)
+        _, a = quantize(w, f"l1:lam={lam1!r}")
         lam2 = min(4e-3 * lam1, 0.49 * cap)
-        _, b = quantize(w, "l1l2", lam=lam1, lam2=lam2)
+        _, b = quantize(w, f"l1l2:lam={lam1!r},lam2={lam2!r}")
         emit(f"l1l2/lam{lam1:g}", 0.0,
              f"n_l1={a['n_values']};n_l1l2={b['n_values']};"
              f"l2_l1={a['l2_loss']:.5f};l2_l1l2={b['l2_loss']:.5f}")

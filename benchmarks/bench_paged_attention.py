@@ -42,8 +42,7 @@ def _build_state(cfg, *, B, mb, block_size, num_values, quantized, seed=0):
     if quantized:
         full = [int(table[b, j]) for b in range(B)
                 for j in range(int(lens[b]) // block_size)]
-        leaf = freeze_blocks(leaf, full, method="kmeans_ls",
-                             num_values=num_values)
+        leaf = freeze_blocks(leaf, full, f"kmeans_ls@{num_values}")
     return leaf, table, lens
 
 
@@ -53,6 +52,7 @@ def run(B=4, mb=4, block_size=16, num_values=16, iters=5, seed=0) -> None:
     import numpy as np
 
     from repro.configs import get_reduced_config
+    from repro.core import QuantSpec
     from repro.kernels import modeled_hbm_bytes_per_token
     from repro.models.attention import sdpa
 
@@ -93,7 +93,9 @@ def run(B=4, mb=4, block_size=16, num_values=16, iters=5, seed=0) -> None:
             row = {"path": path, "kv": kv, "tok_s": B / dt,
                    "us_per_step": dt * 1e6, "hbm_bytes_per_token": bpt,
                    "frozen_frac": frozen_frac, "batch": B, "max_blocks": mb,
-                   "block_size": block_size}
+                   "block_size": block_size,
+                   "spec": (QuantSpec.parse(kv).to_json()
+                            if quantized else None)}
             results.append(row)
             emit(f"paged_attention/{kv}/{path}", dt * 1e6,
                  f"tok_s={row['tok_s']:.1f};bytes_per_tok={bpt:.0f};"

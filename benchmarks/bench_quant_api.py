@@ -1,0 +1,77 @@
+"""Quant-API microbench: host vs device-batch solve latency per registered
+method.
+
+One row per registry entry: the host path times ``core.quantize`` on a
+single gaussian vector; methods with a ``device_batch`` registry entry
+additionally time the batched device row solver (the KV-freeze path) on a
+(R, E) row block and report the per-row amortized cost. Every row carries
+the originating QuantSpec JSON so the perf trajectory attributes to an
+exact solver configuration.
+
+Emits CSV rows plus the standard BENCH_quant_api.json artifact.
+
+    PYTHONPATH=src python -m benchmarks.run quant_api
+    PYTHONPATH=src python -m benchmarks.bench_quant_api --n 512 --rows 16
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import bench_json, emit, timed
+
+
+def _spec_for(method: str, num_values: int):
+    from repro.core import QuantSpec, registry
+
+    if registry.get(method).param_kind == "count":
+        return QuantSpec(method, num_values=num_values, weighted=True)
+    return QuantSpec(method, lam=0.05, weighted=True)
+
+
+def run(n: int = 512, rows: int = 16, num_values: int = 16,
+        iters: int = 2, seed: int = 0) -> None:
+    import jax
+    import numpy as np
+
+    from repro.core import quantize, registry
+
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=n).astype(np.float32)
+    row_block = jax.numpy.asarray(
+        rng.normal(size=(rows, n)).astype(np.float32))
+    results = []
+    for method in registry.methods():
+        spec = _spec_for(method, num_values)
+        (_, info), dt_host = timed(quantize, w, spec, warmup=1, iters=iters)
+        row = {"method": method, "spec": spec.to_json(),
+               "param_kind": spec.param_kind, "n": n,
+               "host_us_per_call": dt_host * 1e6,
+               "l2_loss": info["l2_loss"], "n_values": info["n_values"],
+               "device_batch": spec.device_capable}
+        if spec.device_capable:
+            solve = registry.device_batch_solve(method)
+            _, dt_dev = timed(
+                lambda: jax.block_until_ready(solve(row_block, spec)),
+                warmup=1, iters=iters)
+            row["device_us_per_batch"] = dt_dev * 1e6
+            row["device_us_per_row"] = dt_dev * 1e6 / rows
+            row["device_rows"] = rows
+        results.append(row)
+        dev = (f";dev_us_per_row={row['device_us_per_row']:.0f}"
+               if spec.device_capable else "")
+        emit(f"quant_api/{spec}", dt_host * 1e6,
+             f"l2={info['l2_loss']:.4f};n_values={info['n_values']}{dev}")
+    bench_json("quant_api", results,
+               meta={"n": n, "rows": rows, "num_values": num_values,
+                     "backend": jax.default_backend()})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--rows", type=int, default=16)
+    ap.add_argument("--num-values", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args()
+    run(n=args.n, rows=args.rows, num_values=args.num_values,
+        iters=args.iters)

@@ -19,26 +19,26 @@ def run() -> None:
     # runtime vs m at fixed k
     for m in (256, 1024, 4096, 16384):
         w = rng.normal(0, 1, m * 2).round(6)   # ~m unique values
-        quantize(w, "l1_ls", lam=1e-3)
+        quantize(w, "l1_ls:lam=0.001")
         t0 = time.perf_counter()
-        _, i1 = quantize(w, "l1_ls", lam=1e-3)
+        _, i1 = quantize(w, "l1_ls:lam=0.001")
         t1 = time.perf_counter()
-        quantize(w, "kmeans", num_values=64)
+        quantize(w, "kmeans@64")
         t2 = time.perf_counter()
-        _, i2 = quantize(w, "kmeans", num_values=64)
+        _, i2 = quantize(w, "kmeans@64")
         t3 = time.perf_counter()
         emit(f"scaling_m/{m}", (t1 - t0) * 1e6,
              f"l1_ls_s={t1-t0:.4f};kmeans_s={t3-t2:.4f}")
     # runtime vs k at fixed m: high-resolution regime (k -> m)
     w = rng.normal(0, 1, 4096).round(6)
     for k in (16, 64, 256, 1024):
-        quantize(w, "kmeans", num_values=k)
+        quantize(w, f"kmeans@{k}")
         t0 = time.perf_counter()
-        quantize(w, "kmeans", num_values=k)
+        quantize(w, f"kmeans@{k}")
         t1 = time.perf_counter()
-        quantize(w, "tv_iter", num_values=k)
+        quantize(w, f"tv_iter@{k}")
         t2 = time.perf_counter()
-        quantize(w, "tv_iter", num_values=k)
+        quantize(w, f"tv_iter@{k}")
         t3 = time.perf_counter()
         emit(f"scaling_k/{k}", (t1 - t0) * 1e6,
              f"kmeans_s={t1-t0:.4f};tv_iter_s={t3-t2:.4f}")

@@ -71,10 +71,12 @@ def _one(params, cfg, *, rate, n, prompt_len, gen, kv_quant, kv_num_values,
     if cache == "matched":      # burst: page budget, not arrivals, gates
         trace = [dataclasses.replace(r, arrival_time=0.0) for r in trace]
     s = eng.run(trace)
-    s.update(rate=rate, kv="fp" if kv_quant is None else
-             f"{kv_quant}@{kv_num_values}", num_requests=n,
-             prompt_len=prompt_len, gen=gen, cache=cache,
-             num_blocks=eng.num_blocks, cache_budget_bytes=budget)
+    s.update(rate=rate, kv="fp" if eng.kv_spec is None else str(eng.kv_spec),
+             num_requests=n, prompt_len=prompt_len, gen=gen, cache=cache,
+             num_blocks=eng.num_blocks, cache_budget_bytes=budget,
+             # originating QuantSpec, so perf trajectories attribute to an
+             # exact solver configuration
+             spec=None if eng.kv_spec is None else eng.kv_spec.to_json())
     return s
 
 

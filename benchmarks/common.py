@@ -105,11 +105,19 @@ def train_paper_mlp(steps: int = 400, lr: float = 1e-3, seed: int = 0):
 
 
 def timed_quant(w, method, iters: int = 2, **kw):
-    """Time quantize() excluding jit compilation (first call warms)."""
+    """Time quantize() excluding jit compilation (first call warms).
+
+    ``method`` may be a QuantSpec / spec string, or a bare method name whose
+    quantizer kwargs fold into the spec here (no deprecation detour)."""
     import time as _t
 
+    from repro.core import QuantSpec
     from repro.core import quantize as _q
 
+    if isinstance(method, str) and "@" not in method and ":" not in method:
+        method = QuantSpec(method, **{
+            k: kw.pop(k) for k in ("num_values", "lam", "lam2", "weighted",
+                                   "clip", "seed") if k in kw})
     out = _q(w, method, **kw)
     t0 = _t.perf_counter()
     for _ in range(iters):

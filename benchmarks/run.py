@@ -7,7 +7,8 @@ import sys
 import time
 
 SUITES = ["nn_weights", "l1l2", "alpha_dist", "image", "synthetic",
-          "scaling", "kernels", "roofline", "paged_attention", "serving"]
+          "scaling", "kernels", "roofline", "paged_attention", "serving",
+          "quant_api"]
 
 
 def main() -> None:

@@ -4,18 +4,19 @@
 """
 import numpy as np
 
-from repro.core import ALL_METHODS, LAM_METHODS, quantize
+from repro.core import quantize, registry
 
 rng = np.random.default_rng(0)
 w = rng.normal(0, 1, 2000).round(2)          # duplicates -> 'm' unique values
 
-print(f"{'method':10s} {'n_values':>8s} {'l2_loss':>10s} {'bytes':>7s} {'time':>8s}")
-for method in ALL_METHODS:
-    kw = dict(lam=0.05) if method in LAM_METHODS else dict(num_values=16)
-    qt, info = quantize(w, method, **kw)
-    print(f"{method:10s} {info['n_values']:8d} {info['l2_loss']:10.4f} "
+print(f"{'spec':20s} {'n_values':>8s} {'l2_loss':>10s} {'bytes':>7s} {'time':>8s}")
+for method in registry.methods():
+    spec = (f"{method}:lam=0.05"
+            if registry.get(method).param_kind == "lam" else f"{method}@16")
+    qt, info = quantize(w, spec)
+    print(f"{spec:20s} {info['n_values']:8d} {info['l2_loss']:10.4f} "
           f"{info['compressed_bytes']:7d} {info['time_s']*1e3:7.1f}ms")
 
-qt, info = quantize(w, "kmeans_ls", num_values=16)
+qt, info = quantize(w, "kmeans_ls@16")
 print(f"\ndense bytes: {w.size * 4}, compressed: {qt.nbytes()} "
       f"({w.size * 4 / qt.nbytes():.1f}x), codebook: {np.asarray(qt.codebook)[:5]}...")

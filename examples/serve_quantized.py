@@ -18,8 +18,7 @@ cfg = get_reduced_config("qwen3_0_6b")
 params = models.init_params(cfg, jax.random.PRNGKey(0))
 
 # PTQ with the paper's Algorithm 3 (k-means + least squares), 16 values/tensor
-qtree, report = quantize_tree(params, method="kmeans_ls", num_values=16,
-                              weighted=True)
+qtree, report = quantize_tree(params, "kmeans_ls@16:weighted=true")
 ratio = compression_ratio(report)
 print(f"quantized {len(report)} tensors; compression {ratio:.1f}x")
 

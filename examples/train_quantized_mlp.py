@@ -25,7 +25,7 @@ xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
 xtr_j, ytr_j = jnp.asarray(xtr), jnp.asarray(ytr)
 
 for l in (4, 8, 16):
-    qt, info = quantize(w, "kmeans_ls", num_values=l, weighted=True)
+    qt, info = quantize(w, f"kmeans_ls@{l}:weighted=true")
     p2 = [dict(layer) for layer in params]
     p2[-1]["w"] = qt.to_dense()
     acc_q = float(mlp_accuracy(p2, xte_j, yte_j))

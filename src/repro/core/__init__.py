@@ -4,8 +4,10 @@ Wang et al., "Scalar Quantization as Sparse Least Square Optimization"
 (DOI 10.1109/TPAMI.2019.2952096), plus beyond-paper exact solvers. See
 DESIGN.md for the mapping from paper equations to modules.
 """
-from .api import ALL_METHODS, COUNT_METHODS, LAM_METHODS, quantize
+from . import registry
+from .api import ALL_METHODS, COUNT_METHODS, LAM_METHODS, quantize, resolve_spec
 from .cd import cd_solve, cd_sweep, max_stable_lam2
+from .spec import QuantSpec, as_spec
 from .dp_optimal import optimal_kmeans_1d
 from .iterative import iterative_l1, tv_iterative
 from .kmeans import kmeans_1d, kmeans_quantize_unique
@@ -19,6 +21,7 @@ from .types import QuantizedTensor, from_dense, hard_sigmoid, stack_quantized
 
 __all__ = [
     "ALL_METHODS", "COUNT_METHODS", "LAM_METHODS", "quantize",
+    "QuantSpec", "as_spec", "registry", "resolve_spec",
     "cd_solve", "cd_sweep", "max_stable_lam2",
     "optimal_kmeans_1d", "iterative_l1", "tv_iterative",
     "kmeans_1d", "kmeans_quantize_unique", "kmeans_ls_quantize",

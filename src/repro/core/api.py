@@ -1,136 +1,133 @@
-"""Public quantization API (the paper's contribution as a composable module).
+"""Public quantization API: one spec-driven surface over the solver registry.
 
-    qt, info = quantize(w, method="l1_ls", num_values=16)
-    w_approx  = qt.to_dense()
+The paper contributes a *family* of interchangeable solvers for scalar
+quantization as sparse least-square optimization. A quantizer configuration
+is a :class:`~repro.core.spec.QuantSpec` — frozen, hashable, and
+round-trippable through compact strings — and ``quantize`` is a thin
+driver that builds the sorted-unique problem and dispatches to the
+method's registry entry::
 
-Methods (paper):
-  "l1"        eq. 6   - raw l1 CD (no refit)
-  "l1_ls"     alg. 1  - l1 CD + LS refit on the support
-  "l1l2"      eq. 13  - l1 + negative-l2 CD (+ refit)
-  "l0"        eq. 16  - l0-constrained CD w/ gamma bisection
-  "iter_l1"   alg. 2  - lambda-ramp to reach <= num_values
-  "kmeans_ls" alg. 3  - k-means support + LS values
-Baselines (paper §4): "kmeans", "mog", "dtc".
-Beyond-paper: "tv" (exact O(m) global optimum of eq. 6),
-  "tv_iter" (exact-count via lambda bisection on tv),
-  "dp" (optimal 1-D quantizer, loss lower bound).
+    from repro.core import QuantSpec, quantize
 
-lam-parameterised methods (l1/l1_ls/l1l2/tv) take ``lam``; count-parameterised
-methods take ``num_values``. ``weighted=True`` optimizes the true full-vector
-loss; False is the paper's unique-values objective. ``clip=(a,b)`` applies the
-paper's hard-sigmoid (eq. 21) to the codebook.
+    qt, info = quantize(w, QuantSpec("kmeans_ls", num_values=16))
+    qt, info = quantize(w, "l1_ls:lam=0.02")       # compact string form
+    w_approx = qt.to_dense()
+
+Methods (see ``core.registry`` for the authoritative list + capabilities):
+
+  paper        l1 (eq. 6), l1_ls (alg. 1), l1l2 (eq. 13), l0 (eq. 16),
+               iter_l1 (alg. 2), kmeans_ls (alg. 3)
+  baselines    kmeans, mog, dtc (paper §4)
+  beyond-paper tv (exact O(m) global optimum of eq. 6), tv_iter
+               (exact-count via lambda bisection on tv), dp (optimal 1-D
+               quantizer, loss lower bound)
+
+lam-parameterised methods (l1/l1_ls/l1l2/tv) take ``lam``;
+count-parameterised methods take ``num_values`` — the spec rejects the
+wrong kind at construction. ``weighted=True`` optimizes the true
+full-vector loss; False is the paper's unique-values objective.
+``clip=(a,b)`` applies the paper's hard-sigmoid (eq. 21) to the codebook.
+
+Methods with a batched device backend (``registry.device_methods()``:
+kmeans_ls, kmeans, iter_l1) additionally solve many rows per kernel
+dispatch for the serving engine's KV-page freezing; ``quantize`` itself is
+the host reference path.
+
+The pre-spec kwargs signature ``quantize(w, method=..., num_values=...)``
+still works as a deprecation shim (it warns and builds the equivalent
+spec).
 """
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any
 
-import jax.numpy as jnp
 import numpy as np
 
-from . import types
-from .cd import cd_solve, max_stable_lam2
-from .dp_optimal import optimal_kmeans_1d
-from .dtc import dtc_quantize_unique
-from .iterative import iterative_l1, tv_iterative
-from .kmeans import kmeans_quantize_unique
-from .kmeans_ls import kmeans_ls_quantize
-from .l0 import l0_quantize
-from .mog import mog_quantize_unique
-from .problem import make_problem, reconstruct, unique_with_counts
-from .refit import refit_support, support_of
-from .tv_exact import tv_solve_problem
+from . import registry, types
+from .problem import make_problem, unique_with_counts
+from .spec import QuantSpec
 
-LAM_METHODS = ("l1", "l1_ls", "l1l2", "tv")
-COUNT_METHODS = ("l0", "iter_l1", "kmeans_ls", "kmeans", "mog", "dtc", "dp", "tv_iter")
-ALL_METHODS = LAM_METHODS + COUNT_METHODS
+# Backward-compatible capability tuples, now derived from the registry.
+LAM_METHODS = registry.lam_methods()
+COUNT_METHODS = registry.count_methods()
+ALL_METHODS = registry.methods()
+
+_UNSET = object()
+_LEGACY_KEYS = ("num_values", "lam", "lam2", "weighted", "clip", "seed")
 
 
-def quantize(
-    w,
-    method: str = "l1_ls",
-    *,
-    num_values: int | None = None,
-    lam: float | None = None,
-    lam2: float | None = None,
-    weighted: bool = False,
-    clip: tuple[float, float] | None = None,
-    seed: int = 0,
-    **kw: Any,
-) -> tuple[types.QuantizedTensor, dict]:
-    """Quantize any array into a value-shared QuantizedTensor."""
+def resolve_spec(spec=None, *, method=_UNSET, num_values=_UNSET, lam=_UNSET,
+                 lam2=_UNSET, weighted=_UNSET, clip=_UNSET, seed=_UNSET,
+                 _warn_stacklevel: int = 3) -> QuantSpec:
+    """Coerce (spec | spec-string | legacy kwargs) to a validated QuantSpec.
+
+    Shared by every shimmed entry point (``quantize``, ``quantize_tree``,
+    ``freeze_blocks``, the serving engine): a QuantSpec or a string
+    containing '@'/':' is the new-style path; a bare method name plus
+    loose kwargs is the legacy path and warns.
+    """
+    passed = {k: v for k, v in dict(
+        num_values=num_values, lam=lam, lam2=lam2, weighted=weighted,
+        clip=clip, seed=seed).items() if v is not _UNSET}
+    if isinstance(spec, QuantSpec) or (
+            isinstance(spec, str) and ("@" in spec or ":" in spec)):
+        if method is not _UNSET or passed:
+            bad = ", ".join((["method"] if method is not _UNSET else [])
+                            + list(passed))
+            raise TypeError(
+                f"got both a QuantSpec ({spec!s}) and loose quantizer "
+                f"kwargs ({bad}); fold them into the spec, e.g. "
+                f"'kmeans_ls@16:weighted=true'")
+        return QuantSpec.parse(spec)
+    if isinstance(spec, str):
+        name = spec
+    elif spec is None and isinstance(method, str):
+        name = method
+    else:
+        raise TypeError(
+            "quantize API needs a QuantSpec, a spec string like "
+            "'kmeans_ls@16' / 'l1_ls:lam=0.02', or (deprecated) a method "
+            f"name plus kwargs; got spec={spec!r}, method={method!r}")
+    out = QuantSpec(name, **passed)
+    warnings.warn(
+        f"loose quantizer kwargs (method={name!r}, "
+        f"{', '.join(f'{k}={v!r}' for k, v in passed.items()) or 'no params'}"
+        f") are deprecated; pass the spec {str(out)!r} (string or QuantSpec) "
+        f"instead", DeprecationWarning, stacklevel=_warn_stacklevel)
+    return out
+
+
+def quantize(w, spec=None, *, method=_UNSET, num_values=_UNSET, lam=_UNSET,
+             lam2=_UNSET, weighted=_UNSET, clip=_UNSET, seed=_UNSET,
+             **kw: Any) -> tuple[types.QuantizedTensor, dict]:
+    """Quantize any array into a value-shared QuantizedTensor.
+
+    ``spec`` is a QuantSpec or compact spec string; the loose
+    method/num_values/lam/... kwargs are the deprecated pre-spec surface.
+    Extra ``**kw`` (e.g. ``max_sweeps``, ``bisect_steps``) pass through to
+    the method's host solver.
+    """
+    spec = resolve_spec(spec, method=method, num_values=num_values, lam=lam,
+                        lam2=lam2, weighted=weighted, clip=clip, seed=seed)
     t0 = time.perf_counter()
+    solver = registry.get(spec.method)
     w_np = np.asarray(w)
     vals, counts, inverse = unique_with_counts(w_np)
-    problem = make_problem(vals, counts, weighted=weighted)
+    problem = make_problem(vals, counts, weighted=spec.weighted)
     m = problem.m
-    info: dict[str, Any] = {"m_unique": m, "method": method}
-
-    if method in LAM_METHODS and lam is None:
-        raise ValueError(f"method {method!r} requires lam=")
-    if method in COUNT_METHODS and num_values is None:
-        raise ValueError(f"method {method!r} requires num_values=")
-    if num_values is not None:
-        num_values = int(min(num_values, m))
-
-    if method == "l1":
-        alpha, sweeps = cd_solve(problem, jnp.float32(lam), **kw)
-        recon = reconstruct(alpha, problem.d)
-        info["sweeps"] = int(sweeps)
-    elif method == "l1_ls":
-        alpha, sweeps = cd_solve(problem, jnp.float32(lam), **kw)
-        recon, alpha = refit_support(problem, support_of(alpha))
-        info["sweeps"] = int(sweeps)
-    elif method == "l1l2":
-        if lam2 is None:
-            lam2 = 0.25 * max_stable_lam2(problem)
-        else:
-            lam2 = min(lam2, 0.49 * max_stable_lam2(problem))  # keep convex (DESIGN §8)
-        alpha, sweeps = cd_solve(problem, jnp.float32(lam), jnp.float32(lam2), **kw)
-        recon, alpha = refit_support(problem, support_of(alpha))
-        info["sweeps"] = int(sweeps)
-        info["lam2"] = float(lam2)
-    elif method == "tv":
-        u = tv_solve_problem(problem, float(lam))
-        support = jnp.asarray(np.abs(np.diff(u, prepend=0.0)) > 1e-10)
-        recon, alpha = refit_support(problem, support)
-    elif method == "l0":
-        alpha, nnz = l0_quantize(problem, num_values, **kw)
-        recon, alpha = refit_support(problem, support_of(alpha))
-        info["nnz"] = nnz
-    elif method == "iter_l1":
-        recon, alpha, nnz, iters = iterative_l1(problem, num_values, **kw)
-        info.update(nnz=nnz, iters=iters)
-    elif method == "tv_iter":
-        recon, alpha, nnz, iters = tv_iterative(problem, num_values, **kw)
-        info.update(nnz=nnz, iters=iters)
-    elif method == "kmeans_ls":
-        recon, alpha, _, iters = kmeans_ls_quantize(problem, num_values, seed=seed, **kw)
-        info["lloyd_iters"] = int(iters)
-    elif method == "kmeans":
-        recon, _, _, inertia, iters = kmeans_quantize_unique(
-            problem.w_hat, problem.counts, num_values, seed=seed, **kw)
-        alpha = None
-        info.update(inertia=float(inertia), lloyd_iters=int(iters))
-    elif method == "mog":
-        recon, _, _ = mog_quantize_unique(problem.w_hat, problem.counts, num_values,
-                                          seed=seed, **kw)
-        alpha = None
-    elif method == "dtc":
-        recon, _, _ = dtc_quantize_unique(problem.w_hat, problem.counts, num_values,
-                                          seed=seed, **kw)
-        alpha = None
-    elif method == "dp":
-        recon, _, _, sse = optimal_kmeans_1d(vals, counts if weighted else np.ones_like(counts),
-                                             num_values)
-        alpha = None
-        info["sse_unique"] = sse
-    else:
-        raise ValueError(f"unknown method {method!r}; one of {ALL_METHODS}")
+    info: dict[str, Any] = {"m_unique": m, "method": spec.method,
+                            "spec": spec.to_json()}
+    budget = (None if spec.num_values is None
+              else int(min(spec.num_values, m)))
+    ctx = registry.HostSolveContext(problem=problem, vals=vals, counts=counts,
+                                    num_values=budget, info=info)
+    recon, alpha = solver.host_solve(ctx, spec, **kw)
 
     recon = np.asarray(recon).astype(np.float64)
-    if clip is not None:
-        recon = np.clip(recon, clip[0], clip[1])  # hard-sigmoid, eq. 21
+    if spec.clip is not None:
+        recon = np.clip(recon, spec.clip[0], spec.clip[1])  # eq. 21
     qt = types.from_dense(w_np, recon, inverse)
     full = np.asarray(qt.to_dense()).reshape(-1).astype(np.float64)
     flat = np.asarray(w_np).reshape(-1).astype(np.float64)

@@ -1,0 +1,257 @@
+"""Solver registry: one entry per quantization method.
+
+The paper's contribution is a *family* of interchangeable solvers for the
+same sparse least-square objective. This registry is the single place a
+method's capabilities are declared:
+
+  param_kind          "lam" (penalty-parameterised: l1/l1_ls/l1l2/tv) or
+                      "count" (budget-parameterised: kmeans_ls, l0, ...).
+                      ``QuantSpec`` validates its parameters against this at
+                      construction time.
+  host_solve          the reference host path ``(ctx, spec, **kw) ->
+                      (recon, alpha)`` on the sorted-unique problem
+                      (``core.api.quantize`` is a thin driver over it).
+  device_batch        dotted reference ("module:function") to a batched
+                      on-device row solver ``(rows, spec) -> (codes, cb)``
+                      used by KV-page freezing; resolved lazily so the core
+                      package never imports kernel code at import time.
+  tree_batched        the method can quantize a whole parameter tree in one
+                      batched kernel launch (``quant.ptq.quantize_tree``'s
+                      FISTA path).
+
+Adding a solver is a single ``register(Solver(...))`` call; every consumer
+(``quantize``, PTQ, the serving engine's freeze path, benchmarks, CLI flag
+validation) discovers it from here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cd import cd_solve, max_stable_lam2
+from .dp_optimal import optimal_kmeans_1d
+from .dtc import dtc_quantize_unique
+from .iterative import iterative_l1, tv_iterative
+from .kmeans import kmeans_quantize_unique
+from .kmeans_ls import kmeans_ls_quantize
+from .l0 import l0_quantize
+from .mog import mog_quantize_unique
+from .problem import LSQProblem, reconstruct
+from .refit import refit_support, support_of
+from .tv_exact import tv_solve_problem
+
+
+@dataclasses.dataclass
+class HostSolveContext:
+    """What a host solver sees: the sorted-unique problem plus the raw
+    unique values/counts (float64, for solvers that want full precision)
+    and the count budget already clamped to ``m``. ``info`` is the
+    quantize() report dict solvers append diagnostics to."""
+
+    problem: LSQProblem
+    vals: np.ndarray
+    counts: np.ndarray
+    num_values: int | None
+    info: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Solver:
+    """Registry entry declaring one method's parameterisation and backends."""
+
+    name: str
+    param_kind: str                       # "lam" | "count"
+    host_solve: Callable[..., Any]
+    device_batch: str | None = None       # "module:function", lazy-resolved
+    accepts_lam2: bool = False
+    tree_batched: bool = False
+    description: str = ""
+
+    def __post_init__(self):
+        assert self.param_kind in ("lam", "count"), self.param_kind
+
+
+_REGISTRY: dict[str, Solver] = {}
+
+
+def register(solver: Solver) -> Solver:
+    _REGISTRY[solver.name] = solver
+    return solver
+
+
+def get(name: str) -> Solver:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantization method {name!r}; registered methods: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def methods() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def lam_methods() -> tuple[str, ...]:
+    return tuple(n for n, s in _REGISTRY.items() if s.param_kind == "lam")
+
+
+def count_methods() -> tuple[str, ...]:
+    return tuple(n for n, s in _REGISTRY.items() if s.param_kind == "count")
+
+
+def device_methods() -> tuple[str, ...]:
+    """Methods with a batched on-device row solver (KV freezing needs no
+    per-page host numpy for these)."""
+    return tuple(n for n, s in _REGISTRY.items() if s.device_batch)
+
+
+_DEVICE_CACHE: dict[str, Callable] = {}
+
+
+def device_batch_solve(name: str) -> Callable:
+    """Resolve a method's device row solver ``(rows, spec) -> (codes, cb)``.
+
+    The reference is a dotted "module:function" string so importing
+    ``repro.core`` never pulls in kernel/accelerator code; the import
+    happens on first use (the serving freeze path).
+    """
+    solver = get(name)
+    if not solver.device_batch:
+        raise ValueError(
+            f"method {name!r} has no batched device solver; device-capable "
+            f"methods: {', '.join(device_methods())}")
+    fn = _DEVICE_CACHE.get(name)
+    if fn is None:
+        mod, _, attr = solver.device_batch.partition(":")
+        fn = getattr(importlib.import_module(mod), attr)
+        _DEVICE_CACHE[name] = fn
+    return fn
+
+
+# --------------------------------------------------------------- host solvers
+# Each closes over the module that implements it; signature
+# (ctx, spec, **kw) -> (recon, alpha_or_None). ``kw`` carries solver extras
+# (max_sweeps, bisect_steps, ...) passed through quantize().
+
+
+def _solve_l1(ctx, spec, **kw):
+    alpha, sweeps = cd_solve(ctx.problem, jnp.float32(spec.lam), **kw)
+    ctx.info["sweeps"] = int(sweeps)
+    return reconstruct(alpha, ctx.problem.d), alpha
+
+
+def _solve_l1_ls(ctx, spec, **kw):
+    alpha, sweeps = cd_solve(ctx.problem, jnp.float32(spec.lam), **kw)
+    ctx.info["sweeps"] = int(sweeps)
+    return refit_support(ctx.problem, support_of(alpha))
+
+
+def _solve_l1l2(ctx, spec, **kw):
+    lam2 = spec.lam2
+    if lam2 is None:
+        lam2 = 0.25 * max_stable_lam2(ctx.problem)
+    else:
+        lam2 = min(lam2, 0.49 * max_stable_lam2(ctx.problem))  # keep convex
+    alpha, sweeps = cd_solve(ctx.problem, jnp.float32(spec.lam),
+                             jnp.float32(lam2), **kw)
+    ctx.info["sweeps"] = int(sweeps)
+    ctx.info["lam2"] = float(lam2)
+    return refit_support(ctx.problem, support_of(alpha))
+
+
+def _solve_tv(ctx, spec, **kw):
+    u = tv_solve_problem(ctx.problem, float(spec.lam), **kw)
+    support = jnp.asarray(np.abs(np.diff(u, prepend=0.0)) > 1e-10)
+    return refit_support(ctx.problem, support)
+
+
+def _solve_l0(ctx, spec, **kw):
+    alpha, nnz = l0_quantize(ctx.problem, ctx.num_values, **kw)
+    ctx.info["nnz"] = nnz
+    return refit_support(ctx.problem, support_of(alpha))
+
+
+def _solve_iter_l1(ctx, spec, **kw):
+    recon, alpha, nnz, iters = iterative_l1(ctx.problem, ctx.num_values, **kw)
+    ctx.info.update(nnz=nnz, iters=iters)
+    return recon, alpha
+
+
+def _solve_tv_iter(ctx, spec, **kw):
+    recon, alpha, nnz, iters = tv_iterative(ctx.problem, ctx.num_values, **kw)
+    ctx.info.update(nnz=nnz, iters=iters)
+    return recon, alpha
+
+
+def _solve_kmeans_ls(ctx, spec, **kw):
+    recon, alpha, _, iters = kmeans_ls_quantize(ctx.problem, ctx.num_values,
+                                                seed=spec.seed, **kw)
+    ctx.info["lloyd_iters"] = int(iters)
+    return recon, alpha
+
+
+def _solve_kmeans(ctx, spec, **kw):
+    recon, _, _, inertia, iters = kmeans_quantize_unique(
+        ctx.problem.w_hat, ctx.problem.counts, ctx.num_values,
+        seed=spec.seed, **kw)
+    ctx.info.update(inertia=float(inertia), lloyd_iters=int(iters))
+    return recon, None
+
+
+def _solve_mog(ctx, spec, **kw):
+    recon, _, _ = mog_quantize_unique(ctx.problem.w_hat, ctx.problem.counts,
+                                      ctx.num_values, seed=spec.seed, **kw)
+    return recon, None
+
+
+def _solve_dtc(ctx, spec, **kw):
+    recon, _, _ = dtc_quantize_unique(ctx.problem.w_hat, ctx.problem.counts,
+                                      ctx.num_values, seed=spec.seed, **kw)
+    return recon, None
+
+
+def _solve_dp(ctx, spec, **kw):
+    recon, _, _, sse = optimal_kmeans_1d(
+        ctx.vals,
+        ctx.counts if spec.weighted else np.ones_like(ctx.counts),
+        ctx.num_values, **kw)
+    ctx.info["sse_unique"] = sse
+    return recon, None
+
+
+# --------------------------------------------------------------- registration
+
+register(Solver("l1", "lam", _solve_l1,
+                description="eq. 6 - raw l1 CD (no refit)"))
+register(Solver("l1_ls", "lam", _solve_l1_ls, tree_batched=True,
+                description="alg. 1 - l1 CD + LS refit on the support "
+                            "(tree-batched via the FISTA Pallas kernel)"))
+register(Solver("l1l2", "lam", _solve_l1l2, accepts_lam2=True,
+                description="eq. 13 - l1 + negative-l2 CD (+ refit)"))
+register(Solver("tv", "lam", _solve_tv,
+                description="beyond-paper exact O(m) global optimum of eq. 6"))
+register(Solver("l0", "count", _solve_l0,
+                description="eq. 16 - l0-constrained CD w/ gamma bisection"))
+register(Solver("iter_l1", "count", _solve_iter_l1,
+                device_batch="repro.kernels.page_quant:quantize_pages_fista_spec",
+                description="alg. 2 - lambda-ramp to <= num_values; device "
+                            "backend: batched FISTA + per-row lam bisection"))
+register(Solver("tv_iter", "count", _solve_tv_iter,
+                description="exact-count via lambda bisection on tv"))
+register(Solver("kmeans_ls", "count", _solve_kmeans_ls,
+                device_batch="repro.kernels.page_quant:quantize_pages_kmeans_spec",
+                description="alg. 3 - k-means support + LS values"))
+register(Solver("kmeans", "count", _solve_kmeans,
+                device_batch="repro.kernels.page_quant:quantize_pages_kmeans_raw_spec",
+                description="baseline §4 - plain 1-D k-means"))
+register(Solver("mog", "count", _solve_mog,
+                description="baseline §4 - mixture-of-Gaussians EM"))
+register(Solver("dtc", "count", _solve_dtc,
+                description="baseline §4 - decision-tree clustering"))
+register(Solver("dp", "count", _solve_dp,
+                description="optimal 1-D quantizer (loss lower bound)"))

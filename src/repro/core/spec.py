@@ -1,0 +1,227 @@
+"""QuantSpec: one hashable description of a quantizer configuration.
+
+Every quantization surface in the repo (host PTQ via ``core.quantize`` /
+``quant.ptq.quantize_tree``, batched device row solves for KV-page
+freezing, the serving engine's ``kv_quant``, benchmark artifacts and CLI
+flags) is parameterised by the same frozen dataclass:
+
+    QuantSpec("kmeans_ls", num_values=16)
+    QuantSpec("l1_ls", lam=0.02, weighted=True)
+
+Specs round-trip through a compact string form, used by CLI flags and
+test parametrisation::
+
+    kmeans_ls@16                    count method @ budget
+    l1_ls:lam=0.02                  lam method : penalty
+    l1l2:lam=0.05,lam2=0.01         extra solver parameters
+    kmeans_ls@16:weighted=true,seed=3,clip=-1.0..1.0
+
+``QuantSpec.parse(str(spec)) == spec`` holds for every valid spec, and
+``to_json``/``from_json`` round-trip through the dict form stored in
+``BENCH_*.json`` rows so perf trajectories attribute to an exact solver
+configuration.
+
+Validation happens at construction time against ``core.registry``: unknown
+methods, a count budget on a lam-parameterised method (or vice versa), and
+``lam2`` on anything but ``l1l2`` all raise immediately — consumers (the
+serving engine, jitted freeze functions keyed on the spec) never see a
+half-legal configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from . import registry
+
+_DEFAULTS = dict(num_values=None, lam=None, lam2=None, weighted=False,
+                 clip=None, seed=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Frozen, hashable quantizer configuration (safe as a jit static arg).
+
+    method      registry name (see ``core.registry.methods()``).
+    num_values  codebook budget — required for count-parameterised methods,
+                rejected for lam-parameterised ones.
+    lam         l1 penalty — required for lam methods, rejected for count
+                methods.
+    lam2        negative-l2 strength, ``l1l2`` only (None = auto-stable).
+    weighted    optimize the true full-vector loss (multiplicity-weighted);
+                False is the paper's unique-values objective.
+    clip        optional (lo, hi) hard-sigmoid on the codebook (eq. 21).
+    seed        clustering init seed (kmeans/mog/dtc families).
+    """
+
+    method: str
+    num_values: int | None = None
+    lam: float | None = None
+    lam2: float | None = None
+    weighted: bool = False
+    clip: tuple[float, float] | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        solver = registry.get(self.method)    # raises on unknown method
+        _set = object.__setattr__
+        if self.num_values is not None:
+            _set(self, "num_values", int(self.num_values))
+        if self.lam is not None:
+            _set(self, "lam", float(self.lam))
+        if self.lam2 is not None:
+            _set(self, "lam2", float(self.lam2))
+        _set(self, "weighted", bool(self.weighted))
+        _set(self, "seed", int(self.seed))
+        if self.clip is not None:
+            lo, hi = self.clip
+            _set(self, "clip", (float(lo), float(hi)))
+        if solver.param_kind == "lam":
+            if self.lam is None:
+                raise ValueError(
+                    f"method {self.method!r} is lam-parameterised: "
+                    f"QuantSpec requires lam= (e.g. '{self.method}:lam=0.02')")
+            if self.num_values is not None:
+                raise ValueError(
+                    f"num_values= is not valid for lam-parameterised method "
+                    f"{self.method!r}; count-parameterised methods: "
+                    f"{', '.join(registry.count_methods())}")
+        else:
+            if self.num_values is None:
+                raise ValueError(
+                    f"method {self.method!r} is count-parameterised: "
+                    f"QuantSpec requires num_values= "
+                    f"(e.g. '{self.method}@16')")
+            if self.num_values < 1:
+                raise ValueError(f"num_values must be >= 1, got "
+                                 f"{self.num_values}")
+            if self.lam is not None or self.lam2 is not None:
+                raise ValueError(
+                    f"lam=/lam2= are not valid for count-parameterised "
+                    f"method {self.method!r}; lam-parameterised methods: "
+                    f"{', '.join(registry.lam_methods())}")
+        if self.lam2 is not None and not solver.accepts_lam2:
+            raise ValueError(f"lam2= is only valid for methods that accept "
+                             f"it (l1l2), not {self.method!r}")
+        if self.lam is not None and self.lam < 0:
+            raise ValueError(f"lam must be >= 0, got {self.lam}")
+
+    # ----------------------------------------------------------- registry
+    @property
+    def solver(self) -> registry.Solver:
+        return registry.get(self.method)
+
+    @property
+    def param_kind(self) -> str:
+        return self.solver.param_kind
+
+    @property
+    def device_capable(self) -> bool:
+        """A batched on-device row solver exists for this method."""
+        return self.solver.device_batch is not None
+
+    def replace(self, **kw) -> "QuantSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------ compact string
+    def __str__(self) -> str:
+        head = self.method
+        if self.num_values is not None:
+            head += f"@{self.num_values}"
+        opts = []
+        if self.lam is not None:
+            opts.append(f"lam={_fmt_float(self.lam)}")
+        if self.lam2 is not None:
+            opts.append(f"lam2={_fmt_float(self.lam2)}")
+        if self.weighted:
+            opts.append("weighted=true")
+        if self.clip is not None:
+            opts.append(f"clip={_fmt_float(self.clip[0])}.."
+                        f"{_fmt_float(self.clip[1])}")
+        if self.seed != 0:
+            opts.append(f"seed={self.seed}")
+        return head + (":" + ",".join(opts) if opts else "")
+
+    @classmethod
+    def parse(cls, s: "str | QuantSpec") -> "QuantSpec":
+        """Parse the compact string form (idempotent on QuantSpec input)."""
+        if isinstance(s, QuantSpec):
+            return s
+        if not isinstance(s, str):
+            raise TypeError(f"QuantSpec.parse wants a string or QuantSpec, "
+                            f"got {type(s).__name__}")
+        head, _, opts = s.strip().partition(":")
+        method, _, budget = head.partition("@")
+        kw: dict[str, Any] = {}
+        if budget:
+            try:
+                kw["num_values"] = int(budget)
+            except ValueError:
+                raise ValueError(f"bad count budget {budget!r} in spec "
+                                 f"{s!r} (want method@INT)") from None
+        if opts:
+            for item in opts.split(","):
+                k, sep, v = item.partition("=")
+                k = k.strip()
+                if not sep or not k:
+                    raise ValueError(f"bad option {item!r} in spec {s!r} "
+                                     f"(want key=value)")
+                if k in ("lam", "lam2"):
+                    kw[k] = float(v)
+                elif k == "num_values":
+                    kw[k] = int(v)
+                elif k == "weighted":
+                    kw[k] = _parse_bool(v, s)
+                elif k == "seed":
+                    kw[k] = int(v)
+                elif k == "clip":
+                    lo, sep2, hi = v.partition("..")
+                    if not sep2:
+                        raise ValueError(f"bad clip {v!r} in spec {s!r} "
+                                         f"(want clip=LO..HI)")
+                    kw[k] = (float(lo), float(hi))
+                else:
+                    raise ValueError(f"unknown spec option {k!r} in {s!r}; "
+                                     f"one of lam, lam2, num_values, "
+                                     f"weighted, clip, seed")
+        if not method:
+            raise ValueError(f"empty method in spec {s!r}")
+        return cls(method, **kw)
+
+    # -------------------------------------------------------------- JSON
+    def to_json(self) -> dict:
+        """Dict form for BENCH_*.json rows (clip as a 2-list)."""
+        d = {"method": self.method}
+        for k, default in _DEFAULTS.items():
+            v = getattr(self, k)
+            if v != default:
+                d[k] = list(v) if k == "clip" else v
+        d["str"] = str(self)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "QuantSpec":
+        kw = {k: v for k, v in d.items() if k in _DEFAULTS}
+        if kw.get("clip") is not None:
+            kw["clip"] = tuple(kw["clip"])
+        return cls(d["method"], **kw)
+
+
+def _fmt_float(v: float) -> str:
+    return repr(float(v))
+
+
+def _parse_bool(v: str, spec: str) -> bool:
+    lv = v.strip().lower()
+    if lv in ("1", "true", "yes", "on"):
+        return True
+    if lv in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(f"bad boolean {v!r} in spec {spec!r}")
+
+
+def as_spec(spec, **replace_kw) -> QuantSpec:
+    """Coerce a QuantSpec | compact string to QuantSpec (with optional
+    field overrides), for APIs that accept either form."""
+    out = QuantSpec.parse(spec)
+    return out.replace(**replace_kw) if replace_kw else out

@@ -11,7 +11,7 @@ tests sweep shapes/dtypes against the oracles in interpret mode.
 """
 from .fista_quant import fista_quant
 from .ops import default_interpret, power_iter_lipschitz, quant_matmul, solve_fista_batch
-from .page_quant import quantize_pages_device
+from .page_quant import quantize_pages_device, quantize_pages_fista
 from .paged_attention import (modeled_hbm_bytes_per_token, pack4,
                               paged_decode_attention, unpack4)
 from .quant_matmul import quant_matmul as quant_matmul_raw
@@ -22,4 +22,5 @@ __all__ = [
     "ref_fista", "ref_quant_matmul", "power_iter_lipschitz", "default_interpret",
     "paged_decode_attention", "ref_paged_decode", "pack4", "unpack4",
     "modeled_hbm_bytes_per_token", "quantize_pages_device",
+    "quantize_pages_fista",
 ]

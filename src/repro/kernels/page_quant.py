@@ -29,10 +29,16 @@ Implementation, chosen for the serving hot loop:
 The serving logit tolerance (abs<=2.5 / rel<=8% at 16 values) under this
 solver is asserted in tests/test_serving.py.
 
-lam-parameterized freezing (routing rows through the batched FISTA Pallas
-kernel in `kernels.fista_quant` plus a per-row lambda bisection to hit the
-4-bit budget) is the designed follow-on; count methods other than
-kmeans/kmeans_ls keep the host fallback in `serving.kv_cache`.
+``quantize_pages_fista`` is the lam-method device backend (registered for
+``iter_l1`` in ``core.registry``): every row is sketched the same way,
+solved by the batched FISTA Pallas kernel (`kernels.fista_quant`, the
+paper's eq.-6 l1 objective) under a *per-row* lambda found by bisection so
+the support fits the count budget, then assigned + LS-refit on the full
+row exactly like the kmeans path. Count methods without a device entry
+keep the host fallback in `serving.kv_cache`.
+
+The ``*_spec`` wrappers at the bottom are the registry's device entry
+points: ``(rows, spec) -> (codes, cb)`` keyed on one hashable QuantSpec.
 """
 from __future__ import annotations
 
@@ -140,3 +146,187 @@ def quantize_pages_device(
         # (membership fixed, values solved — Algorithm 3's step 2)
         centers = _seg_mean(rows, idx, centers, L)
     return idx.astype(jnp.uint8), centers.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- FISTA path
+
+
+def _suffix_sum(x):
+    cums = jnp.cumsum(x, axis=1)
+    return cums[:, -1:] - cums + x
+
+
+@functools.partial(jax.jit, static_argnames=("num_values", "n_iters",
+                                             "bisect_steps", "lloyd_rounds",
+                                             "interpret"))
+def _fista_pages(rows, *, num_values, n_iters, bisect_steps, lloyd_rounds,
+                 interpret):
+    from .fista_quant import fista_quant
+
+    R, E = rows.shape
+    L = num_values
+    T = 128                       # FISTA lane width
+    rows = rows.astype(jnp.float32)
+    svals = jnp.sort(rows, axis=1)
+    Es = min(E, T)    # one lane block; a 2-block sketch measured *worse*
+                      # (same budget spread over 2x the l1 coordinates)
+    # equal-mass quantile sketch *including both row extremes* — same
+    # fidelity argument as the kmeans path (module docstring)
+    spos = jnp.round(jnp.linspace(0, E - 1, Es)).astype(jnp.int32)
+    s = svals[:, spos]                                        # (R, Es) sorted
+    nb = -(-Es // T)
+    pad = nb * T - Es
+    w = jnp.pad(s, ((0, 0), (0, pad)))
+    d = jnp.pad(jnp.diff(s, axis=1, prepend=0.0), ((0, 0), (0, pad)))
+    n = jnp.pad(jnp.full((R, Es), E / Es, jnp.float32), ((0, 0), (0, pad)))
+
+    # precondition to unit column norms (same transform as ops.solve_fista_batch:
+    # the solved problem is identical, the Lipschitz constant ~14x lower)
+    nsuf = jnp.cumsum(n[:, ::-1], axis=1)[:, ::-1]
+    z = d * d * nsuf
+    scale = jnp.sqrt(jnp.where(z <= 0, 1.0, z))
+    dt = d / scale
+
+    def apply_op(x):              # x -> V^T diag(n) V x  (cumsum form)
+        v = n * jnp.cumsum(x * dt, axis=1)
+        return dt * _suffix_sum(v)
+
+    def power_iter(i, carry):
+        x, _ = carry
+        y = apply_op(x)
+        lam = jnp.maximum(jnp.sum(x * y, axis=1), 1e-30)
+        x = y / (jnp.linalg.norm(y, axis=1, keepdims=True) + 1e-30)
+        return x, lam
+
+    x0 = jnp.broadcast_to(jnp.sin(jnp.arange(nb * T, dtype=jnp.float32)
+                                  + 1.0), (R, nb * T))
+    x0 = x0 / (jnp.linalg.norm(x0, axis=1, keepdims=True) + 1e-30)
+    _, lip = lax.fori_loop(0, 40, power_iter, (x0, jnp.ones((R,))))
+    eta = (1.0 / (lip * 1.01)).reshape(R, 1, 1)
+
+    # lam_max: |gradient at alpha = 0|_inf per row in the *original*
+    # coordinates (the per-coordinate threshold is lam/scale, the gradient
+    # scales by 1/scale too) — alpha == 0 above it
+    g0 = d * _suffix_sum(n * w)
+    lam_hi = jnp.max(jnp.abs(g0), axis=1) * 1.001 + 1e-12
+
+    def solve(lam_row):
+        # lam scales 1/scale like d does, so the penalty stays lam*|alpha|
+        # on the *original* coordinates (solve_fista_batch's transform)
+        lam_full = lam_row[:, None] / scale * (n > 0)
+        blk = lambda a: a.reshape(R, nb, T)
+        alpha = fista_quant(blk(w), blk(dt), blk(n), blk(lam_full), eta,
+                            n_iters=n_iters, block_t=T, interpret=interpret)
+        return alpha.reshape(R, nb * T)
+
+    def nnz_of(alpha):
+        sup = jnp.abs(alpha) > 1e-12
+        # distinct reconstruction levels: support size, +1 for the implicit
+        # zero level when the first coordinate is off-support
+        return jnp.sum(sup, axis=1) + (1 - sup[:, 0].astype(jnp.int32)), sup
+
+    def bisect(i, carry):
+        lo, hi, best = carry
+        mid = 0.5 * (lo + hi)
+        alpha = solve(mid)
+        nnz, _ = nnz_of(alpha)
+        feas = nnz <= L            # nnz is non-increasing in lambda
+        lo = jnp.where(feas, lo, mid)
+        hi = jnp.where(feas, mid, hi)
+        best = jnp.where(feas[:, None], alpha, best)
+        return lo, hi, best
+
+    init = (jnp.zeros((R,)), lam_hi, jnp.zeros((R, nb * T)))
+    _, _, alpha = lax.fori_loop(0, bisect_steps, bisect, init)
+
+    # support -> level ids on the sketch (0-based, the implicit pre-support
+    # zero segment is its own level), then count-weighted segment means =
+    # the LS refit on the sketch support
+    _, sup = nnz_of(alpha)
+    sid = jnp.cumsum(sup.astype(jnp.int32), axis=1)
+    lid = jnp.clip(sid - sup[:, :1].astype(jnp.int32), 0, L - 1)
+    ohn = jax.nn.one_hot(lid, L, dtype=jnp.float32) * n[:, :, None]
+    num = jnp.einsum("re,rel->rl", w, ohn)
+    den = jnp.sum(ohn, axis=1)
+    mean = jnp.where(den > 0, num / jnp.maximum(den, 1e-20), -_BIG)
+    # segments are contiguous runs of sorted values, so nonempty means are
+    # ascending; empty levels inherit their left neighbor (static width L)
+    first = jnp.where(den[:, :1] > 0, mean[:, :1], s[:, :1])
+    centers = lax.associative_scan(
+        jnp.maximum, jnp.concatenate([first, mean[:, 1:]], axis=1), axis=1)
+    # polish on the *full* row: each round re-fixes the membership and
+    # re-solves the values (Algorithm 3's alternation, seeded by the l1
+    # support instead of a random init), then a final assignment + eq. 20
+    # LS refit — the same contract as the kmeans path: the returned
+    # codebook is the exact least-squares solution for its membership
+    def polish(_, c):
+        return _seg_mean(rows, _assign(rows, c), c, L)
+
+    centers = lax.fori_loop(0, lloyd_rounds, polish, centers)
+    idx = _assign(rows, centers)
+    centers = _seg_mean(rows, idx, centers, L)
+    return idx.astype(jnp.uint8), centers.astype(jnp.float32)
+
+
+def quantize_pages_fista(
+    rows: jax.Array,        # (R, E) one row per (page, group, k/v) tensor
+    *,
+    num_values: int,
+    n_iters: int = 100,
+    bisect_steps: int = 14,
+    lloyd_rounds: int = 0,
+    interpret: bool | None = None,
+):
+    """Batched lam-method page solver: sketch -> per-row lambda bisection
+    through the FISTA Pallas kernel -> full-row assignment + LS refit.
+
+    Returns (codes (R, E) uint8, cb (R, L) f32) — the same contract as
+    ``quantize_pages_device``, so the serving freeze path treats both as
+    interchangeable device backends. The bisection finds, per row, the
+    smallest lambda whose l1 support fits the ``num_values`` budget
+    (support count is non-increasing in lambda), i.e. the largest support
+    the budget admits; codebooks are sorted ascending, exactly L wide.
+
+    ``lloyd_rounds`` optionally alternates assignment/values on the full
+    row before the final refit (Algorithm 3's alternation seeded by the l1
+    support). It lowers row MSE monotonically but measurably does NOT
+    lower the serve-time max-logit deviation (one borderline codebook can
+    move a single worst logit either way), so the default keeps the pure
+    l1-support + eq. 20 contract, which also measures the best
+    serve-verification margin.
+    """
+    if interpret is None:
+        from .ops import default_interpret
+
+        interpret = default_interpret()
+    return _fista_pages(rows, num_values=num_values, n_iters=n_iters,
+                        bisect_steps=bisect_steps, lloyd_rounds=lloyd_rounds,
+                        interpret=interpret)
+
+
+# ------------------------------------------------- registry device entries
+# (rows, spec) -> (codes, cb); referenced by dotted name from core.registry
+# so importing repro.core never pulls kernel code. The device solvers are
+# deterministic (exact DP / FISTA), so spec.seed is meaningless here;
+# spec.clip applies to the codebook exactly like the host path (eq. 21).
+
+
+def _apply_clip(codes, cb, spec):
+    if spec.clip is not None:
+        cb = jnp.clip(cb, spec.clip[0], spec.clip[1])
+    return codes, cb
+
+
+def quantize_pages_kmeans_spec(rows, spec):
+    return _apply_clip(*quantize_pages_device(
+        rows, num_values=spec.num_values, refit=True), spec)
+
+
+def quantize_pages_kmeans_raw_spec(rows, spec):
+    return _apply_clip(*quantize_pages_device(
+        rows, num_values=spec.num_values, refit=False), spec)
+
+
+def quantize_pages_fista_spec(rows, spec):
+    return _apply_clip(*quantize_pages_fista(
+        rows, num_values=spec.num_values), spec)

@@ -96,6 +96,8 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, save_hlo: bool = False,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax<=0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     stats = analyze(txt)
     n_dev = mesh.size

@@ -3,14 +3,18 @@
 Static engine (one-shot fixed batch, the original path):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
-        --quantize kmeans_ls --num-values 16 --gen 16
+        --quantize kmeans_ls@16 --gen 16
 
 Continuous-batching engine under Poisson arrivals, optionally with
 codebook-quantized KV pages (the paper's solvers applied to the cache):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
-        --engine continuous --request-rate 4 \
-        --kv-quant kmeans_ls --kv-num-values 16
+        --engine continuous --request-rate 4 --kv-quant kmeans_ls@16
+
+``--quantize`` / ``--kv-quant`` take a QuantSpec string ("kmeans_ls@16",
+"iter_l1@16", "l1_ls:lam=0.02"); the registry's device-batched methods
+(kmeans_ls, kmeans, iter_l1) freeze KV pages without host solves. Legacy
+bare method names still combine with --num-values / --kv-num-values.
 
 With --kv-quant the run also replays a deterministic subset against the fp
 paged cache and reports the logit deviation. Documented tolerance (reduced
@@ -20,6 +24,28 @@ logit range at 16 values; greedy tokens typically agree exactly.
 import argparse
 import os
 import time
+
+_EPILOG = """\
+migration note (pre-spec flags -> QuantSpec strings):
+  --quantize kmeans_ls --num-values 16   ->  --quantize kmeans_ls@16:weighted=true
+                               (legacy PTQ always optimized the weighted
+                                full-vector loss; spell it in the spec)
+  --kv-quant kmeans_ls --kv-num-values 8 ->  --kv-quant kmeans_ls@8
+  --kv-quant tv                          ->  --kv-quant tv_iter@16
+  (lam methods)                          ->  --quantize l1_ls:lam=0.02
+Options fold into the spec: kmeans_ls@16:weighted=true,seed=3,clip=-1.0..1.0
+The old flag pairs keep working; QuantSpec strings are the canonical form
+used by BENCH_*.json artifacts and the registry-validated serving engine.
+"""
+
+
+def _ptq_spec(args) -> str:
+    """--quantize value -> spec string (legacy bare names combine with
+    --num-values; PTQ historically optimizes the weighted objective)."""
+    q = args.quantize
+    if "@" in q or ":" in q:
+        return q
+    return f"{q}@{args.num_values}:weighted=true"
 
 
 def _run_static(args):
@@ -34,10 +60,9 @@ def _run_static(args):
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     if args.quantize:
-        qtree, report = quantize_tree(params, method=args.quantize,
-                                      num_values=args.num_values,
-                                      weighted=True)
-        print(f"[serve] PTQ {args.quantize}@{args.num_values}: "
+        spec = _ptq_spec(args)
+        qtree, report = quantize_tree(params, spec)
+        print(f"[serve] PTQ {spec}: "
               f"{len(report)} tensors, {compression_ratio(report):.1f}x")
         params = dequantize_tree(qtree)
 
@@ -108,7 +133,7 @@ def _verify_kv_quant(params, cfg, args):
     rel = dmax / max(scale, 1e-9)
     tol_abs, tol_rel = 2.5, 0.08
     ok = dmax <= tol_abs and rel <= tol_rel
-    print(f"[serve] kv-quant check ({args.kv_quant}@{args.kv_num_values}): "
+    print(f"[serve] kv-quant check ({q.kv_spec}): "
           f"max|dlogit|={dmax:.3f} mean={dmean:.4f} rel={rel:.3%} "
           f"(tolerance: abs<={tol_abs}, rel<={tol_rel:.0%}) "
           f"greedy-token agreement {agree}/{total} -> "
@@ -131,12 +156,12 @@ def _run_continuous(args):
 
         # QuantizedTensor leaves are served as-is: attention/ffn projections
         # route through qmatmul's fused dequant path, never densifying.
+        spec = _ptq_spec(args)
         params, report = quantize_tree(
-            params, method=args.quantize, num_values=args.num_values,
-            weighted=True,
+            params, spec,
             skip_patterns=("ln", "norm", "router", "A_log", "mix", "dt_bias",
                            "D_skip", "w0", "embed", "lm_head"))
-        print(f"[serve] PTQ {args.quantize}@{args.num_values}: "
+        print(f"[serve] PTQ {spec}: "
               f"{len(report)} tensors, {compression_ratio(report):.1f}x, "
               "serving undequantized via qmatmul")
 
@@ -151,7 +176,7 @@ def _run_continuous(args):
           f"Poisson rate {args.request_rate}/s, prompt {args.prompt_len}, "
           f"gen {args.gen}, {args.max_slots} slots x "
           f"{args.max_seq_len} tokens, block {args.block_size}, "
-          f"kv={args.kv_quant or 'fp'}")
+          f"kv={eng.kv_spec or 'fp'}")
     s = eng.run(trace)
     if not s["completed"]:
         print(f"[serve] no requests completed ({s['rejected']} rejected — "
@@ -183,7 +208,8 @@ def _run_continuous(args):
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EPILOG, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", default="qwen3_0_6b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--engine", choices=("static", "continuous"),
@@ -192,8 +218,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=None)
     ap.add_argument("--gen", type=int, default=None)
     ap.add_argument("--quantize", default=None,
-                    help="PTQ method for weights (e.g. kmeans_ls, l1_ls, tv)")
-    ap.add_argument("--num-values", type=int, default=16)
+                    help="PTQ QuantSpec for weights (e.g. kmeans_ls@16, "
+                         "l1_ls:lam=0.02; bare method names combine with "
+                         "--num-values)")
+    ap.add_argument("--num-values", type=int, default=16,
+                    help="legacy count budget for a bare --quantize method")
     # continuous engine
     ap.add_argument("--request-rate", type=float, default=4.0,
                     help="Poisson arrival rate, requests/s")
@@ -202,8 +231,13 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--max-seq-len", type=int, default=256)
     ap.add_argument("--kv-quant", default=None,
-                    help="page codebook method (kmeans_ls, tv, kmeans, dtc)")
-    ap.add_argument("--kv-num-values", type=int, default=16)
+                    help="page codebook QuantSpec (kmeans_ls@16, iter_l1@16, "
+                         "tv_iter@16, dtc@16; bare method names combine "
+                         "with --kv-num-values)")
+    ap.add_argument("--kv-num-values", type=int, default=None,
+                    help="legacy count budget for a bare --kv-quant method "
+                         "(default 16; conflicts with a spec-form "
+                         "--kv-quant)")
     ap.add_argument("--attn-impl", choices=("auto", "fused", "gather"),
                     default="auto",
                     help="decode read path: fused Pallas paged-attention "

@@ -1,23 +1,34 @@
 """Post-training quantization of whole checkpoints with the paper's methods.
 
-Per-tensor (optionally per-output-channel) sparse-LSQ quantization; the
-batched FISTA Pallas kernel quantizes many rows/tensors in one launch; CD is
-the host path for small tensors. Returns a pytree mirroring params with
-QuantizedTensor leaves (skips norms/routers/SSM-sensitive leaves per
-cfg.quant_skip).
+Spec-driven: ``quantize_tree(params, spec)`` takes the same
+:class:`~repro.core.QuantSpec` (object or compact string) as every other
+quantization surface. Per-tensor host solves are the default path;
+``batched=True`` routes lam-parameterised specs whose registry entry is
+``tree_batched`` (l1_ls) through the batched FISTA Pallas kernel — every
+eligible tensor padded to a common unique-value length and solved in one
+launch (the PTQ throughput path, formerly the separate
+``quantize_tree_batched_fista`` entry point, kept as a deprecated shim).
+Returns a pytree mirroring params with QuantizedTensor leaves (skips
+norms/routers/SSM-sensitive leaves per ``skip_patterns``).
 """
 from __future__ import annotations
 
 import re
+import warnings
 
 import jax
 import numpy as np
 
-from repro.core import QuantizedTensor, quantize, stack_quantized
+from repro.core import (QuantizedTensor, QuantSpec, quantize, registry,
+                        stack_quantized)
+from repro.core.api import _UNSET, resolve_spec
 from repro.core.problem import make_problem, unique_with_counts
 from repro.core.refit import refit_support, support_of
 from repro.core.types import from_dense
 from repro.kernels import solve_fista_batch
+
+DEFAULT_SKIP = ("ln", "norm", "router", "A_log", "mix", "dt_bias", "D_skip",
+                "w0")
 
 
 def _names(path):
@@ -31,38 +42,71 @@ def should_quantize(path, leaf, skip_patterns) -> bool:
     return not any(re.search(p, name) for p in skip_patterns)
 
 
-def quantize_tree(params, *, method: str = "kmeans_ls", num_values: int = 256,
-                  lam: float | None = None, weighted: bool = True,
-                  skip_patterns=("ln", "norm", "router", "A_log", "mix",
-                                 "dt_bias", "D_skip", "w0"),
-                  stacked_paths=("groups",)):
+def _tree_spec(spec, method, num_values, lam, weighted) -> QuantSpec:
+    """quantize_tree's shim defaults differ from quantize's (PTQ always
+    optimized the full-vector loss): weighted defaults True, the count
+    budget to 256."""
+    if spec is None and method is _UNSET:
+        method = "kmeans_ls"
+    if (spec is not None and not isinstance(spec, QuantSpec)
+            and ("@" not in spec and ":" not in spec)) or method is not _UNSET:
+        # legacy path: apply the historical defaults before resolving
+        if num_values is _UNSET and lam is _UNSET:
+            num_values = 256
+        if weighted is _UNSET:
+            weighted = True
+    return resolve_spec(spec, method=method, num_values=num_values, lam=lam,
+                        weighted=weighted, _warn_stacklevel=4)
+
+
+def quantize_tree(params, spec=None, *, method=_UNSET, num_values=_UNSET,
+                  lam=_UNSET, weighted=_UNSET,
+                  skip_patterns=DEFAULT_SKIP, stacked_paths=("groups",),
+                  batched: bool = False, **solver_kw):
     """Quantize every eligible leaf. Returns (qtree, report).
 
-    Leaves under a ``stacked_paths`` subtree (the transformer's scanned
-    layer groups) carry a leading group axis; each slice is quantized
-    independently and restacked (``stack_quantized``), so the resulting
-    QuantizedTensor still scans — lax.scan slices codebook and indices in
-    lockstep.
+    ``spec`` is a QuantSpec or compact string ("kmeans_ls@256:weighted=true",
+    "l1_ls:lam=0.02"); the loose method/num_values/lam kwargs remain as a
+    deprecation shim. ``batched=True`` solves every leaf in one FISTA
+    kernel launch (lam methods with a ``tree_batched`` registry entry).
+
+    In the per-leaf path, leaves under a ``stacked_paths`` subtree (the
+    transformer's scanned layer groups) carry a leading group axis; each
+    slice is quantized independently and restacked (``stack_quantized``),
+    so the resulting QuantizedTensor still scans — lax.scan slices codebook
+    and indices in lockstep. The batched path solves each leaf as one
+    vector (stacked groups share a codebook).
     """
+    spec = _tree_spec(spec, method, num_values, lam, weighted)
+    if batched:
+        if not registry.get(spec.method).tree_batched:
+            raise ValueError(
+                f"batched=True needs a tree-batched lam method "
+                f"(registry: "
+                f"{', '.join(n for n in registry.methods() if registry.get(n).tree_batched)}), "
+                f"got {str(spec)!r}")
+        return _quantize_tree_batched(params, spec,
+                                      skip_patterns=skip_patterns,
+                                      **solver_kw)
     report = {}
 
     def per_leaf(path, leaf):
         if not should_quantize(path, leaf, skip_patterns):
             return leaf
-        kw = dict(num_values=num_values) if lam is None else dict(lam=lam)
         names = _names(path)
         arr = np.asarray(leaf)
         if names and names[0] in stacked_paths and arr.ndim >= 3:
-            parts = [quantize(arr[g], method, weighted=weighted, **kw)
+            parts = [quantize(arr[g], spec, **solver_kw)
                      for g in range(arr.shape[0])]
             qt = stack_quantized([q for q, _ in parts])
             info = {"n_values": qt.num_values,
                     "l2_loss": float(sum(i["l2_loss"] for _, i in parts))}
         else:
-            qt, info = quantize(arr, method, weighted=weighted, **kw)
+            qt, info = quantize(arr, spec, **solver_kw)
         report["/".join(names)] = {
             "n_values": info["n_values"], "l2_loss": info["l2_loss"],
             "bytes": qt.nbytes(), "dense_bytes": leaf.size * leaf.dtype.itemsize,
+            "spec": str(spec),
         }
         return qt
 
@@ -70,13 +114,12 @@ def quantize_tree(params, *, method: str = "kmeans_ls", num_values: int = 256,
     return qtree, report
 
 
-def quantize_tree_batched_fista(params, *, lam: float, n_iters: int = 1000,
-                                weighted: bool = True, max_unique: int = 4096,
-                                skip_patterns=("ln", "norm", "router",
-                                               "A_log", "mix", "dt_bias",
-                                               "D_skip", "w0")):
+def _quantize_tree_batched(params, spec: QuantSpec, *, n_iters: int = 1000,
+                           max_unique: int = 4096,
+                           skip_patterns=DEFAULT_SKIP):
     """One Pallas launch per round: all eligible tensors padded to a common
-    unique-value length and solved together (the PTQ throughput path)."""
+    unique-value length and solved together, then LS-refit on their l1
+    supports (the spec's method contract — l1_ls — solved by FISTA)."""
     leaves = []
     jax.tree_util.tree_map_with_path(
         lambda p, l: leaves.append((p, l)) if should_quantize(p, l, skip_patterns)
@@ -108,25 +151,42 @@ def quantize_tree_batched_fista(params, *, lam: float, n_iters: int = 1000,
         m = len(vals)
         W[i, :m] = vals
         D[i, :m] = np.diff(vals, prepend=0.0)
-        N[i, :m] = counts if weighted else 1.0
-    alpha = solve_fista_batch(W, D, N, lam, n_iters=n_iters)
+        N[i, :m] = counts if spec.weighted else 1.0
+    alpha = solve_fista_batch(W, D, N, spec.lam, n_iters=n_iters)
 
     qtree_flat = {}
     report = {}
     for i, (path, leaf, vals, counts, inv) in enumerate(probs):
         m = len(vals)
-        prob = make_problem(vals, counts, weighted=weighted)
+        prob = make_problem(vals, counts, weighted=spec.weighted)
         sup = support_of(alpha[i, :m])
         recon, _ = refit_support(prob, sup)
-        qt = from_dense(np.asarray(leaf), np.asarray(recon), inv)
+        recon = np.asarray(recon)
+        if spec.clip is not None:
+            recon = np.clip(recon, spec.clip[0], spec.clip[1])
+        qt = from_dense(np.asarray(leaf), recon, inv)
         key = "/".join(_names(path))
         qtree_flat[key] = qt
-        report[key] = {"n_values": qt.num_values, "bytes": qt.nbytes()}
+        report[key] = {"n_values": qt.num_values, "bytes": qt.nbytes(),
+                       "spec": str(spec)}
 
     def per_leaf(path, leaf):
         return qtree_flat.get("/".join(_names(path)), leaf)
 
     return jax.tree_util.tree_map_with_path(per_leaf, params), report
+
+
+def quantize_tree_batched_fista(params, *, lam: float, n_iters: int = 1000,
+                                weighted: bool = True, max_unique: int = 4096,
+                                skip_patterns=DEFAULT_SKIP):
+    """Deprecated: folded into ``quantize_tree(params, spec, batched=True)``."""
+    spec = QuantSpec("l1_ls", lam=lam, weighted=weighted)
+    warnings.warn(
+        f"quantize_tree_batched_fista is deprecated; use "
+        f"quantize_tree(params, {str(spec)!r}, batched=True)",
+        DeprecationWarning, stacklevel=2)
+    return quantize_tree(params, spec, batched=True, n_iters=n_iters,
+                         max_unique=max_unique, skip_patterns=skip_patterns)
 
 
 def dequantize_tree(qtree):

