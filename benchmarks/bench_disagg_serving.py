@@ -1,0 +1,16 @@
+"""Disaggregated-serving benchmark suite entry point.
+
+Scenarios live in ``bench_serving.run_disagg`` (decode-TPOT isolation
+under a long-prompt burst; fp-vs-frozen KV page migration bytes/latency);
+this module exists so ``python -m benchmarks.run disagg_serving`` finds
+them under their artifact's name, BENCH_disagg_serving.json.
+
+    PYTHONPATH=src python -m benchmarks.run disagg_serving
+    PYTHONPATH=src python -m benchmarks.bench_serving --disagg
+"""
+from __future__ import annotations
+
+from .bench_serving import run_disagg as run
+
+if __name__ == "__main__":
+    run()

@@ -52,3 +52,29 @@ n_params = sum(int(x.size) for x in jax.tree.leaves(params))
 est = estimate_decode_bytes(n_params * 2, ratio, cache_bytes=0)
 print(f"v5e decode-step estimate: dense {est['t_dense_s']*1e6:.1f}us -> "
       f"quantized {est['t_quant_s']*1e6:.1f}us ({est['speedup']:.2f}x weight-read speedup)")
+
+# --- disaggregated serving with frozen KV page migration -------------------
+# The same solvers also compress the serving KV cache AND the prefill->
+# decode handoff: a DisaggEngine runs prompts on prefill workers and
+# migrates finished pages to decode workers as packed 4-bit codes +
+# per-block codebooks (migrate="frozen", ~7x fewer bytes than fp rows).
+# CLI equivalent (plus --prefill-workers/--decode-workers, the TTFT/TPOT
+# ratio knob, --freeze-page-budget, and --temperature/--top-k sampling —
+# see `python -m repro.launch.serve --help`):
+#   PYTHONPATH=src python -m repro.launch.serve --reduced --engine disagg \
+#       --kv-quant kmeans_ls@16 --migrate frozen --request-rate 4
+from repro.serving import DisaggEngine
+
+eng = DisaggEngine(params, cfg, prefill_workers=1, decode_workers=1,
+                   migrate="frozen", kv_quant="kmeans_ls@16",
+                   max_slots=B, block_size=16,
+                   max_seq_len=prompt_len + gen + 16)
+eng.generate([np.asarray(tokens[i]).tolist() for i in range(B)],
+             max_new_tokens=gen)
+s = eng.metrics.summary()
+c = eng.decode[0].counters
+print(f"disagg serve: {s['completed']} requests, prefill->decode handoff "
+      f"moved {c['migrate_bytes']/1e3:.1f} kB as codes+codebooks "
+      f"(fp rows would be {c['migrate_fp_equiv_bytes']/1e3:.1f} kB, "
+      f"{c['migrate_fp_equiv_bytes']/max(c['migrate_bytes'],1):.1f}x more), "
+      f"{c['host_page_solves']} host page solves")

@@ -11,21 +11,50 @@ codebook-quantized KV pages (the paper's solvers applied to the cache):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
         --engine continuous --request-rate 4 --kv-quant kmeans_ls@16
 
+Disaggregated prefill/decode serving — N prefill workers feed M decode
+workers through a global router; finished prompts migrate as fp pages or
+as packed codes + codebooks (``--migrate frozen``, ~7x fewer handoff
+bytes):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
+        --engine disagg --prefill-workers 1 --decode-workers 1 \
+        --kv-quant kmeans_ls@16 --migrate frozen --request-rate 4
+
 ``--quantize`` / ``--kv-quant`` take a QuantSpec string ("kmeans_ls@16",
 "iter_l1@16", "l1_ls:lam=0.02"); the registry's device-batched methods
 (kmeans_ls, kmeans, iter_l1) freeze KV pages without host solves. Legacy
 bare method names still combine with --num-values / --kv-num-values.
 
 With --kv-quant the run also replays a deterministic subset against the fp
-paged cache and reports the logit deviation. Documented tolerance (reduced
-configs, f32, per-page codebooks): max |dlogit| <= 2.5 and <= 8% of the
-logit range at 16 values; greedy tokens typically agree exactly.
+paged cache (same engine composition) and reports the logit deviation.
+Documented tolerance (reduced configs, f32, per-page codebooks): max
+|dlogit| <= 2.5 and <= 8% of the logit range at 16 values; greedy tokens
+typically agree exactly, with 0 host page solves for device-capable specs.
 """
 import argparse
 import os
 import time
 
 _EPILOG = """\
+disaggregated serving (--engine disagg):
+  --prefill-workers N / --decode-workers M   worker ratio = the TTFT/TPOT
+        tradeoff knob: more prefill workers drain the prompt queue faster
+        (TTFT), more decode workers hold more concurrent sequences (TPOT);
+        decode iterations never wait on a prefill either way.
+  --migrate fp|frozen   how finished prefill pages cross the handoff:
+        "fp" ships full-width rows (baseline); "frozen" routes full pages
+        through the batched device freeze (needs a device-capable
+        --kv-quant spec) so they cross as packed 4-bit codes + per-block
+        codebooks (~7x fewer bytes) and land directly servable by the
+        fused kernel. The run reports measured handoff bytes both ways.
+  --freeze-page-budget K   max pages quantized per decode step (colocated
+        and disagg): the backpressure valve that keeps a prefill burst of
+        full pages from backing up the device queue; deferred pages serve
+        exact fp until their turn and are counted in the summary.
+  --temperature T / --top-k K   engine-level sampling for the trace
+        (temperature 0 = greedy, the default and the verification path;
+        per-request seeds derive from --seed, so runs replay exactly).
+
 migration note (pre-spec flags -> QuantSpec strings):
   --quantize kmeans_ls --num-values 16   ->  --quantize kmeans_ls@16:weighted=true
                                (legacy PTQ always optimized the weighted
@@ -97,24 +126,41 @@ def _run_static(args):
           f"({B*G/dt:.1f} tok/s incl. compile); sample: {gen[0][:10].tolist()}")
 
 
-def _verify_kv_quant(params, cfg, args):
-    """Replay a deterministic batch fp-paged vs quantized-paged and report
-    the logit deviation the quantized cache introduces."""
-    import numpy as np
+def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
+                 freeze_async=True):
+    """Build the engine composition ``args`` asks for (colocated vs
+    disaggregated) — verification replays run through the same one."""
+    from repro.serving import ContinuousBatchingEngine, DisaggEngine
 
-    from repro.serving import ContinuousBatchingEngine
+    kw = dict(max_slots=args.max_slots, block_size=args.block_size,
+              max_seq_len=args.max_seq_len, kv_quant=kv_quant,
+              kv_num_values=args.kv_num_values, attn_impl=args.attn_impl,
+              record_logits=record_logits, freeze_async=freeze_async,
+              freeze_page_budget=args.freeze_page_budget)
+    if args.engine == "disagg":
+        # fp pages are the only thing that can migrate without a spec
+        migrate = args.migrate if kv_quant is not None else "fp"
+        return DisaggEngine(params, cfg,
+                            prefill_workers=args.prefill_workers,
+                            decode_workers=args.decode_workers,
+                            migrate=migrate, **kw)
+    return ContinuousBatchingEngine(params, cfg, **kw)
+
+
+def _verify_kv_quant(params, cfg, args):
+    """Replay a deterministic batch fp-paged vs quantized-paged through the
+    same engine composition and report the logit deviation the quantized
+    cache (plus, for disagg, the frozen page migration) introduces."""
+    import numpy as np
 
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len).tolist()
                for _ in range(min(3, args.max_slots))]
     outs, engines = [], []
     for kvq in (None, args.kv_quant):
-        eng = ContinuousBatchingEngine(
-            params, cfg, max_slots=args.max_slots,
-            block_size=args.block_size, max_seq_len=args.max_seq_len,
-            kv_quant=kvq, kv_num_values=args.kv_num_values,
-            record_logits=True, attn_impl=args.attn_impl,
-            freeze_async=False)     # deterministic install step for replay
+        eng = _make_engine(params, cfg, args, kv_quant=kvq,
+                           record_logits=True,
+                           freeze_async=False)  # deterministic install step
         outs.append(eng.generate(prompts, max_new_tokens=args.gen))
         engines.append(eng)
     fp, q = engines
@@ -131,22 +177,25 @@ def _verify_kv_quant(params, cfg, args):
         total += len(outs[0][i])
     dmean = dsum / max(dcount, 1)
     rel = dmax / max(scale, 1e-9)
+    host = (sum(w.counters["host_page_solves"] for w in q.decode)
+            if args.engine == "disagg"
+            else q.counters["host_page_solves"])
     tol_abs, tol_rel = 2.5, 0.08
     ok = dmax <= tol_abs and rel <= tol_rel
-    print(f"[serve] kv-quant check ({q.kv_spec}): "
+    mig = f", migrate={q.migrate}" if args.engine == "disagg" else ""
+    print(f"[serve] kv-quant check ({q.kv_spec}{mig}): "
           f"max|dlogit|={dmax:.3f} mean={dmean:.4f} rel={rel:.3%} "
           f"(tolerance: abs<={tol_abs}, rel<={tol_rel:.0%}) "
-          f"greedy-token agreement {agree}/{total} -> "
-          f"{'OK' if ok else 'EXCEEDED'}")
+          f"greedy-token agreement {agree}/{total}, {host} host page solves "
+          f"-> {'OK' if ok else 'EXCEEDED'}")
     return ok
 
 
 def _run_continuous(args):
     import jax
 
-    from repro import models
     from repro.configs import get_config, get_reduced_config
-    from repro.serving import ContinuousBatchingEngine
+    from repro import models
     from repro.serving.scheduler import poisson_trace
 
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
@@ -165,18 +214,20 @@ def _run_continuous(args):
               f"{len(report)} tensors, {compression_ratio(report):.1f}x, "
               "serving undequantized via qmatmul")
 
-    eng = ContinuousBatchingEngine(
-        params, cfg, max_slots=args.max_slots, block_size=args.block_size,
-        max_seq_len=args.max_seq_len, kv_quant=args.kv_quant,
-        kv_num_values=args.kv_num_values, attn_impl=args.attn_impl)
+    eng = _make_engine(params, cfg, args, kv_quant=args.kv_quant)
     trace = poisson_trace(args.num_requests, args.request_rate,
                           vocab=cfg.vocab, prompt_len=args.prompt_len,
-                          max_new_tokens=args.gen, seed=args.seed)
-    print(f"[serve] continuous batching: {args.num_requests} requests, "
+                          max_new_tokens=args.gen, seed=args.seed,
+                          temperature=args.temperature, top_k=args.top_k)
+    tag = (f"disagg {args.prefill_workers}P/{args.decode_workers}D "
+           f"migrate={eng.migrate}" if args.engine == "disagg"
+           else "continuous batching")
+    print(f"[serve] {tag}: {args.num_requests} requests, "
           f"Poisson rate {args.request_rate}/s, prompt {args.prompt_len}, "
           f"gen {args.gen}, {args.max_slots} slots x "
           f"{args.max_seq_len} tokens, block {args.block_size}, "
-          f"kv={eng.kv_spec or 'fp'}")
+          f"kv={eng.kv_spec or 'fp'}, sampling="
+          f"{'greedy' if args.temperature <= 0 else f'T={args.temperature},top_k={args.top_k}'}")
     s = eng.run(trace)
     if not s["completed"]:
         print(f"[serve] no requests completed ({s['rejected']} rejected — "
@@ -186,6 +237,8 @@ def _run_continuous(args):
           f"(rejected {s['rejected']}) in {s['makespan_s']:.2f}s: "
           f"{s['throughput_tok_s']:.1f} gen tok/s")
     print(f"[serve] TTFT mean {s['ttft_mean_s']*1e3:.0f}ms "
+          f"(= queue wait {s['queue_wait_mean_s']*1e3:.0f}ms + prefill "
+          f"compute {s['prefill_compute_mean_s']*1e3:.0f}ms) "
           f"p50 {s['ttft_p50_s']*1e3:.0f}ms p99 {s['ttft_p99_s']*1e3:.0f}ms | "
           f"TPOT p50 {s['tpot_p50_s']*1e3:.1f}ms p99 {s['tpot_p99_s']*1e3:.1f}ms")
     occ = s.get("cache_occupancy_mean", 0.0)
@@ -195,8 +248,15 @@ def _run_continuous(args):
           f"{s['freeze_dispatches']} dispatches -> {s['freeze_installs']} "
           f"installs, {s['host_page_solves']} host page solves, "
           f"{s['freeze_overlap_steps']} decode steps ran between dispatch "
-          f"and install | gather window <= {s['max_gather_blocks']} blocks "
-          f"(of {eng.max_blocks})")
+          f"and install, {s['freeze_deferred_pages']} pages deferred by the "
+          f"per-step budget ({args.freeze_page_budget}) | gather window <= "
+          f"{s['max_gather_blocks']} blocks")
+    if args.engine == "disagg":
+        mb = s.get("migrate_bytes", 0)
+        print(f"[serve] migration: {s['prefills_done']} prefills -> "
+              f"{s['migrated_seqs']} handoffs, {s['migrated_pages']} pages, "
+              f"{mb/1e6:.3f} MB crossed ({s['migrate_compression']:.1f}x "
+              f"fewer than fp rows at {s.get('migrate_fp_equiv_bytes', 0)/1e6:.3f} MB)")
     if args.kv_quant:
         print(f"[serve] cache bytes: frozen-page compression "
               f"{s['page_compression']:.1f}x per page; measured mean "
@@ -212,7 +272,7 @@ def main():
         epilog=_EPILOG, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", default="qwen3_0_6b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--engine", choices=("static", "continuous"),
+    ap.add_argument("--engine", choices=("static", "continuous", "disagg"),
                     default="static")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=None)
@@ -242,17 +302,41 @@ def main():
                     default="auto",
                     help="decode read path: fused Pallas paged-attention "
                          "kernel vs dense gather (auto: fused on TPU)")
+    # disaggregated engine
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="disagg: prefill worker count (the N of the N:M "
+                         "TTFT/TPOT ratio knob)")
+    ap.add_argument("--decode-workers", type=int, default=1,
+                    help="disagg: decode worker count")
+    ap.add_argument("--migrate", choices=("fp", "frozen"), default="fp",
+                    help="disagg page handoff: fp rows vs packed codes + "
+                         "codebooks via the device freeze path (needs a "
+                         "device-capable --kv-quant)")
+    ap.add_argument("--freeze-page-budget", type=int, default=4,
+                    help="max KV pages quantized per decode step (prefill-"
+                         "burst backpressure valve; deferred pages counted "
+                         "in the summary)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="engine-level sampling temperature for the trace "
+                         "(0 = greedy, the default and verification path)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation when sampling (0 = full vocab)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    if args.engine == "continuous" and args.request_rate <= 0:
+    serving = args.engine in ("continuous", "disagg")
+    if serving and args.request_rate <= 0:
         ap.error("--request-rate must be > 0 (requests per second)")
+    if args.engine == "disagg" and args.migrate == "frozen" \
+            and not args.kv_quant:
+        ap.error("--migrate frozen needs --kv-quant (pages cross as "
+                 "codes+codebooks)")
     if args.prompt_len is None:
-        args.prompt_len = 64 if args.engine == "continuous" else 16
+        args.prompt_len = 64 if serving else 16
     if args.gen is None:
-        args.gen = 32 if args.engine == "continuous" else 16
+        args.gen = 32 if serving else 16
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
-    if args.engine == "continuous":
+    if serving:
         _run_continuous(args)
     else:
         _run_static(args)

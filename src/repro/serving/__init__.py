@@ -1,15 +1,23 @@
-"""Continuous-batching serving subsystem: scheduler + paged
-(codebook-quantized) KV cache + engine + metrics."""
-from .engine import ContinuousBatchingEngine
+"""Serving subsystem: role-based workers (prefill/decode) over a paged
+(codebook-quantized) KV cache, composed either colocated
+(ContinuousBatchingEngine) or disaggregated behind a global router with
+fp/frozen KV page migration (DisaggEngine)."""
+from .engine import ContinuousBatchingEngine, DisaggEngine
 from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
                        freeze_blocks, freeze_markers, init_paged_cache,
                        page_bytes, resolve_kv_spec, thaw_blocks, with_tables)
 from .metrics import MetricsCollector, percentile
-from .scheduler import ContinuousBatchingScheduler, Request, SeqState
+from .scheduler import (ContinuousBatchingScheduler, DisaggRouter, Request,
+                        SeqState)
+from .transfer import (FinishedPrefill, PagePayload, extract_pages,
+                       splice_payload)
+from .workers import DecodeWorker, PrefillWorker, sample_token
 
 __all__ = [
-    "ContinuousBatchingEngine", "ContinuousBatchingScheduler", "Request",
-    "SeqState", "BlockAllocator", "PagedKVCache", "init_paged_cache",
+    "ContinuousBatchingEngine", "DisaggEngine", "ContinuousBatchingScheduler",
+    "DisaggRouter", "Request", "SeqState", "BlockAllocator", "PagedKVCache",
+    "DecodeWorker", "PrefillWorker", "FinishedPrefill", "PagePayload",
+    "extract_pages", "splice_payload", "sample_token", "init_paged_cache",
     "freeze_blocks", "freeze_markers", "thaw_blocks", "with_tables",
     "page_bytes", "resolve_kv_spec", "DEVICE_FREEZE_METHODS",
     "MetricsCollector", "percentile",

@@ -1,334 +1,151 @@
-"""Continuous-batching serving engine over the paged (optionally
-codebook-quantized) KV cache.
+"""Serving engines: thin run loops composed from the role-based workers in
+``serving.workers`` (``PrefillWorker``/``DecodeWorker``), the page-handoff
+layer in ``serving.transfer``, and the schedulers in ``serving.scheduler``.
 
-One engine iteration = admit new prefills (they join the in-flight batch),
-one fused decode step over every active slot, freeze any page that just
-filled (batched on-device sparse-LSQ quantization, dispatched async so
-decode keeps running while it completes), evict finished sequences and
-recycle their pages. The decode batch is a fixed (max_slots, 1) token
-shape; the gathered KV window is clamped to the blocks the longest live
-sequence needs (bounded retraces, one per distinct block count), so short
-batches parked next to idle slots don't pay ``max_blocks`` bandwidth.
-Idle slots write to the null page and their logits are ignored. Prefill
-runs per-request at block-rounded lengths — the new sequence decodes
-together with the rest of the batch in the same iteration, which is
-iteration-level (continuous) batching.
+``ContinuousBatchingEngine`` is the colocated composition — one decode
+worker plus a prefill worker *borrowing its pool*, so prefill runs inline
+per admission and the handoff is a no-op page-table splice. Its public
+behavior is the original monolithic engine's: iteration-level batching,
+FCFS admission, async budgeted page freezing, the clamped gather window.
 
-``attn_impl`` picks the decode read path: "fused" routes every decode step
+``DisaggEngine`` is the disaggregated composition — N prefill workers with
+their own pools feeding M decode workers through a global ``DisaggRouter``.
+Prefill is dispatched asynchronously (a long prompt never blocks a decode
+iteration; the worker-ratio N:M is the TTFT/TPOT tradeoff knob), and
+finished pages migrate via ``transfer``:
+
+    migrate="fp"      rows cross the handoff at full fp width (baseline)
+    migrate="frozen"  full pages cross as packed 4-bit codes + per-block
+                      sparse-LSQ codebooks (the paper's solvers via the
+                      existing dispatch_freeze path, ~7x fewer bytes) and
+                      land directly servable by the fused kernel
+
+``attn_impl`` picks the decode read path: "fused" routes decode steps
 through the Pallas paged-attention kernel (frozen pages dequantized in
 VMEM), "gather" expands pages to dense K/V in HBM first, "auto" fuses on
 TPU and gathers elsewhere (the kernel only interprets off-TPU).
 
-``kv_quant`` is a QuantSpec (object or compact string like "kmeans_ls@16"
-or "iter_l1@16"; legacy bare method + ``kv_num_values`` still resolves) —
+``kv_quant`` is a QuantSpec (object or compact string like "kmeans_ls@16")
 validated against the solver registry at construction, so an unfreezable
 configuration fails here, naming the device-capable methods, rather than
 mid-serve.
 
 Weights flow through ``repro.quant.serve.qmatmul`` untouched: dense params
-hit the plain matmul path, PTQ'd QuantizedTensor leaves would hit the fused
-dequant kernel — the engine is agnostic.
+hit the plain matmul path, PTQ'd QuantizedTensor leaves hit the fused
+dequant kernel — the engines are agnostic.
 """
 from __future__ import annotations
 
-import functools
 import time
 from collections import deque
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro import models
-from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
-                       init_paged_cache, install_freeze, merge_pools,
-                       page_bytes, resolve_kv_spec, thaw_blocks, with_tables)
+from repro.core import registry as quant_registry
+
+from .kv_cache import resolve_kv_spec
 from .metrics import MetricsCollector
-from .scheduler import ContinuousBatchingScheduler, Request, SeqState
+from .scheduler import DisaggRouter, Request, make_requests
+from .workers import DecodeWorker, PrefillWorker
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _prefill_step(params, toks, tree, *, cfg):
-    return models.prefill(params, cfg, {"tokens": toks}, tree)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _decode_step_fn(params, toks, tree, lens, *, cfg):
-    return models.decode_step(params, cfg, toks, tree, lens)
-
-
-class _Slot:
-    """Engine-side per-slot state (token io + page bookkeeping)."""
-
-    def __init__(self):
-        self.rid = None
-        self.blocks: list[int] = []
-        self.frozen_upto = 0          # block-table slots already quantized
-        self.last_token = 0
-        self.out: list[int] = []
-        self.logits: list[np.ndarray] = []
+def _resolve_attn_impl(attn_impl: str) -> str:
+    assert attn_impl in ("auto", "fused", "gather"), attn_impl
+    if attn_impl == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "gather"
+    return attn_impl
 
 
 class ContinuousBatchingEngine:
+    """Colocated serving: decode worker + pool-borrowing prefill worker."""
+
     def __init__(self, params, cfg, *, max_slots: int = 8,
                  block_size: int = 16, max_seq_len: int = 256,
                  num_blocks: int | None = None, kv_quant: str | None = None,
                  kv_num_values: int | None = None, max_queue: int = 256,
                  eos_id: int | None = None, record_logits: bool = False,
-                 attn_impl: str = "auto", freeze_async: bool = True):
+                 attn_impl: str = "auto", freeze_async: bool = True,
+                 freeze_page_budget: int = 4):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
-        assert attn_impl in ("auto", "fused", "gather"), attn_impl
-        if attn_impl == "auto":
-            attn_impl = "fused" if jax.default_backend() == "tpu" else "gather"
-        self.attn_impl = attn_impl
+        self.attn_impl = _resolve_attn_impl(attn_impl)
         # fail fast at construction: resolve_kv_spec validates the spec
         # against the solver registry and raises naming the device-capable
         # methods when the configuration can't freeze pages
         self.kv_spec = (None if kv_quant is None else
                         resolve_kv_spec(kv_quant, num_values=kv_num_values))
         self.params, self.cfg = params, cfg
-        self.block_size = block_size
-        self.max_blocks = -(-max_seq_len // block_size)
-        self.max_seq_len = self.max_blocks * block_size
-        self.num_blocks = (num_blocks if num_blocks is not None
-                           else max_slots * self.max_blocks + 1)
         self.kv_quant = None if self.kv_spec is None else self.kv_spec.method
         self.kv_num_values = (16 if self.kv_spec is None
                               else self.kv_spec.num_values)
-        # async freezing: dispatch the device solve, keep serving the exact
-        # fp page until the result is ready, then install. Sync freezing
-        # installs at dispatch (deterministic step at which codes take
-        # over — what logit-replay verification wants).
-        self.freeze_async = (freeze_async and self.kv_spec is not None
-                             and self.kv_spec.device_capable)
-        self.eos_id = eos_id
         self.record_logits = record_logits
-
-        self.tree = init_paged_cache(
-            cfg, num_blocks=self.num_blocks, block_size=block_size,
-            batch=max_slots, max_blocks=self.max_blocks,
-            quantized=self.kv_spec is not None,
-            num_values=self.kv_num_values, fused=attn_impl == "fused")
-        self.alloc = BlockAllocator(self.num_blocks)
-        self.sched = ContinuousBatchingScheduler(
-            max_slots=max_slots, block_size=block_size, max_queue=max_queue)
         self.metrics = MetricsCollector()
-        self.table = np.zeros((max_slots, self.max_blocks), np.int32)
-        self.lens = np.zeros((max_slots,), np.int32)
-        self.slots = [_Slot() for _ in range(max_slots)]
         self.outputs: dict[int, list[int]] = {}
-        self.request_logits: dict[int, np.ndarray] = {}
-        self._pb = page_bytes(cfg, block_size,
-                              quantized=self.kv_spec is not None,
-                              num_values=self.kv_num_values)
-        # freeze/decode overlap accounting: freezes dispatch async to the
-        # device and install once ready (_poll_freezes); until then frozen
-        # pages serve fp, so decode has no data dependency on the solve.
-        # host_page_solves counts fallback per-page numpy solves (0 in the
-        # kmeans_ls steady state).
-        self.counters = {"freeze_dispatches": 0, "freeze_installs": 0,
-                         "host_page_solves": 0, "decode_steps": 0,
-                         "freeze_inflight_steps": 0, "freeze_overlap_steps": 0,
-                         "freeze_pending_max": 0, "max_gather_blocks": 0}
-        self._pending_freezes: list[tuple[int, object]] = []
-        self._freeze_bids: list[int] = []   # queued for the next flush
-        self._frozen_pages: set[int] = set()   # installed (codes serving)
+        self.request_logits: dict[int, object] = {}
+        self.worker = DecodeWorker(
+            params, cfg, max_slots=max_slots, block_size=block_size,
+            max_seq_len=max_seq_len, num_blocks=num_blocks,
+            kv_spec=self.kv_spec, attn_impl=self.attn_impl,
+            freeze_async=freeze_async, freeze_page_budget=freeze_page_budget,
+            max_queue=max_queue, eos_id=eos_id, record_logits=record_logits,
+            metrics=self.metrics, outputs=self.outputs,
+            request_logits=self.request_logits)
+        # prefill worker inlined into the decode worker's pool: the handoff
+        # payload is a no-op "splice" of already-resident block ids
+        self.prefill = PrefillWorker(
+            params, cfg, block_size=block_size, max_seq_len=max_seq_len,
+            kv_spec=self.kv_spec, pool=self.worker,
+            record_logits=record_logits, metrics=self.metrics)
+        self.block_size = block_size
+        self.max_seq_len = self.worker.max_seq_len
+        self.freeze_async = self.worker.freeze_async
+        self.eos_id = eos_id
 
-        # module-level jits keyed on the (hashable) config: engines of the
-        # same geometry share compiles instead of retracing per instance
-        self._prefill_fn = functools.partial(_prefill_step, cfg=cfg)
-        self._decode_fn = functools.partial(_decode_step_fn, cfg=cfg)
+    # ------------------------------------------- legacy attribute surface
+
+    @property
+    def tree(self):
+        return self.worker.tree
+
+    @tree.setter
+    def tree(self, t):
+        self.worker.tree = t
+
+    @property
+    def alloc(self):
+        return self.worker.alloc
+
+    @property
+    def sched(self):
+        return self.worker.sched
+
+    @property
+    def counters(self):
+        return self.worker.counters
+
+    @property
+    def slots(self):
+        return self.worker.slots
+
+    @property
+    def num_blocks(self):
+        return self.worker.num_blocks
+
+    @property
+    def max_blocks(self):
+        return self.worker.max_blocks
+
+    @property
+    def _pb(self):
+        return self.worker._pb
+
+    @property
+    def _pending_freezes(self):
+        return self.worker._pending_freezes
 
     # ------------------------------------------------------------ intake
 
     def submit(self, req: Request, now: float) -> bool:
-        if (req.prompt_len + req.max_new_tokens > self.max_seq_len
-                or self.sched.blocks_for(req) > self.num_blocks - 1):
-            # reject what can never fit (seq budget or whole page pool) —
-            # admitting it would head-of-line-block the queue forever
-            self.sched.rejected.append(req.id)
-            return False
-        ok = self.sched.submit(req)
-        if ok:
-            self.metrics.arrival(req.id, now, req.prompt_len)
-        return ok
-
-    # ------------------------------------------------------------ steps
-
-    def _do_prefill(self, st: SeqState, now_fn) -> None:
-        req, slot = st.req, st.slot
-        blocks = self.alloc.alloc(self.sched.blocks_for(req))
-        s = self.slots[slot]
-        s.rid, s.blocks, s.frozen_upto = req.id, blocks, 0
-        s.out, s.logits = [], []
-        self.table[slot] = 0
-        self.table[slot, :len(blocks)] = blocks
-        self.lens[slot] = 0
-
-        P = req.prompt_len
-        ppad = -(-P // self.block_size) * self.block_size
-        toks = np.zeros((1, ppad), np.int32)
-        toks[0, :P] = req.prompt
-        # clamp the table to the blocks this prompt actually writes/reads
-        tree1 = with_tables(self.tree,
-                            self.table[slot:slot + 1, :ppad // self.block_size],
-                            np.zeros((1,), np.int32))
-        logits, new1 = self._prefill_fn(self.params, jnp.asarray(toks), tree1)
-        self.tree = merge_pools(self.tree, new1)
-        self.lens[slot] = P
-        st.length, st.generated = P, 1
-        last = np.asarray(logits[0, P - 1])     # materializes the prefill
-        now = now_fn()                          # TTFT includes prefill time
-        s.last_token = int(np.argmax(last))
-        s.out.append(s.last_token)
-        if self.record_logits:
-            s.logits.append(last)
-        self.metrics.first_token(req.id, now)
-        self._freeze(slot)
-        if st.done or s.last_token == self.eos_id:
-            self._finish(st, now)
-
-    def _decode_step(self, now_fn) -> None:
-        active = self.sched.active_slots()
-        if not active:
-            return
-        self.counters["decode_steps"] += 1
-        self._poll_freezes()
-        toks = np.zeros((len(self.slots), 1), np.int32)
-        for i in active:
-            toks[i, 0] = self.slots[i].last_token
-        # gather only the blocks the longest live sequence needs this step
-        # (idle slots sit at length 0); retraces are bounded by max_blocks
-        need = int(self.lens.max()) + 1
-        mb_used = max(1, -(-need // self.block_size))
-        self.counters["max_gather_blocks"] = max(
-            self.counters["max_gather_blocks"], mb_used)
-        tree = with_tables(self.tree, self.table[:, :mb_used], self.lens)
-        lens = jnp.asarray(self.lens)
-        logits, new = self._decode_fn(self.params, jnp.asarray(toks), tree,
-                                      lens)
-        self.tree = merge_pools(self.tree, new)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
-        full = np.asarray(logits[:, -1]) if self.record_logits else None
-        now = now_fn()
-        finished = []
-        for i in active:
-            st = self.sched.active[i]
-            s = self.slots[i]
-            self.lens[i] += 1
-            st.length += 1
-            st.generated += 1
-            s.last_token = int(nxt[i])
-            s.out.append(s.last_token)
-            if full is not None:
-                s.logits.append(full[i])
-            self.metrics.token(st.req.id)
-            self._freeze(i)
-            if st.done or s.last_token == self.eos_id:
-                finished.append(st)
-        for st in finished:
-            self._finish(st, now)
-
-    def _poll_freezes(self, drain: bool = False) -> None:
-        """Install completed freezes; count the ones still overlapping this
-        decode step. drain=True blocks on the remainder (end of run)."""
-        still = []
-        for step0, pending in self._pending_freezes:
-            if drain and not pending.is_ready():
-                jax.block_until_ready(pending.markers())
-            if pending.is_ready():
-                self.tree = install_freeze(self.tree, pending)
-                self._frozen_pages.update(
-                    int(b) for b in pending.bids[pending.keep])
-                self.counters["freeze_installs"] += 1
-                self.counters["freeze_overlap_steps"] += (
-                    self.counters["decode_steps"] - step0)
-            else:
-                self.counters["freeze_inflight_steps"] += 1
-                still.append((step0, pending))
-        self._pending_freezes = still
-
-    def _freeze(self, slot: int) -> None:
-        """Queue this sequence's just-filled pages for quantization; the
-        engine iteration flushes the whole batch as ONE device dispatch
-        (_flush_freezes), so slots whose pages fill at the same step share
-        a solve."""
-        if self.kv_quant is None:
-            return
-        s = self.slots[slot]
-        full = int(self.lens[slot]) // self.block_size
-        if full > s.frozen_upto:
-            self._freeze_bids.extend(int(self.table[slot, j])
-                                     for j in range(s.frozen_upto, full))
-            s.frozen_upto = full
-
-    def _flush_freezes(self) -> None:
-        """One batched solve for every page queued this iteration.
-
-        kmeans_ls/kmeans solve on device; with freeze_async the dispatch
-        returns as soon as the work is enqueued and the pages keep serving
-        fp until _poll_freezes installs the codes — decode steps in between
-        carry no data dependency on the solve."""
-        if not self._freeze_bids:
-            return
-        # cap pages per flush: a prefill burst's worth of pages solved as
-        # one chunk would run long enough to delay the next decode steps;
-        # the remainder flushes next iteration (pages serve exact fp until
-        # then, so correctness is unaffected)
-        take = min(len(self._freeze_bids), 4)
-        bids, self._freeze_bids = (self._freeze_bids[:take],
-                                   self._freeze_bids[take:])
-        if self.kv_spec.device_capable:
-            # pad to a power-of-two page count (repeating one page is a
-            # no-op at install) so the jitted solver compiles a handful of
-            # shapes instead of one per distinct flush size; the host
-            # fallback solves per page, where a duplicate is pure waste
-            bucket = 1 << (len(bids) - 1).bit_length()
-            bids = bids + [bids[-1]] * (bucket - len(bids))
-        if self.freeze_async:
-            pending = dispatch_freeze(self.tree, bids, self.kv_spec)
-            self._pending_freezes.append(
-                (self.counters["decode_steps"], pending))
-            self.counters["freeze_pending_max"] = max(
-                self.counters["freeze_pending_max"],
-                len(self._pending_freezes))
-        else:
-            self.tree = freeze_blocks(self.tree, bids, self.kv_spec,
-                                      stats=self.counters)
-            self._frozen_pages.update(bids)
-            self.counters["freeze_installs"] += 1
-        self.counters["freeze_dispatches"] += 1
-
-    def _finish(self, st: SeqState, now: float) -> None:
-        slot, s = st.slot, self.slots[st.slot]
-        self.outputs[st.req.id] = list(s.out)
-        if self.record_logits and s.logits:
-            self.request_logits[st.req.id] = np.stack(s.logits)
-        self.metrics.finish(st.req.id, now)
-        # freed pages may be reallocated before an in-flight solve lands —
-        # forget them (queued or dispatched) so a stale install can't mark
-        # a reused page frozen
-        freed = set(s.blocks)
-        self._freeze_bids = [b for b in self._freeze_bids if b not in freed]
-        self._frozen_pages -= freed
-        for _, pending in self._pending_freezes:
-            pending.drop(s.blocks)
-        self.tree = thaw_blocks(self.tree, s.blocks)
-        self.alloc.free(s.blocks)
-        self.table[slot] = 0
-        self.lens[slot] = 0
-        s.rid, s.blocks, s.frozen_upto, s.out = None, [], 0, []
-        self.sched.release(st)
-
-    def _sample_cache(self) -> None:
-        allocated = (self.num_blocks - 1) - self.alloc.num_free
-        # count *installed* pages: queued/in-flight solves still serve fp
-        # at full width, so they must not book frozen-page bytes yet
-        frozen = len(self._frozen_pages)
-        actual = (frozen * self._pb["frozen"]
-                  + (allocated - frozen) * self._pb["fp"])
-        self.metrics.sample_cache(allocated / (self.num_blocks - 1),
-                                  actual, allocated * self._pb["fp"])
+        return self.worker.submit(req, now)
 
     # ------------------------------------------------------------ run loop
 
@@ -338,41 +155,210 @@ class ContinuousBatchingEngine:
         Wall-clock driven: a request becomes visible when the loop's clock
         passes its arrival_time; the loop sleeps only when fully idle.
         """
+        w = self.worker
         pending = deque(sorted(requests, key=lambda r: (r.arrival_time, r.id)))
         t0 = time.perf_counter()
         now_fn = lambda: time.perf_counter() - t0
-        while pending or self.sched.has_work:
+        while pending or w.sched.has_work:
             now = now_fn()
             while pending and pending[0].arrival_time <= now:
                 self.submit(pending.popleft(), now)
-            if not self.sched.has_work:
+            if not w.sched.has_work:
                 if not pending:     # everything left was rejected at submit
                     break
                 nxt = pending[0].arrival_time
                 time.sleep(min(max(nxt - now, 0.0), poll_s) or poll_s)
                 continue
-            for st in self.sched.schedule(self.alloc.num_free):
-                self._do_prefill(st, now_fn)
-            # one batched solve for the pages the prefills (and the
-            # previous iteration's decode) just filled, before this
-            # iteration's decode reads them
-            self._flush_freezes()
-            self._decode_step(now_fn)
-            self._sample_cache()
-        self._flush_freezes()
-        self._poll_freezes(drain=True)      # land any still-computing solves
+            for st in w.sched.schedule(w.alloc.num_free):
+                # inline prefill straight into the decode worker's pool,
+                # then the no-op splice attaches the sequence to its slot
+                fin = self.prefill.run_inline(st.req, now_fn)
+                w.attach(st, fin, now_fn())
+            # one batched (budgeted) solve for the pages the prefills (and
+            # the previous iteration's decode) just filled, then this
+            # iteration's decode step
+            w.step(now_fn)
+        w.drain()
         out = self.metrics.summary()
         # steady-state per-page ratio: what a fully frozen cache saves
-        out["page_compression"] = self._pb["fp"] / self._pb["frozen"]
-        out["rejected"] = len(self.sched.rejected)
+        out["page_compression"] = w._pb["fp"] / w._pb["frozen"]
+        out["rejected"] = len(w.sched.rejected)
         out["attn_impl"] = self.attn_impl
-        out.update(self.counters)
+        out.update(w.counters)
         return out
 
-    def generate(self, prompts: list[list[int]], max_new_tokens: int) -> dict:
+    def generate(self, prompts: list[list[int]], max_new_tokens: int,
+                 *, temperature: float = 0.0, top_k: int = 0,
+                 seed: int | None = None) -> dict:
         """Batch convenience: all requests arrive at t=0; returns outputs
-        (None for requests rejected by admission control)."""
-        reqs = [Request(id=i, prompt=tuple(p), max_new_tokens=max_new_tokens)
-                for i, p in enumerate(prompts)]
-        self.run(reqs)
+        (None for requests rejected by admission control). Sampling knobs
+        apply to every request (per-request seeds derive from ``seed``)."""
+        self.run(make_requests(prompts, max_new_tokens,
+                               temperature=temperature, top_k=top_k,
+                               seed=seed))
+        return {i: self.outputs.get(i) for i in range(len(prompts))}
+
+
+class DisaggEngine:
+    """Disaggregated serving: N prefill workers (own pools) feed M decode
+    workers through a global router; pages migrate fp or frozen."""
+
+    def __init__(self, params, cfg, *, prefill_workers: int = 1,
+                 decode_workers: int = 1, migrate: str = "fp",
+                 max_slots: int = 8, block_size: int = 16,
+                 max_seq_len: int = 256, num_blocks: int | None = None,
+                 prefill_blocks: int | None = None,
+                 kv_quant: str | None = None, kv_num_values: int | None = None,
+                 max_queue: int = 256, eos_id: int | None = None,
+                 record_logits: bool = False, attn_impl: str = "auto",
+                 freeze_async: bool = True, freeze_page_budget: int = 4):
+        assert cfg.family == "lm", "paged serving drives decoder-only LMs"
+        assert prefill_workers >= 1 and decode_workers >= 1
+        if migrate not in ("fp", "frozen"):
+            raise ValueError(f"migrate must be 'fp' or 'frozen', got "
+                             f"{migrate!r}")
+        self.attn_impl = _resolve_attn_impl(attn_impl)
+        self.kv_spec = (None if kv_quant is None else
+                        resolve_kv_spec(kv_quant, num_values=kv_num_values))
+        if migrate == "frozen":
+            if self.kv_spec is None:
+                raise ValueError(
+                    "migrate='frozen' ships pages as codes+codebooks and "
+                    "needs a kv_quant spec (e.g. kmeans_ls@16)")
+            if not self.kv_spec.device_capable:
+                raise ValueError(
+                    f"migrate='frozen' routes pages through the batched "
+                    f"device freeze path; {self.kv_spec.method} has no "
+                    f"device solver — use one of: "
+                    f"{', '.join(quant_registry.device_methods())}")
+        self.params, self.cfg = params, cfg
+        self.migrate = migrate
+        self.kv_quant = None if self.kv_spec is None else self.kv_spec.method
+        self.kv_num_values = (16 if self.kv_spec is None
+                              else self.kv_spec.num_values)
+        self.record_logits = record_logits
+        self.metrics = MetricsCollector()
+        self.outputs: dict[int, list[int]] = {}
+        self.request_logits: dict[int, object] = {}
+        self.decode = [DecodeWorker(
+            params, cfg, worker_id=i, max_slots=max_slots,
+            block_size=block_size, max_seq_len=max_seq_len,
+            num_blocks=num_blocks, kv_spec=self.kv_spec,
+            attn_impl=self.attn_impl, freeze_async=freeze_async,
+            freeze_page_budget=freeze_page_budget, eos_id=eos_id,
+            record_logits=record_logits, metrics=self.metrics,
+            outputs=self.outputs, request_logits=self.request_logits)
+            for i in range(decode_workers)]
+        self.prefills = [PrefillWorker(
+            params, cfg, worker_id=i, block_size=block_size,
+            max_seq_len=max_seq_len, kv_spec=self.kv_spec, migrate=migrate,
+            num_blocks=prefill_blocks, record_logits=record_logits,
+            metrics=self.metrics) for i in range(prefill_workers)]
+        self.router = DisaggRouter(max_queue=max_queue)
+        self.block_size = block_size
+        self.max_seq_len = self.decode[0].max_seq_len
+        self.freeze_async = self.decode[0].freeze_async
+        self.eos_id = eos_id
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, req: Request, now: float) -> bool:
+        d0, p0 = self.decode[0], self.prefills[0]
+        if (req.prompt_len + req.max_new_tokens > self.max_seq_len
+                or d0.sched.blocks_for(req) > d0.num_blocks - 1
+                or -(-req.prompt_len // self.block_size)
+                > p0.num_blocks - 1):
+            # reject what no worker can ever hold — staging it would
+            # head-of-line-block the router's queues forever
+            self.router.rejected.append(req.id)
+            return False
+        ok = self.router.submit(req)
+        if ok:
+            self.metrics.arrival(req.id, now, req.prompt_len)
+        return ok
+
+    # ------------------------------------------------------------ run loop
+
+    @property
+    def _has_work(self) -> bool:
+        return (self.router.has_work or any(p.busy for p in self.prefills)
+                or any(d.sched.has_work or d.has_work for d in self.decode))
+
+    def run(self, requests: list[Request], *, poll_s: float = 0.002) -> dict:
+        """Serve a trace of requests (arrival_time = seconds from start).
+
+        One loop iteration: route waiting requests onto prefill workers,
+        advance each prefill worker (async — dispatch or harvest), place
+        finished prefills onto decode workers, then one decode step per
+        decode worker with live sequences. Decode never waits on a prefill:
+        a burst of long prompts costs each iteration at most the prefill
+        workers' dispatch overhead, which is the TPOT-isolation property
+        the worker split buys.
+        """
+        pending = deque(sorted(requests, key=lambda r: (r.arrival_time, r.id)))
+        t0 = time.perf_counter()
+        now_fn = lambda: time.perf_counter() - t0
+        while pending or self._has_work:
+            now = now_fn()
+            while pending and pending[0].arrival_time <= now:
+                self.submit(pending.popleft(), now)
+            if not self._has_work:
+                if not pending:     # everything left was rejected at submit
+                    break
+                nxt = pending[0].arrival_time
+                time.sleep(min(max(nxt - now, 0.0), poll_s) or poll_s)
+                continue
+            progressed = False
+            self.router.route_prefill(self.prefills)
+            for pw in self.prefills:
+                for fin in pw.step(now_fn):
+                    self.router.stage(fin)
+                    progressed = True
+            def _place(dw, fin):
+                st = dw.sched.admit_direct(fin.req)
+                assert st is not None       # router checked can_accept
+                dw.attach(st, fin, now_fn())
+            progressed |= bool(self.router.route_decode(self.decode, _place))
+            for dw in self.decode:
+                if dw.has_work:
+                    dw.step(now_fn)
+                    progressed = progressed or bool(dw.sched.active)
+            if not progressed:
+                # only in-flight prefills to wait on: let the device work
+                time.sleep(poll_s / 4)
+        for pw in self.prefills:
+            assert not pw.busy
+        for dw in self.decode:
+            dw.drain()
+        return self._summary()
+
+    def _summary(self) -> dict:
+        out = self.metrics.summary()
+        agg = {}
+        for dw in self.decode:
+            for k, v in dw.counters.items():
+                agg[k] = max(agg.get(k, 0), v) if k == "max_gather_blocks" \
+                    else agg.get(k, 0) + v
+        out.update(agg)
+        out["prefills_done"] = sum(p.counters["prefills"]
+                                   for p in self.prefills)
+        out["rejected"] = len(self.router.rejected)
+        out["attn_impl"] = self.attn_impl
+        out["migrate"] = self.migrate
+        out["prefill_workers"] = len(self.prefills)
+        out["decode_workers"] = len(self.decode)
+        pb = self.decode[0]._pb
+        out["page_compression"] = pb["fp"] / pb["frozen"]
+        out["migrate_compression"] = (
+            out["migrate_fp_equiv_bytes"] / out["migrate_bytes"]
+            if out.get("migrate_bytes") else 1.0)
+        return out
+
+    def generate(self, prompts: list[list[int]], max_new_tokens: int,
+                 *, temperature: float = 0.0, top_k: int = 0,
+                 seed: int | None = None) -> dict:
+        """Batch convenience mirroring the colocated engine's."""
+        self.run(make_requests(prompts, max_new_tokens,
+                               temperature=temperature, top_k=top_k,
+                               seed=seed))
         return {i: self.outputs.get(i) for i in range(len(prompts))}

@@ -1,7 +1,12 @@
 """Serving metrics: per-request latency (TTFT / TPOT), aggregate
 throughput, and KV-cache occupancy counters.
 
-TTFT = first token time - arrival (queueing + prefill).
+TTFT = first token time - arrival, split into its two components so
+disaggregation wins attribute correctly:
+
+  queue_wait      = prefill start - arrival   (admission + routing delay)
+  prefill_compute = first token - prefill start
+
 TPOT = mean inter-token time over the remaining tokens.
 """
 from __future__ import annotations
@@ -19,13 +24,32 @@ def percentile(xs, p: float) -> float:
 class RequestTrace:
     arrival_t: float
     prompt_len: int
+    prefill_start_t: float | None = None
     first_token_t: float | None = None
     finish_t: float | None = None
     tokens: int = 0
+    # per-token decode gaps (when the engine timestamps token events):
+    # the distribution whose tail a prefill stall inflates
+    gaps: list = dataclasses.field(default_factory=list)
+    _last_t: float | None = None
 
     @property
     def ttft(self) -> float:
         return self.first_token_t - self.arrival_t
+
+    @property
+    def queue_wait(self) -> float:
+        """Admission/routing delay before prefill compute started (falls
+        back to the whole TTFT when no prefill_start was recorded)."""
+        if self.prefill_start_t is None:
+            return self.ttft
+        return self.prefill_start_t - self.arrival_t
+
+    @property
+    def prefill_compute(self) -> float:
+        if self.prefill_start_t is None:
+            return 0.0
+        return self.first_token_t - self.prefill_start_t
 
     @property
     def tpot(self) -> float:
@@ -46,13 +70,22 @@ class MetricsCollector:
     def arrival(self, rid: int, t: float, prompt_len: int) -> None:
         self.traces[rid] = RequestTrace(arrival_t=t, prompt_len=prompt_len)
 
+    def prefill_start(self, rid: int, t: float) -> None:
+        self.traces[rid].prefill_start_t = t
+
     def first_token(self, rid: int, t: float) -> None:
         tr = self.traces[rid]
         tr.first_token_t = t
         tr.tokens = 1
+        tr._last_t = t
 
-    def token(self, rid: int) -> None:
-        self.traces[rid].tokens += 1
+    def token(self, rid: int, t: float | None = None) -> None:
+        tr = self.traces[rid]
+        tr.tokens += 1
+        if t is not None:
+            if tr._last_t is not None:
+                tr.gaps.append(t - tr._last_t)
+            tr._last_t = t
 
     def finish(self, rid: int, t: float) -> None:
         self.traces[rid].finish_t = t
@@ -87,6 +120,26 @@ class MetricsCollector:
             "tpot_p50_s": percentile(tpots, 50),
             "tpot_p99_s": percentile(tpots, 99),
         }
+        # TTFT decomposition: queue_wait (admission + routing) vs
+        # prefill_compute — the pair disaggregation trades against
+        waits = [t.queue_wait for t in done]
+        computes = [t.prefill_compute for t in done]
+        out.update({
+            "queue_wait_mean_s": float(np.mean(waits)),
+            "queue_wait_p50_s": percentile(waits, 50),
+            "queue_wait_p99_s": percentile(waits, 99),
+            "prefill_compute_mean_s": float(np.mean(computes)),
+            "prefill_compute_p50_s": percentile(computes, 50),
+            "prefill_compute_p99_s": percentile(computes, 99),
+        })
+        # inter-token latency over every decode gap (engines that timestamp
+        # token events): unlike the per-request tpot means above, a single
+        # prefill stall lands in this distribution's tail undiluted
+        gaps = [g for t in done for g in t.gaps]
+        if gaps:
+            out["itl_p50_s"] = percentile(gaps, 50)
+            out["itl_p99_s"] = percentile(gaps, 99)
+            out["itl_max_s"] = float(np.max(gaps))
         if self.occupancy:
             out["cache_occupancy_mean"] = float(np.mean(self.occupancy))
             out["cache_occupancy_max"] = float(np.max(self.occupancy))

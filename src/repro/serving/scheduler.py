@@ -25,16 +25,31 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    ``temperature``/``top_k``/``seed`` drive engine-level sampling:
+    temperature 0 (the default) is greedy argmax — the deterministic path
+    every verification harness replays — and any positive temperature
+    samples from the (optionally top-k-truncated) softmax with a
+    per-request numpy Generator seeded from ``seed`` (falling back to the
+    request id), so a trace replays token-identically.
+    """
 
     id: int
     prompt: tuple          # token ids
     max_new_tokens: int
     arrival_time: float = 0.0
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int | None = None
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    def make_rng(self) -> np.random.Generator:
+        return np.random.default_rng(self.id if self.seed is None
+                                     else self.seed)
 
 
 @dataclasses.dataclass
@@ -98,6 +113,24 @@ class ContinuousBatchingScheduler:
             free_blocks -= need
         return admitted
 
+    def admit_direct(self, req: Request) -> SeqState | None:
+        """Bypass the waiting queue: bind ``req`` to a free slot right now.
+
+        The disaggregated import path uses this — the request already went
+        through global (router) queueing and its prefill already ran on a
+        prefill worker, so re-queueing it behind this worker's FCFS door
+        would deadlock against the router's own staging queue. Returns None
+        when no slot is free (the router keeps the finished prefill staged).
+        Page accounting stays with the caller, which checks the worker's
+        free-block count before offering.
+        """
+        if not self._free_slots:
+            return None
+        slot = self._free_slots.pop()
+        st = SeqState(req=req, slot=slot, length=0)
+        self.active[slot] = st
+        return st
+
     def step_decoded(self) -> list[SeqState]:
         """Account one decoded token per active sequence; return the ones
         that just finished (caller evicts them this same iteration)."""
@@ -124,14 +157,113 @@ class ContinuousBatchingScheduler:
         return sorted(self.active)
 
 
+class DisaggRouter:
+    """Global router for disaggregated serving: one queue in front of N
+    prefill workers and M decode workers.
+
+    Pure decision logic, like the scheduler above: workers are duck-typed
+    (prefill workers expose ``load``/``can_accept()``, decode workers
+    ``can_accept(req)``/``free_slots``), so routing policy is unit-testable
+    with fakes and the same router drives any worker ratio. Requests flow
+
+        submit -> waiting -> [prefill worker] -> stage -> [decode worker]
+
+    ``route_prefill`` assigns FCFS to the least-loaded prefill worker (tie:
+    lowest index, so the schedule is deterministic); ``route_decode`` places
+    finished prefills FCFS onto the decode worker with the most free slots
+    that can hold the request's worst-case pages. A staged head that fits
+    nowhere *waits* (head-of-line, like the colocated scheduler): its pages
+    are already computed and host-staged, so holding it costs no device
+    memory, and FCFS keeps it starvation-free.
+    """
+
+    def __init__(self, *, max_queue: int = 256):
+        self.max_queue = max_queue
+        self.waiting: deque[Request] = deque()
+        self.staged: deque = deque()           # FinishedPrefill artifacts
+        self.rejected: list[int] = []
+
+    def submit(self, req: Request) -> bool:
+        """Queue-depth admission control at the global door (429 = False)."""
+        if len(self.waiting) >= self.max_queue:
+            self.rejected.append(req.id)
+            return False
+        self.waiting.append(req)
+        return True
+
+    def route_prefill(self, workers) -> list:
+        """Assign waiting requests to prefill workers; returns the
+        (worker, request) assignments made this call."""
+        out = []
+        while self.waiting:
+            ranked = sorted((w for w in workers if w.can_accept()),
+                            key=lambda w: (w.load, w.worker_id))
+            if not ranked:
+                break
+            req = self.waiting.popleft()
+            ranked[0].submit(req)
+            out.append((ranked[0], req))
+        return out
+
+    def stage(self, finished) -> None:
+        """Park a finished prefill until a decode worker can take it."""
+        self.staged.append(finished)
+
+    def route_decode(self, workers, place=None) -> list:
+        """Offer staged prefills FCFS to decode workers.
+
+        ``place(worker, finished)`` is invoked immediately per placement so
+        worker capacity (slots, free pages) is re-evaluated live — two
+        staged prefills must not both be routed against the capacity the
+        first one is about to consume. Returns the placements made."""
+        out = []
+        while self.staged:
+            req = self.staged[0].req
+            ranked = sorted((w for w in workers if w.can_accept(req)),
+                            key=lambda w: (-w.free_slots, w.worker_id))
+            if not ranked:
+                break
+            fin = self.staged.popleft()
+            if place is not None:
+                place(ranked[0], fin)
+            out.append((ranked[0], fin))
+        return out
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.staged)
+
+
+def derive_seed(seed: int | None, i: int) -> int | None:
+    """Per-request sampling seed from one trace-level seed — the single
+    definition every trace builder and engine uses, so a trace replays
+    token-identically whichever engine serves it."""
+    return None if seed is None else seed * 100003 + i
+
+
+def make_requests(prompts, max_new_tokens: int, *, temperature: float = 0.0,
+                  top_k: int = 0, seed: int | None = None) -> list[Request]:
+    """Requests for a batch of prompts, all arriving at t=0 (the engines'
+    ``generate`` convenience); sampling knobs apply to every request."""
+    return [Request(id=i, prompt=tuple(p), max_new_tokens=max_new_tokens,
+                    temperature=temperature, top_k=top_k,
+                    seed=derive_seed(seed, i))
+            for i, p in enumerate(prompts)]
+
+
 def poisson_trace(n: int, rate: float, *, vocab: int, prompt_len: int,
-                  max_new_tokens: int, seed: int = 0) -> list[Request]:
-    """n requests with exp(1/rate) inter-arrival gaps (rate in req/s)."""
+                  max_new_tokens: int, seed: int = 0, temperature: float = 0.0,
+                  top_k: int = 0) -> list[Request]:
+    """n requests with exp(1/rate) inter-arrival gaps (rate in req/s).
+    Sampling knobs apply to every request; per-request sampling seeds
+    derive from ``seed`` so a trace replays deterministically."""
     rng = np.random.default_rng(seed)
     t = np.cumsum(rng.exponential(1.0 / rate, n))
     return [Request(id=i,
                     prompt=tuple(int(x) for x in
                                  rng.integers(0, vocab, prompt_len)),
                     max_new_tokens=max_new_tokens,
-                    arrival_time=float(t[i]))
+                    arrival_time=float(t[i]),
+                    temperature=temperature, top_k=top_k,
+                    seed=derive_seed(seed, i))
             for i in range(n)]

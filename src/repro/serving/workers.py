@@ -1,0 +1,571 @@
+"""Role-based serving workers: model execution split into composable
+prefill and decode roles.
+
+``DecodeWorker`` owns a paged KV pool and the decode hot loop — iteration
+batching over its slots, async page freezing (batched sparse-LSQ device
+solves, rate-limited per decode step), eviction/recycling — behind a narrow
+``step()`` / ``attach()`` interface. Sequences enter it only as finished
+prefills (``transfer.FinishedPrefill``): pages are spliced into its pool
+and decoding continues from the already-sampled first token.
+
+``PrefillWorker`` turns queued prompts into finished prefills. It runs in
+one of two compositions:
+
+  owned pool (disaggregated)   The worker prefills into its *own* paged
+      pool, then extracts the pages as a migration payload — fp rows, or
+      codes + codebooks when migrating frozen — and frees its blocks. The
+      dispatch is async: ``step()`` launches the prefill (and, for frozen
+      migration, the freeze solve chained behind it) and only harvests once
+      the device finished, so a long prompt never blocks the caller's loop.
+
+  borrowed pool (colocated)    Constructed with ``pool=<DecodeWorker>``,
+      the worker prefills straight into the decode worker's pool using
+      blocks from its allocator; the handoff payload is a no-op "splice"
+      carrying just the block ids. This is exactly the old monolithic
+      engine's inline prefill, now expressed as the degenerate worker
+      composition.
+
+Both engines (`engine.ContinuousBatchingEngine`, `engine.DisaggEngine`)
+are thin run loops over these two roles plus a scheduler/router.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+
+from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
+                       init_paged_cache, install_freeze, merge_pools,
+                       page_bytes, thaw_blocks, with_tables)
+from .scheduler import ContinuousBatchingScheduler, Request, SeqState
+from .transfer import (FinishedPrefill, PagePayload, extract_pages,
+                       splice_payload)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_step(params, toks, tree, *, cfg):
+    return models.prefill(params, cfg, {"tokens": toks}, tree)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_step_fn(params, toks, tree, lens, *, cfg):
+    return models.decode_step(params, cfg, toks, tree, lens)
+
+
+def sample_token(row: np.ndarray, *, temperature: float = 0.0,
+                 top_k: int = 0, rng=None) -> int:
+    """Engine-level sampling over one vocab row of logits.
+
+    temperature <= 0 is greedy argmax (the default and the path every
+    logit-replay verification runs); otherwise softmax at ``temperature``
+    over the ``top_k`` largest logits (0 = no truncation), drawn from the
+    request's own Generator so traces replay deterministically per seed.
+    """
+    if temperature <= 0.0 or rng is None:
+        return int(np.argmax(row))
+    logits = np.asarray(row, np.float64) / temperature
+    if 0 < top_k < logits.size:
+        kth = np.partition(logits, -top_k)[-top_k]
+        logits = np.where(logits >= kth, logits, -np.inf)
+    p = np.exp(logits - logits.max())
+    return int(rng.choice(logits.size, p=p / p.sum()))
+
+
+class _Slot:
+    """Decode-worker per-slot state (token io + page bookkeeping)."""
+
+    def __init__(self):
+        self.rid = None
+        self.blocks: list[int] = []
+        self.frozen_upto = 0          # block-table slots already quantized
+        self.last_token = 0
+        self.out: list[int] = []
+        self.logits: list[np.ndarray] = []
+        self.rng = None
+        self.temperature = 0.0
+        self.top_k = 0
+
+
+class DecodeWorker:
+    """The decode role: paged pool + iteration-batched decode loop + async
+    freeze machinery, fed through ``attach(seq_state, finished_prefill)``.
+    """
+
+    def __init__(self, params, cfg, *, worker_id: int = 0, max_slots: int = 8,
+                 block_size: int = 16, max_seq_len: int = 256,
+                 num_blocks: int | None = None, kv_spec=None,
+                 attn_impl: str = "gather", freeze_async: bool = True,
+                 freeze_page_budget: int = 4, max_queue: int = 256,
+                 eos_id: int | None = None, record_logits: bool = False,
+                 metrics=None, outputs=None, request_logits=None):
+        from .metrics import MetricsCollector
+
+        self.worker_id = worker_id
+        self.params, self.cfg = params, cfg
+        self.kv_spec = kv_spec
+        self.attn_impl = attn_impl
+        self.block_size = block_size
+        self.max_blocks = -(-max_seq_len // block_size)
+        self.max_seq_len = self.max_blocks * block_size
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else max_slots * self.max_blocks + 1)
+        self.freeze_async = (freeze_async and kv_spec is not None
+                             and kv_spec.device_capable)
+        assert freeze_page_budget >= 1, "freeze budget must cover >= 1 page"
+        self.freeze_page_budget = freeze_page_budget
+        self.eos_id = eos_id
+        self.record_logits = record_logits
+
+        self.tree = init_paged_cache(
+            cfg, num_blocks=self.num_blocks, block_size=block_size,
+            batch=max_slots, max_blocks=self.max_blocks,
+            quantized=kv_spec is not None,
+            num_values=16 if kv_spec is None else kv_spec.num_values,
+            fused=attn_impl == "fused")
+        self.alloc = BlockAllocator(self.num_blocks)
+        self.sched = ContinuousBatchingScheduler(
+            max_slots=max_slots, block_size=block_size, max_queue=max_queue)
+        self.metrics = metrics if metrics is not None else MetricsCollector()
+        self.table = np.zeros((max_slots, self.max_blocks), np.int32)
+        self.lens = np.zeros((max_slots,), np.int32)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.outputs = outputs if outputs is not None else {}
+        self.request_logits = (request_logits if request_logits is not None
+                               else {})
+        self._pb = page_bytes(cfg, block_size, quantized=kv_spec is not None,
+                              num_values=16 if kv_spec is None
+                              else kv_spec.num_values)
+        # freeze/decode overlap + migration accounting; host_page_solves
+        # counts fallback per-page numpy solves (0 in the device-solver
+        # steady state), freeze_deferred_pages counts pages pushed past
+        # their iteration by the per-step freeze budget.
+        self.counters = {"freeze_dispatches": 0, "freeze_installs": 0,
+                         "host_page_solves": 0, "decode_steps": 0,
+                         "freeze_inflight_steps": 0, "freeze_overlap_steps": 0,
+                         "freeze_pending_max": 0, "freeze_deferred_pages": 0,
+                         "max_gather_blocks": 0, "migrated_seqs": 0,
+                         "migrated_pages": 0, "migrate_bytes": 0,
+                         "migrate_fp_equiv_bytes": 0}
+        self._pending_freezes: list[tuple[int, object]] = []
+        self._freeze_bids: list[int] = []   # queued for the next flush
+        self._deferred_seen = 0    # queue suffix already counted deferred
+        self._frozen_pages: set[int] = set()   # installed (codes serving)
+
+        # module-level jit keyed on the (hashable) config: workers of the
+        # same geometry share compiles instead of retracing per instance
+        self._decode_fn = functools.partial(_decode_step_fn, cfg=cfg)
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, req: Request, now: float) -> bool:
+        """Colocated front door: admission control + queueing + arrival
+        metric (the disaggregated router does this globally instead)."""
+        if (req.prompt_len + req.max_new_tokens > self.max_seq_len
+                or self.sched.blocks_for(req) > self.num_blocks - 1):
+            # reject what can never fit (seq budget or whole page pool) —
+            # admitting it would head-of-line-block the queue forever
+            self.sched.rejected.append(req.id)
+            return False
+        ok = self.sched.submit(req)
+        if ok:
+            self.metrics.arrival(req.id, now, req.prompt_len)
+        return ok
+
+    def can_accept(self, req: Request) -> bool:
+        """Router probe: a free slot and the request's worst-case pages."""
+        return (bool(self.sched._free_slots)
+                and self.sched.blocks_for(req) <= self.alloc.num_free)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self.sched._free_slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.sched.active or self._pending_freezes
+                    or self._freeze_bids)
+
+    # ------------------------------------------------------------ import
+
+    def attach(self, st: SeqState, fin: FinishedPrefill, now: float) -> None:
+        """Splice a finished prefill's pages into this worker's pool and
+        start decoding it at slot ``st.slot``.
+
+        "splice" payloads (colocated) carry block ids already living in
+        this pool; migration payloads allocate the request's worst-case
+        blocks here, land the prompt pages in the first of them (frozen
+        pages through ``install_freeze``, directly servable by the fused
+        kernel), and the rest fill during decode.
+        """
+        req, s = st.req, self.slots[st.slot]
+        payload = fin.payload
+        if payload.mode == "splice":
+            blocks = list(payload.blocks)
+        else:
+            blocks = self.alloc.alloc(self.sched.blocks_for(req))
+            self.tree = splice_payload(self.tree, payload, blocks)
+            self.counters["migrated_seqs"] += 1
+            self.counters["migrated_pages"] += payload.n_pages
+            self.counters["migrate_bytes"] += payload.nbytes
+            self.counters["migrate_fp_equiv_bytes"] += payload.fp_equiv_bytes
+        P = req.prompt_len
+        s.rid, s.blocks = req.id, blocks
+        s.out, s.logits = [fin.first_token], []
+        s.last_token = fin.first_token
+        s.rng, s.temperature, s.top_k = fin.rng, req.temperature, req.top_k
+        if self.record_logits and fin.last_logits is not None:
+            s.logits.append(fin.last_logits)
+        self.table[st.slot] = 0
+        self.table[st.slot, :len(blocks)] = blocks
+        self.lens[st.slot] = P
+        st.length, st.generated = P, 1
+        if payload.mode == "frozen" and payload.n_full:
+            # pages landed as codes+codebooks: already frozen, never queue
+            # them for a second solve
+            s.frozen_upto = payload.n_full
+            self._frozen_pages.update(int(b)
+                                      for b in blocks[:payload.n_full])
+        else:
+            s.frozen_upto = 0
+            self._queue_freeze(st.slot)
+        if st.done or fin.first_token == self.eos_id:
+            self._finish(st, now)
+
+    # ------------------------------------------------------------ steps
+
+    def step(self, now_fn) -> None:
+        """One engine iteration over this worker: flush queued freezes
+        (budgeted), one batched decode step, occupancy sample.
+
+        With no live sequences the decode step is skipped but pending
+        freezes are still polled — an async solve outliving its sequences
+        must land (or be dropped) here, or a run loop keyed on
+        ``has_work`` would wait on it forever."""
+        self._flush_freezes()
+        if self.sched.active_slots():
+            self._decode_step(now_fn)
+        else:
+            self._poll_freezes()
+        self._sample_cache()
+
+    def _decode_step(self, now_fn) -> None:
+        active = self.sched.active_slots()
+        if not active:
+            return
+        self.counters["decode_steps"] += 1
+        self._poll_freezes()
+        toks = np.zeros((len(self.slots), 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].last_token
+        # gather only the blocks the longest live sequence needs this step
+        # (idle slots sit at length 0); retraces are bounded by max_blocks
+        need = int(self.lens.max()) + 1
+        mb_used = max(1, -(-need // self.block_size))
+        self.counters["max_gather_blocks"] = max(
+            self.counters["max_gather_blocks"], mb_used)
+        tree = with_tables(self.tree, self.table[:, :mb_used], self.lens)
+        lens = jnp.asarray(self.lens)
+        logits, new = self._decode_fn(self.params, jnp.asarray(toks), tree,
+                                      lens)
+        self.tree = merge_pools(self.tree, new)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        sampling = any(self.slots[i].temperature > 0.0 for i in active)
+        rows = (np.asarray(logits[:, -1])
+                if self.record_logits or sampling else None)
+        now = now_fn()
+        finished = []
+        for i in active:
+            st = self.sched.active[i]
+            s = self.slots[i]
+            self.lens[i] += 1
+            st.length += 1
+            st.generated += 1
+            s.last_token = (sample_token(rows[i], temperature=s.temperature,
+                                         top_k=s.top_k, rng=s.rng)
+                            if s.temperature > 0.0 else int(nxt[i]))
+            s.out.append(s.last_token)
+            if self.record_logits:
+                s.logits.append(rows[i])
+            self.metrics.token(st.req.id, now)
+            self._queue_freeze(i)
+            if st.done or s.last_token == self.eos_id:
+                finished.append(st)
+        for st in finished:
+            self._finish(st, now)
+
+    # ------------------------------------------------------------ freezing
+
+    def _poll_freezes(self, drain: bool = False) -> None:
+        """Install completed freezes; count the ones still overlapping this
+        decode step. drain=True blocks on the remainder (end of run)."""
+        still = []
+        for step0, pending in self._pending_freezes:
+            if drain and not pending.is_ready():
+                jax.block_until_ready(pending.markers())
+            if pending.is_ready():
+                self.tree = install_freeze(self.tree, pending)
+                self._frozen_pages.update(
+                    int(b) for b in pending.bids[pending.keep])
+                self.counters["freeze_installs"] += 1
+                self.counters["freeze_overlap_steps"] += (
+                    self.counters["decode_steps"] - step0)
+            else:
+                self.counters["freeze_inflight_steps"] += 1
+                still.append((step0, pending))
+        self._pending_freezes = still
+
+    def _queue_freeze(self, slot: int) -> None:
+        """Queue this sequence's just-filled pages for quantization; the
+        worker iteration flushes the whole batch as ONE device dispatch
+        (_flush_freezes), so slots whose pages fill at the same step share
+        a solve."""
+        if self.kv_spec is None:
+            return
+        s = self.slots[slot]
+        full = int(self.lens[slot]) // self.block_size
+        if full > s.frozen_upto:
+            self._freeze_bids.extend(int(self.table[slot, j])
+                                     for j in range(s.frozen_upto, full))
+            s.frozen_upto = full
+
+    def _flush_freezes(self) -> None:
+        """One batched solve for pages queued this iteration, rate-limited
+        to ``freeze_page_budget`` pages per decode step.
+
+        The budget is the backpressure valve: a prefill burst can queue a
+        whole prompt's worth of full pages at once, and solving them as one
+        chunk would run long enough to delay the next decode steps — the
+        remainder flushes on later iterations (deferred pages keep serving
+        exact fp until then, so correctness is unaffected) and
+        ``freeze_deferred_pages`` counts how often the valve engaged."""
+        if not self._freeze_bids:
+            return
+        take = min(len(self._freeze_bids), self.freeze_page_budget)
+        bids, self._freeze_bids = (self._freeze_bids[:take],
+                                   self._freeze_bids[take:])
+        # count each page's deferral once: the flush consumed ``take``
+        # pages off the queue front (the oldest, hence any already-counted
+        # ones first), so shrink the counted watermark by that before
+        # counting what now remains beyond it as newly deferred
+        self._deferred_seen = max(self._deferred_seen - take, 0)
+        newly = len(self._freeze_bids) - self._deferred_seen
+        if newly > 0:
+            self.counters["freeze_deferred_pages"] += newly
+        self._deferred_seen = len(self._freeze_bids)
+        if self.kv_spec.device_capable:
+            # pad to a power-of-two page count (repeating one page is a
+            # no-op at install) so the jitted solver compiles a handful of
+            # shapes instead of one per distinct flush size; the host
+            # fallback solves per page, where a duplicate is pure waste
+            bucket = 1 << (len(bids) - 1).bit_length()
+            bids = bids + [bids[-1]] * (bucket - len(bids))
+        if self.freeze_async:
+            pending = dispatch_freeze(self.tree, bids, self.kv_spec)
+            self._pending_freezes.append(
+                (self.counters["decode_steps"], pending))
+            self.counters["freeze_pending_max"] = max(
+                self.counters["freeze_pending_max"],
+                len(self._pending_freezes))
+        else:
+            self.tree = freeze_blocks(self.tree, bids, self.kv_spec,
+                                      stats=self.counters)
+            self._frozen_pages.update(bids)
+            self.counters["freeze_installs"] += 1
+        self.counters["freeze_dispatches"] += 1
+
+    # ------------------------------------------------------------ teardown
+
+    def _finish(self, st: SeqState, now: float) -> None:
+        slot, s = st.slot, self.slots[st.slot]
+        self.outputs[st.req.id] = list(s.out)
+        if self.record_logits and s.logits:
+            self.request_logits[st.req.id] = np.stack(s.logits)
+        self.metrics.finish(st.req.id, now)
+        # freed pages may be reallocated before an in-flight solve lands —
+        # forget them (queued or dispatched) so a stale install can't mark
+        # a reused page frozen
+        freed = set(s.blocks)
+        self._freeze_bids = [b for b in self._freeze_bids if b not in freed]
+        self._deferred_seen = min(self._deferred_seen, len(self._freeze_bids))
+        self._frozen_pages -= freed
+        for _, pending in self._pending_freezes:
+            pending.drop(s.blocks)
+        self.tree = thaw_blocks(self.tree, s.blocks)
+        self.alloc.free(s.blocks)
+        self.table[slot] = 0
+        self.lens[slot] = 0
+        s.rid, s.blocks, s.frozen_upto, s.out = None, [], 0, []
+        s.rng, s.temperature, s.top_k = None, 0.0, 0
+        self.sched.release(st)
+
+    def drain(self) -> None:
+        """Flush every still-queued freeze and land in-flight solves (end
+        of run — live sequences are gone, so latency no longer matters)."""
+        while self._freeze_bids:
+            self._flush_freezes()
+        self._poll_freezes(drain=True)
+
+    def _sample_cache(self) -> None:
+        allocated = (self.num_blocks - 1) - self.alloc.num_free
+        # count *installed* pages: queued/in-flight solves still serve fp
+        # at full width, so they must not book frozen-page bytes yet
+        frozen = len(self._frozen_pages)
+        actual = (frozen * self._pb["frozen"]
+                  + (allocated - frozen) * self._pb["fp"])
+        self.metrics.sample_cache(allocated / (self.num_blocks - 1),
+                                  actual, allocated * self._pb["fp"])
+
+
+class PrefillWorker:
+    """The prefill role: queued prompts -> finished-prefill artifacts.
+
+    With ``pool=None`` the worker owns a small paged pool sized for
+    in-flight prompts and emits migration payloads (mode fp/frozen); with
+    ``pool=<DecodeWorker>`` it borrows the decode worker's pool and
+    allocator (the colocated composition) and emits no-op "splice"
+    payloads. ``step()`` is async in owned mode: it dispatches at most one
+    prefill (plus, for frozen migration, the page-freeze solve chained
+    behind it on device) and harvests on a later call once the device is
+    done, so the caller's decode loop keeps running under a long prompt.
+    """
+
+    def __init__(self, params, cfg, *, worker_id: int = 0,
+                 block_size: int = 16, max_seq_len: int = 256,
+                 kv_spec=None, migrate: str = "fp",
+                 num_blocks: int | None = None, pool: DecodeWorker | None = None,
+                 record_logits: bool = False, metrics=None,
+                 max_queue: int = 64):
+        from .metrics import MetricsCollector
+
+        assert migrate in ("fp", "frozen"), migrate
+        self.worker_id = worker_id
+        self.params, self.cfg = params, cfg
+        self.block_size = block_size
+        self.kv_spec = kv_spec
+        self.migrate = migrate
+        self.pool = pool
+        self.record_logits = record_logits
+        self.max_queue = max_queue
+        self.metrics = metrics if metrics is not None else MetricsCollector()
+        self.max_prompt_blocks = -(-max_seq_len // block_size)
+        self.queue: deque[Request] = deque()
+        self._inflight = None      # (req, blocks, logits device array, payload)
+        self.counters = {"prefills": 0, "queue_peak": 0}
+        self._prefill_fn = functools.partial(_prefill_step, cfg=cfg)
+        if pool is None:
+            frozen = migrate == "frozen" and kv_spec is not None
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else 2 * self.max_prompt_blocks + 1)
+            self.tree = init_paged_cache(
+                cfg, num_blocks=self.num_blocks, block_size=block_size,
+                batch=1, max_blocks=self.max_prompt_blocks, quantized=frozen,
+                num_values=kv_spec.num_values if frozen else 16, fused=False)
+            self.alloc = BlockAllocator(self.num_blocks)
+        else:
+            self.num_blocks = pool.num_blocks
+
+    # ------------------------------------------------------------ routing
+
+    @property
+    def load(self) -> int:
+        return len(self.queue) + (1 if self._inflight else 0)
+
+    @property
+    def busy(self) -> bool:
+        return self.load > 0
+
+    def can_accept(self) -> bool:
+        return self.load < self.max_queue
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.counters["queue_peak"] = max(self.counters["queue_peak"],
+                                          self.load)
+
+    # ------------------------------------------------------------ prefill
+
+    def _dispatch(self, req: Request, now_fn) -> None:
+        """Launch one prompt's prefill (and, when migrating frozen, the
+        page-freeze solve chained behind it); returns without waiting."""
+        self.metrics.prefill_start(req.id, now_fn())
+        P = req.prompt_len
+        ppad = -(-P // self.block_size) * self.block_size
+        nblk = ppad // self.block_size
+        if self.pool is not None:
+            # borrowed pool: allocate the request's worst-case pages where
+            # they will be served; the handoff is a table splice
+            blocks = self.pool.alloc.alloc(self.pool.sched.blocks_for(req))
+            tree = self.pool.tree
+        else:
+            blocks = self.alloc.alloc(nblk)
+            tree = self.tree
+        toks = np.zeros((1, ppad), np.int32)
+        toks[0, :P] = req.prompt
+        table = np.asarray([blocks[:nblk]], np.int32)
+        tree1 = with_tables(tree, table, np.zeros((1,), np.int32))
+        logits, new1 = self._prefill_fn(self.params, jnp.asarray(toks), tree1)
+        merged = merge_pools(tree, new1)
+        if self.pool is not None:
+            self.pool.tree = merged
+            payload = PagePayload(mode="splice",
+                                  blocks=[int(b) for b in blocks],
+                                  n_tokens=P, block_size=self.block_size,
+                                  n_full=P // self.block_size,
+                                  tail_rows=P % self.block_size)
+        else:
+            self.tree = merged
+            payload = extract_pages(merged, blocks, P,
+                                    block_size=self.block_size,
+                                    mode=self.migrate, spec=self.kv_spec)
+        self._inflight = (req, blocks, logits, payload)
+
+    def _harvest(self, now_fn) -> FinishedPrefill:
+        """Materialize the finished prefill: sample the first token, stage
+        the payload to host, release this worker's blocks."""
+        req, blocks, logits, payload = self._inflight
+        self._inflight = None
+        last = np.asarray(logits[0, req.prompt_len - 1])
+        now = now_fn()                        # TTFT includes prefill time
+        rng = req.make_rng()
+        tok = sample_token(last, temperature=req.temperature,
+                           top_k=req.top_k, rng=rng)
+        self.metrics.first_token(req.id, now)
+        payload.to_host()
+        if self.pool is None:
+            self.alloc.free(blocks)           # pages left as a host payload
+        self.counters["prefills"] += 1
+        return FinishedPrefill(
+            req=req, first_token=tok, payload=payload, rng=rng,
+            last_logits=last if self.record_logits else None,
+            worker_id=self.worker_id)
+
+    def step(self, now_fn, block: bool = False) -> list[FinishedPrefill]:
+        """Advance this worker: dispatch the queue head if idle (and its
+        prompt pages fit), harvest the in-flight prefill once the device
+        finished (immediately when ``block``). Returns 0 or 1 artifacts."""
+        if self._inflight is None and self.queue:
+            req = self.queue[0]
+            nblk = -(-req.prompt_len // self.block_size)
+            if self.pool is not None or nblk <= self.alloc.num_free:
+                self.queue.popleft()
+                self._dispatch(req, now_fn)
+        if self._inflight is not None:
+            logits, payload = self._inflight[2], self._inflight[3]
+            # harvest only once the prefill AND any chained freeze solve
+            # landed: to_host() on an in-flight solve would block this
+            # loop — the exact stall the worker split exists to avoid
+            if block or (logits.is_ready() and payload.is_ready()):
+                return [self._harvest(now_fn)]
+        return []
+
+    def run_inline(self, req: Request, now_fn) -> FinishedPrefill:
+        """Synchronous prefill of one request (the colocated engine's
+        inline path): dispatch + blocking harvest."""
+        assert self._inflight is None and not self.queue
+        self._dispatch(req, now_fn)
+        return self._harvest(now_fn)
