@@ -1,0 +1,17 @@
+"""Speculative-decoding benchmark suite entry point.
+
+Scenarios live in ``bench_serving.run_speculative`` (non-speculative
+baseline vs draft-k verify windows at equal compute: tokens/step, TPOT,
+acceptance rate; greedy-identical traces asserted); this module exists so
+``python -m benchmarks.run spec_decode`` finds them under their
+artifact's name, BENCH_spec_decode.json.
+
+    PYTHONPATH=src python -m benchmarks.run spec_decode
+    PYTHONPATH=src python -m benchmarks.bench_serving --speculative
+"""
+from __future__ import annotations
+
+from .bench_serving import run_speculative as run
+
+if __name__ == "__main__":
+    run()

@@ -23,6 +23,15 @@ GQA is handled natively: a static per-kv-head loop computes (G, bs) score
 tiles without repeating K/V across the group. `window` is not supported
 (serving decodes are full-context); callers fall back to the gather path.
 
+Query windows (speculative-decoding verify): ``q`` may carry a small extra
+window axis (B, W, Hq, Dh). The W queries of one sequence are this step's
+freshly written positions ``valid - W .. valid - 1``, so the kernel reads
+each page ONCE and scores all W queries against it — the causal structure
+is a per-query-row valid length ``valid - (W-1-w)`` folded into the same
+online-softmax mask. Queries ride through the grid reordered kv-head-major
+(``(Hkv, W, G)`` rows) so the static per-kv-head loop stays a contiguous
+slice; W=1 reduces to the plain decode layout bit-for-bit.
+
 The pure-jnp oracle is `ref.ref_paged_decode`; `_gather` + masked sdpa
 remains the CPU fallback read path. `modeled_hbm_bytes_per_token` is the
 analytic bytes model the paged-attention benchmark and tests use to compare
@@ -72,14 +81,15 @@ def unpack4(packed: jax.Array) -> jax.Array:
 # ------------------------------------------------------------ kernel body
 
 
-def _kernel(bs, Hkv, G, Dh, scale, softcap, quantized, packed,
+def _kernel(bs, Hkv, G, W, Dh, scale, softcap, quantized, packed,
             table_ref, valid_ref, blkq_ref,
             q_ref, kfp_ref, vfp_ref, kc_ref, vc_ref, kcb_ref, vcb_ref,
             o_ref,
             k_tile, v_tile, kc_tile, vc_tile, cb_tile, sems):
     b = pl.program_id(0)
     mb = table_ref.shape[1]
-    Hq = Hkv * G
+    WG = W * G                    # query rows per kv head ((Hkv, W, G) major)
+    Hq = Hkv * WG
     valid = valid_ref[b]
     n_pages = lax.div(valid + bs - 1, bs)
 
@@ -139,21 +149,26 @@ def _kernel(bs, Hkv, G, Dh, scale, softcap, quantized, packed,
         kt = k_tile[...].astype(jnp.float32)               # (bs, Hkv, Dh)
         vt = v_tile[...].astype(jnp.float32)
         s = jnp.concatenate(
-            [lax.dot_general(q[h * G:(h + 1) * G], kt[:, h, :],
+            [lax.dot_general(q[h * WG:(h + 1) * WG], kt[:, h, :],
                              (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
              for h in range(Hkv)], axis=0) * scale         # (Hq, bs)
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
         pos = j * bs + lax.broadcasted_iota(jnp.int32, (Hq, bs), 1)
-        mask = pos < valid
+        # query row r sits at sequence position valid - (W-1-w): older
+        # window rows see strictly shorter prefixes (causal within the
+        # window); W=1 collapses to the plain `pos < valid` decode mask
+        w_row = lax.rem(lax.broadcasted_iota(jnp.int32, (Hq, bs), 0),
+                        WG) // G
+        mask = pos < valid - (W - 1 - w_row)
         s = jnp.where(mask, s, BIG_NEG)
         m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
         p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(p, axis=1, keepdims=True)
         pv = jnp.concatenate(
-            [lax.dot_general(p[h * G:(h + 1) * G], vt[:, h, :],
+            [lax.dot_general(p[h * WG:(h + 1) * WG], vt[:, h, :],
                              (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
              for h in range(Hkv)], axis=0)                 # (Hq, Dh)
@@ -173,7 +188,7 @@ def _kernel(bs, Hkv, G, Dh, scale, softcap, quantized, packed,
     jax.jit, static_argnames=("softcap", "quantized", "packed", "interpret")
 )
 def paged_decode_attention(
-    q: jax.Array,            # (B, Hq, Dh) this step's queries
+    q: jax.Array,            # (B, Hq, Dh) queries, or (B, W, Hq, Dh) window
     k_fp: jax.Array,         # (nb, bs, Hkv, Dh) fp page pool
     v_fp: jax.Array,         # (nb, bs, Hkv, Dh)
     k_codes: jax.Array,      # (nb, bs, Hkv, Dc) packed 4-bit (or u8) codes
@@ -189,22 +204,36 @@ def paged_decode_attention(
     packed: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused flash-decode over the paged pools. Returns (B, Hq, Dh)."""
-    B, Hq, Dh = q.shape
+    """Fused flash-decode over the paged pools.
+
+    ``q`` may be a single decode step (B, Hq, Dh) -> (B, Hq, Dh), or a
+    speculative verify window (B, W, Hq, Dh) -> (B, W, Hq, Dh) whose W
+    queries sit at positions ``kv_valid_len - W .. kv_valid_len - 1``
+    (causal within the window); each page is still read once per sequence.
+    """
+    windowed = q.ndim == 4
+    if not windowed:
+        q = q[:, None]
+    B, W, Hq, Dh = q.shape
     nb, bs, Hkv, _ = k_fp.shape
     assert Hq % Hkv == 0, (Hq, Hkv)
     G = Hq // Hkv
     Dc = k_codes.shape[-1]
     L = k_cb.shape[1]
     scale = float(1.0 / np.sqrt(Dh))
+    # kv-head-major query rows ((Hkv, W, G)) keep the kernel's static
+    # per-kv-head loop a contiguous slice; identity when W == 1
+    HqW = Hkv * W * G
+    qr = q.reshape(B, W, Hkv, G, Dh).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(B, HqW, Dh)
 
-    qspec = pl.BlockSpec((1, Hq, Dh), lambda b, *_: (b, 0, 0))
+    qspec = pl.BlockSpec((1, HqW, Dh), lambda b, *_: (b, 0, 0))
     hbm = pl.BlockSpec(memory_space=pltpu.ANY)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B,),
         in_specs=[qspec, hbm, hbm, hbm, hbm, hbm, hbm],
-        out_specs=pl.BlockSpec((1, Hq, Dh), lambda b, *_: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, HqW, Dh), lambda b, *_: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((bs, Hkv, Dh), k_fp.dtype),
             pltpu.VMEM((bs, Hkv, Dh), v_fp.dtype),
@@ -214,17 +243,20 @@ def paged_decode_attention(
             pltpu.SemaphoreType.DMA((4,)),
         ],
     )
-    kern = functools.partial(_kernel, bs, Hkv, G, Dh, scale, softcap,
+    kern = functools.partial(_kernel, bs, Hkv, G, W, Dh, scale, softcap,
                              quantized, packed)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hq, Dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, HqW, Dh), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(block_table.astype(jnp.int32), kv_valid_len.astype(jnp.int32),
-      blk_q.astype(jnp.int32), q, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb)
+      blk_q.astype(jnp.int32), qr, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb)
+    out = out.reshape(B, Hkv, W, G, Dh).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(B, W, Hq, Dh)
+    return out if windowed else out[:, 0]
 
 
 # ------------------------------------------------------------ bytes model

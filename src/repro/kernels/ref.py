@@ -19,10 +19,18 @@ def ref_paged_decode(q, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb, blk_q,
     """Dense oracle for kernels.paged_attention: materialize every table
     page at full width (dequantizing frozen ones), then masked softmax.
     Numerically the same math as `PagedKVCache._gather` + decode-shaped
-    `models.attention.sdpa`."""
+    `models.attention.sdpa`.
+
+    ``q`` is (B, Hq, Dh) for a single decode step, or (B, W, Hq, Dh) for a
+    speculative verify window whose query w sits at sequence position
+    ``kv_valid_len - W + w`` (causal within the window).
+    """
     from .paged_attention import BIG_NEG, unpack4
 
-    B, Hq, Dh = q.shape
+    windowed = q.ndim == 4
+    if not windowed:
+        q = q[:, None]
+    B, W, Hq, Dh = q.shape
     nb, bs, Hkv, _ = k_fp.shape
     G = Hq // Hkv
     t = block_table
@@ -43,18 +51,21 @@ def ref_paged_decode(q, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb, blk_q,
 
     k_all = expand(k_fp, k_codes, k_cb).astype(jnp.float32)
     v_all = expand(v_fp, v_codes, v_cb).astype(jnp.float32)
-    qr = q.astype(jnp.float32).reshape(B, Hkv, G, Dh)
-    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_all,
+    qr = q.astype(jnp.float32).reshape(B, W, Hkv, G, Dh)
+    s = jnp.einsum("bwhgd,bshd->bwhgs", qr, k_all,
                    preferred_element_type=jnp.float32) / jnp.sqrt(Dh * 1.0)
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
-    pos = jnp.arange(mb * bs)[None]                     # (1, S)
-    mask = pos < jnp.asarray(kv_valid_len, jnp.int32)[:, None]
-    s = jnp.where(mask[:, None, None], s, BIG_NEG)
+    pos = jnp.arange(mb * bs)[None, None]               # (1, 1, S)
+    valid = jnp.asarray(kv_valid_len, jnp.int32)[:, None, None]
+    valid_w = valid - (W - 1 - jnp.arange(W)[None, :, None])   # (B, W, 1)
+    mask = pos < valid_w                                # (B, W, S)
+    s = jnp.where(mask[:, :, None, None], s, BIG_NEG)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(mask[:, None, None], p, 0.0)
-    out = jnp.einsum("bhgs,bshd->bhgd", p, v_all)
-    return out.reshape(B, Hq, Dh).astype(q.dtype)
+    p = jnp.where(mask[:, :, None, None], p, 0.0)
+    out = jnp.einsum("bwhgs,bshd->bwhgd", p, v_all)
+    out = out.reshape(B, W, Hq, Dh).astype(q.dtype)
+    return out if windowed else out[:, 0]
 
 
 def ref_fista(w, d, n, lam, eta, *, n_iters: int = 300):

@@ -25,11 +25,22 @@ bytes):
 (kmeans_ls, kmeans, iter_l1) freeze KV pages without host solves. Legacy
 bare method names still combine with --num-values / --kv-num-values.
 
-With --kv-quant the run also replays a deterministic subset against the fp
-paged cache (same engine composition) and reports the logit deviation.
-Documented tolerance (reduced configs, f32, per-page codebooks): max
-|dlogit| <= 2.5 and <= 8% of the logit range at 16 values; greedy tokens
-typically agree exactly, with 0 host page solves for device-capable specs.
+Speculative decoding — a reduced draft model proposes k tokens per step,
+the target verifies all k+1 positions in one batched window pass against
+the paged cache, accept/rollback adjusts seq_lens in place:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
+        --engine continuous --speculate 3 --draft-config auto \
+        --kv-quant kmeans_ls@16 --request-rate 4
+
+With --kv-quant (or --speculate) the run also replays a deterministic
+subset against the fp, non-speculative paged cache (same engine
+composition) and reports the logit deviation. Documented tolerance
+(reduced configs, f32, per-page codebooks): max |dlogit| <= 2.5 and <= 8%
+of the logit range at 16 values; greedy tokens typically agree exactly,
+with 0 host page solves for device-capable specs. Speculative decoding is
+greedy-token-identical by construction (every emitted token is a target
+argmax), so the same check covers its verify-window numerics.
 """
 import argparse
 import os
@@ -54,6 +65,22 @@ disaggregated serving (--engine disagg):
   --temperature T / --top-k K   engine-level sampling for the trace
         (temperature 0 = greedy, the default and the verification path;
         per-request seeds derive from --seed, so runs replay exactly).
+  --staging-depth D     cap on prefills in flight past the waiting queue
+        (assigned to a prefill worker or staged): a decode-capacity stall
+        backpressures the prefill workers instead of growing the staged
+        queue unboundedly. Default: unbounded.
+
+speculative decoding (--speculate k, both engines):
+  --speculate k         draft k tokens per step, verify all k+1 positions
+        in one batched target pass; accepted tokens advance seq_lens in
+        place, rejected suffixes roll back (never freezing a page past
+        the accepted watermark). Greedy-only.
+  --draft-config X      the draft model:
+        auto      layer-truncate the target to its first half (shared
+                  embed/head weights — a real reduced config at ~half the
+                  decode FLOPs, ~90% greedy agreement on reduced configs)
+        self      the target itself (acceptance ~100%: the upper bound)
+        <arch>    an arch name (same --reduced flag; vocab must match)
 
 migration note (pre-spec flags -> QuantSpec strings):
   --quantize kmeans_ls --num-values 16   ->  --quantize kmeans_ls@16:weighted=true
@@ -126,40 +153,69 @@ def _run_static(args):
           f"({B*G/dt:.1f} tok/s incl. compile); sample: {gen[0][:10].tolist()}")
 
 
+def _make_draft(params, cfg, args):
+    """Resolve --draft-config into a (draft_params, draft_cfg) pair."""
+    import jax
+
+    from repro import models
+    from repro.configs import get_config, get_reduced_config
+    from repro.serving import derive_draft
+
+    name = args.draft_config
+    if name in (None, "auto"):
+        return derive_draft(params, cfg)
+    if name == "self":
+        return params, cfg
+    dcfg = (get_reduced_config if args.reduced else get_config)(name)
+    if dcfg.vocab != cfg.vocab:
+        raise SystemExit(f"[serve] draft {name} vocab {dcfg.vocab} != "
+                         f"target vocab {cfg.vocab}")
+    return models.init_params(dcfg, jax.random.PRNGKey(7)), dcfg
+
+
 def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
-                 freeze_async=True):
+                 freeze_async=True, speculate=None, draft=None):
     """Build the engine composition ``args`` asks for (colocated vs
     disaggregated) — verification replays run through the same one."""
     from repro.serving import ContinuousBatchingEngine, DisaggEngine
 
+    speculate = args.speculate if speculate is None else speculate
     kw = dict(max_slots=args.max_slots, block_size=args.block_size,
               max_seq_len=args.max_seq_len, kv_quant=kv_quant,
               kv_num_values=args.kv_num_values, attn_impl=args.attn_impl,
               record_logits=record_logits, freeze_async=freeze_async,
-              freeze_page_budget=args.freeze_page_budget)
+              freeze_page_budget=args.freeze_page_budget,
+              speculate=speculate, draft=draft if speculate else None)
     if args.engine == "disagg":
         # fp pages are the only thing that can migrate without a spec
         migrate = args.migrate if kv_quant is not None else "fp"
         return DisaggEngine(params, cfg,
                             prefill_workers=args.prefill_workers,
                             decode_workers=args.decode_workers,
-                            migrate=migrate, **kw)
+                            migrate=migrate,
+                            staging_depth=args.staging_depth, **kw)
     return ContinuousBatchingEngine(params, cfg, **kw)
 
 
-def _verify_kv_quant(params, cfg, args):
-    """Replay a deterministic batch fp-paged vs quantized-paged through the
-    same engine composition and report the logit deviation the quantized
-    cache (plus, for disagg, the frozen page migration) introduces."""
+def _verify_serving(params, cfg, args, draft=None):
+    """Replay a deterministic batch through the fp, non-speculative engine
+    vs the engine as configured (quantized KV and/or speculative) and
+    report the logit deviation the quantized cache, the frozen page
+    migration (disagg), and the verify-window numerics introduce.
+    Speculative decoding must be greedy token-identical here: every
+    emitted token is a target argmax for its exact accepted context."""
     import numpy as np
 
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len).tolist()
                for _ in range(min(3, args.max_slots))]
     outs, engines = [], []
-    for kvq in (None, args.kv_quant):
-        eng = _make_engine(params, cfg, args, kv_quant=kvq,
+    for baseline in (True, False):
+        eng = _make_engine(params, cfg, args,
+                           kv_quant=None if baseline else args.kv_quant,
                            record_logits=True,
+                           speculate=0 if baseline else args.speculate,
+                           draft=draft,
                            freeze_async=False)  # deterministic install step
         outs.append(eng.generate(prompts, max_new_tokens=args.gen))
         engines.append(eng)
@@ -182,12 +238,27 @@ def _verify_kv_quant(params, cfg, args):
             else q.counters["host_page_solves"])
     tol_abs, tol_rel = 2.5, 0.08
     ok = dmax <= tol_abs and rel <= tol_rel
+    if args.speculate:
+        # token identity is the speculative acceptance bar, not a tolerance
+        ok = ok and agree == total
     mig = f", migrate={q.migrate}" if args.engine == "disagg" else ""
-    print(f"[serve] kv-quant check ({q.kv_spec}{mig}): "
+    spec = f", speculate={args.speculate}" if args.speculate else ""
+    print(f"[serve] serving check ({q.kv_spec or 'fp'}{mig}{spec}): "
           f"max|dlogit|={dmax:.3f} mean={dmean:.4f} rel={rel:.3%} "
           f"(tolerance: abs<={tol_abs}, rel<={tol_rel:.0%}) "
           f"greedy-token agreement {agree}/{total}, {host} host page solves "
           f"-> {'OK' if ok else 'EXCEEDED'}")
+    if args.speculate:
+        s = q.metrics.summary()
+        steps = (sum(w.counters["seq_decode_steps"] for w in q.decode)
+                 if args.engine == "disagg"
+                 else q.counters["seq_decode_steps"])
+        tps = (s.get("gen_tokens", 0) - s.get("completed", 0)) / max(steps, 1)
+        print(f"[serve] speculative check: acceptance "
+              f"{s.get('spec_acceptance_rate', 0.0):.1%} over "
+              f"{s.get('spec_proposed', 0)} drafts, "
+              f"{s.get('spec_rollbacks', 0)} rollbacks, "
+              f"tokens/step {tps:.2f}")
     return ok
 
 
@@ -214,7 +285,12 @@ def _run_continuous(args):
               f"{len(report)} tensors, {compression_ratio(report):.1f}x, "
               "serving undequantized via qmatmul")
 
-    eng = _make_engine(params, cfg, args, kv_quant=args.kv_quant)
+    draft = _make_draft(params, cfg, args) if args.speculate else None
+    if args.speculate and args.temperature > 0:
+        raise SystemExit("[serve] --speculate serves the greedy path; "
+                         "drop --temperature")
+    eng = _make_engine(params, cfg, args, kv_quant=args.kv_quant,
+                       draft=draft)
     trace = poisson_trace(args.num_requests, args.request_rate,
                           vocab=cfg.vocab, prompt_len=args.prompt_len,
                           max_new_tokens=args.gen, seed=args.seed,
@@ -222,11 +298,13 @@ def _run_continuous(args):
     tag = (f"disagg {args.prefill_workers}P/{args.decode_workers}D "
            f"migrate={eng.migrate}" if args.engine == "disagg"
            else "continuous batching")
+    spec_tag = (f", speculate={args.speculate} "
+                f"(draft={draft[1].name})" if args.speculate else "")
     print(f"[serve] {tag}: {args.num_requests} requests, "
           f"Poisson rate {args.request_rate}/s, prompt {args.prompt_len}, "
           f"gen {args.gen}, {args.max_slots} slots x "
           f"{args.max_seq_len} tokens, block {args.block_size}, "
-          f"kv={eng.kv_spec or 'fp'}, sampling="
+          f"kv={eng.kv_spec or 'fp'}{spec_tag}, sampling="
           f"{'greedy' if args.temperature <= 0 else f'T={args.temperature},top_k={args.top_k}'}")
     s = eng.run(trace)
     if not s["completed"]:
@@ -257,13 +335,20 @@ def _run_continuous(args):
               f"{s['migrated_seqs']} handoffs, {s['migrated_pages']} pages, "
               f"{mb/1e6:.3f} MB crossed ({s['migrate_compression']:.1f}x "
               f"fewer than fp rows at {s.get('migrate_fp_equiv_bytes', 0)/1e6:.3f} MB)")
+    if args.speculate:
+        print(f"[serve] speculative: acceptance "
+              f"{s.get('spec_acceptance_rate', 0.0):.1%} "
+              f"({s.get('spec_accepted', 0)}/{s.get('spec_proposed', 0)} "
+              f"drafts), {s.get('spec_rollbacks', 0)} rollbacks, "
+              f"tokens/step {s.get('tokens_per_step', 1.0):.2f}")
     if args.kv_quant:
         print(f"[serve] cache bytes: frozen-page compression "
               f"{s['page_compression']:.1f}x per page; measured mean "
               f"{s.get('cache_compression_mean', 1.0):.1f}x, at last "
               f"occupied step {s.get('cache_compression_final', 1.0):.1f}x "
               f"(partial pages stay fp)")
-        if not _verify_kv_quant(params, cfg, args):
+    if args.kv_quant or args.speculate:
+        if not _verify_serving(params, cfg, args, draft=draft):
             raise SystemExit(1)     # tolerance breach must fail the run
 
 
@@ -316,6 +401,20 @@ def main():
                     help="max KV pages quantized per decode step (prefill-"
                          "burst backpressure valve; deferred pages counted "
                          "in the summary)")
+    ap.add_argument("--staging-depth", type=int, default=None,
+                    help="disagg: cap on prefills in flight past the "
+                         "waiting queue; a decode stall backpressures the "
+                         "prefill workers (default: unbounded)")
+    # speculative decoding
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="draft k tokens per step and verify all k+1 "
+                         "positions in one batched target pass (0 = off; "
+                         "greedy only)")
+    ap.add_argument("--draft-config", default="auto",
+                    help="draft model for --speculate: 'auto' (layer-"
+                         "truncated target, shared weights), 'self' (the "
+                         "target itself), or an arch name with a matching "
+                         "vocab")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine-level sampling temperature for the trace "
                          "(0 = greedy, the default and verification path)")

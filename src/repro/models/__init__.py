@@ -44,6 +44,13 @@ def decode_step(params, cfg, tokens, cache, cache_index):
     return _tf.lm_decode_step(params, cfg, tokens, cache, cache_index)
 
 
+def decode_window(params, cfg, tokens, cache, cache_index):
+    """Multi-token decode window (B, W) at per-sequence offsets — the
+    speculative-decoding verify pass (LM family only)."""
+    assert cfg.family == "lm", "decode_window drives decoder-only LMs"
+    return _tf.lm_decode_window(params, cfg, tokens, cache, cache_index)
+
+
 def param_count(params) -> int:
     import jax
 

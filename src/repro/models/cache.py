@@ -35,11 +35,16 @@ import jax.numpy as jnp
 
 
 def supports_fused_decode(adapter, seq_len: int, window) -> bool:
-    """True when this decode step can take the adapter's fused-attention
-    path: single-token, full-context (no sliding window), and the adapter
-    opted in via ``use_fused_decode``."""
-    return (seq_len == 1 and window is None
-            and bool(getattr(adapter, "use_fused_decode", False)))
+    """True when this step can take the adapter's fused-attention path:
+    full-context (no sliding window), the adapter opted in via
+    ``use_fused_decode``, and the step is short enough — a single decode
+    token, or up to the adapter's ``fused_window`` queries (the
+    speculative-decoding verify window; prefill lengths stay on the
+    gather path)."""
+    if window is not None or not bool(getattr(adapter, "use_fused_decode",
+                                              False)):
+        return False
+    return seq_len <= max(int(getattr(adapter, "fused_window", 1)), 1)
 
 
 class DenseRingCache:

@@ -274,13 +274,27 @@ def lm_decode_step(params, cfg, tokens, cache, cache_index):
     a (B,) vector of per-sequence lengths (continuous batching over a paged
     cache, which carries its own write positions).
     """
+    return lm_decode_window(params, cfg, tokens, cache, cache_index)
+
+
+def lm_decode_window(params, cfg, tokens, cache, cache_index):
+    """Multi-token decode window: tokens (B, W) continue every sequence at
+    its own offset -> (logits (B, W, V), new_cache).
+
+    The speculative-decoding verify step: position w of row b is scored at
+    ``cache_index[b] + w`` with causal masking inside the window, so one
+    batched pass yields the target model's next-token logits after each of
+    the W prefixes — bit-identical math to W sequential decode steps.
+    W == 1 is exactly ``lm_decode_step``.
+    """
     batch = {"tokens": tokens}
     x = _embed_in(params, cfg, batch)
-    B = x.shape[0]
+    B, W = tokens.shape
     ci = jnp.asarray(cache_index, jnp.int32)
-    pos = ci.reshape(B, 1) if ci.ndim >= 1 else jnp.broadcast_to(ci, (B, 1))
+    base = ci.reshape(B, 1) if ci.ndim >= 1 else jnp.broadcast_to(ci, (B, 1))
+    pos = base + jnp.arange(W, dtype=jnp.int32)[None]
     if cfg.mrope_sections is not None:
-        positions = jnp.broadcast_to(pos[None], (3, B, 1)).astype(jnp.int32)
+        positions = jnp.broadcast_to(pos[None], (3, B, W)).astype(jnp.int32)
     else:
         positions = pos.astype(jnp.int32)
     x, new_cache = _scan_groups(params, cfg, x, positions, cache=cache,

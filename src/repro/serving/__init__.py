@@ -1,7 +1,11 @@
 """Serving subsystem: role-based workers (prefill/decode) over a paged
 (codebook-quantized) KV cache, composed either colocated
 (ContinuousBatchingEngine) or disaggregated behind a global router with
-fp/frozen KV page migration (DisaggEngine)."""
+fp/frozen KV page migration (DisaggEngine). Both engines optionally run
+speculative decoding (``speculate=k`` + a reduced draft model — see
+``speculative.derive_draft``): k drafted tokens verified per step in one
+batched window pass, accept/rollback on the paged cache, greedy
+token-identical to plain decoding by construction."""
 from .engine import ContinuousBatchingEngine, DisaggEngine
 from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
                        freeze_blocks, freeze_markers, init_paged_cache,
@@ -9,6 +13,7 @@ from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
 from .metrics import MetricsCollector, percentile
 from .scheduler import (ContinuousBatchingScheduler, DisaggRouter, Request,
                         SeqState)
+from .speculative import DraftWorker, derive_draft
 from .transfer import (FinishedPrefill, PagePayload, extract_pages,
                        splice_payload)
 from .workers import DecodeWorker, PrefillWorker, sample_token
@@ -16,7 +21,8 @@ from .workers import DecodeWorker, PrefillWorker, sample_token
 __all__ = [
     "ContinuousBatchingEngine", "DisaggEngine", "ContinuousBatchingScheduler",
     "DisaggRouter", "Request", "SeqState", "BlockAllocator", "PagedKVCache",
-    "DecodeWorker", "PrefillWorker", "FinishedPrefill", "PagePayload",
+    "DecodeWorker", "PrefillWorker", "DraftWorker", "derive_draft",
+    "FinishedPrefill", "PagePayload",
     "extract_pages", "splice_payload", "sample_token", "init_paged_cache",
     "freeze_blocks", "freeze_markers", "thaw_blocks", "with_tables",
     "page_bytes", "resolve_kv_spec", "DEVICE_FREEZE_METHODS",

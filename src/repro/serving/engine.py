@@ -30,6 +30,15 @@ validated against the solver registry at construction, so an unfreezable
 configuration fails here, naming the device-capable methods, rather than
 mid-serve.
 
+``speculate=k`` with ``draft=(params, cfg)`` (see
+``serving.speculative.derive_draft``) turns every decode iteration into a
+draft-propose / batched-verify / accept-rollback step: k draft tokens per
+sequence are scored in ONE k+1-wide target pass against the paged cache,
+accepted prefixes advance ``seq_lens`` in place, rejected suffixes roll
+back (un-queueing any page-freeze bids past the accepted watermark). The
+emitted trace is greedy-token-identical to non-speculative decoding by
+construction; acceptance counters land in the metrics summary.
+
 Weights flow through ``repro.quant.serve.qmatmul`` untouched: dense params
 hit the plain matmul path, PTQ'd QuantizedTensor leaves hit the fused
 dequant kernel — the engines are agnostic.
@@ -65,7 +74,8 @@ class ContinuousBatchingEngine:
                  kv_num_values: int | None = None, max_queue: int = 256,
                  eos_id: int | None = None, record_logits: bool = False,
                  attn_impl: str = "auto", freeze_async: bool = True,
-                 freeze_page_budget: int = 4):
+                 freeze_page_budget: int = 4, speculate: int = 0,
+                 draft: tuple | None = None):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
         self.attn_impl = _resolve_attn_impl(attn_impl)
         # fail fast at construction: resolve_kv_spec validates the spec
@@ -78,6 +88,7 @@ class ContinuousBatchingEngine:
         self.kv_num_values = (16 if self.kv_spec is None
                               else self.kv_spec.num_values)
         self.record_logits = record_logits
+        self.speculate = speculate
         self.metrics = MetricsCollector()
         self.outputs: dict[int, list[int]] = {}
         self.request_logits: dict[int, object] = {}
@@ -87,6 +98,7 @@ class ContinuousBatchingEngine:
             kv_spec=self.kv_spec, attn_impl=self.attn_impl,
             freeze_async=freeze_async, freeze_page_budget=freeze_page_budget,
             max_queue=max_queue, eos_id=eos_id, record_logits=record_logits,
+            speculate=speculate, draft=draft,
             metrics=self.metrics, outputs=self.outputs,
             request_logits=self.request_logits)
         # prefill worker inlined into the decode worker's pool: the handoff
@@ -145,6 +157,11 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------ intake
 
     def submit(self, req: Request, now: float) -> bool:
+        if self.speculate and req.temperature > 0.0:
+            raise ValueError(
+                "speculative decoding serves the greedy (temperature=0) "
+                "verification path; submit sampled requests to a "
+                "non-speculative engine")
         return self.worker.submit(req, now)
 
     # ------------------------------------------------------------ run loop
@@ -185,6 +202,14 @@ class ContinuousBatchingEngine:
         out["rejected"] = len(w.sched.rejected)
         out["attn_impl"] = self.attn_impl
         out.update(w.counters)
+        # decode-generated tokens per per-sequence decode step (batching
+        # factored out): exactly 1.0 for plain decoding, > 1 when
+        # speculative verify windows accept drafts
+        if out.get("seq_decode_steps"):
+            out["tokens_per_step"] = ((out.get("gen_tokens", 0)
+                                       - out.get("completed", 0))
+                                      / out["seq_decode_steps"])
+        out["speculate"] = self.speculate
         return out
 
     def generate(self, prompts: list[list[int]], max_new_tokens: int,
@@ -209,9 +234,11 @@ class DisaggEngine:
                  max_seq_len: int = 256, num_blocks: int | None = None,
                  prefill_blocks: int | None = None,
                  kv_quant: str | None = None, kv_num_values: int | None = None,
-                 max_queue: int = 256, eos_id: int | None = None,
+                 max_queue: int = 256, staging_depth: int | None = None,
+                 eos_id: int | None = None,
                  record_logits: bool = False, attn_impl: str = "auto",
-                 freeze_async: bool = True, freeze_page_budget: int = 4):
+                 freeze_async: bool = True, freeze_page_budget: int = 4,
+                 speculate: int = 0, draft: tuple | None = None):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
         assert prefill_workers >= 1 and decode_workers >= 1
         if migrate not in ("fp", "frozen"):
@@ -237,6 +264,7 @@ class DisaggEngine:
         self.kv_num_values = (16 if self.kv_spec is None
                               else self.kv_spec.num_values)
         self.record_logits = record_logits
+        self.speculate = speculate
         self.metrics = MetricsCollector()
         self.outputs: dict[int, list[int]] = {}
         self.request_logits: dict[int, object] = {}
@@ -246,7 +274,8 @@ class DisaggEngine:
             num_blocks=num_blocks, kv_spec=self.kv_spec,
             attn_impl=self.attn_impl, freeze_async=freeze_async,
             freeze_page_budget=freeze_page_budget, eos_id=eos_id,
-            record_logits=record_logits, metrics=self.metrics,
+            record_logits=record_logits, speculate=speculate, draft=draft,
+            metrics=self.metrics,
             outputs=self.outputs, request_logits=self.request_logits)
             for i in range(decode_workers)]
         self.prefills = [PrefillWorker(
@@ -254,7 +283,8 @@ class DisaggEngine:
             max_seq_len=max_seq_len, kv_spec=self.kv_spec, migrate=migrate,
             num_blocks=prefill_blocks, record_logits=record_logits,
             metrics=self.metrics) for i in range(prefill_workers)]
-        self.router = DisaggRouter(max_queue=max_queue)
+        self.router = DisaggRouter(max_queue=max_queue,
+                                   staging_depth=staging_depth)
         self.block_size = block_size
         self.max_seq_len = self.decode[0].max_seq_len
         self.freeze_async = self.decode[0].freeze_async
@@ -263,8 +293,14 @@ class DisaggEngine:
     # ------------------------------------------------------------ intake
 
     def submit(self, req: Request, now: float) -> bool:
+        if self.speculate and req.temperature > 0.0:
+            raise ValueError(
+                "speculative decoding serves the greedy (temperature=0) "
+                "verification path; submit sampled requests to a "
+                "non-speculative engine")
         d0, p0 = self.decode[0], self.prefills[0]
-        if (req.prompt_len + req.max_new_tokens > self.max_seq_len
+        if (req.prompt_len + req.max_new_tokens + self.speculate
+                > self.max_seq_len
                 or d0.sched.blocks_for(req) > d0.num_blocks - 1
                 or -(-req.prompt_len // self.block_size)
                 > p0.num_blocks - 1):
@@ -345,6 +381,11 @@ class DisaggEngine:
         out["rejected"] = len(self.router.rejected)
         out["attn_impl"] = self.attn_impl
         out["migrate"] = self.migrate
+        if agg.get("seq_decode_steps"):
+            out["tokens_per_step"] = ((out.get("gen_tokens", 0)
+                                       - out.get("completed", 0))
+                                      / agg["seq_decode_steps"])
+        out["speculate"] = self.speculate
         out["prefill_workers"] = len(self.prefills)
         out["decode_workers"] = len(self.decode)
         pb = self.decode[0]._pb

@@ -130,6 +130,7 @@ class PagedKVCache:
     quantized: bool
     packed: bool
     fused: bool = False       # decode reads go through the Pallas kernel
+    fused_window: int = 1     # max fused query window (speculative verify)
 
     _LEAVES = ("k_fp", "v_fp", "k_codes", "v_codes", "k_cb", "v_cb",
                "blk_q", "block_table", "seq_lens")
@@ -138,7 +139,8 @@ class PagedKVCache:
 
     def tree_flatten(self):
         return (tuple(getattr(self, f) for f in self._LEAVES),
-                (self.block_size, self.quantized, self.packed, self.fused))
+                (self.block_size, self.quantized, self.packed, self.fused,
+                 self.fused_window))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -181,20 +183,25 @@ class PagedKVCache:
         return self.fused
 
     def fused_decode(self, q, k, v, *, softcap=None):
-        """Decode-step write + fused paged attention (S == 1 only).
+        """Decode write + fused paged attention over a 1..fused_window
+        query window.
 
-        Returns (new_cache, out (B, 1, Hq, Dh)); frozen pages are read as
-        packed codes and dequantized inside the kernel.
+        Returns (new_cache, out (B, S, Hq, Dh)); frozen pages are read as
+        packed codes and dequantized inside the kernel. S > 1 is the
+        speculative verify window: query w attends causally through
+        position ``seq_lens + w``.
         """
         B, S, Hq, Dh = q.shape
-        assert S == 1, "fused_decode is the single-token decode path"
+        assert S <= max(self.fused_window, 1), (
+            f"fused_decode window {S} exceeds fused_window "
+            f"{self.fused_window}")
         new = self._write(k, v)
         out = paged_decode_attention(
-            q[:, 0], new.k_fp, new.v_fp, new.k_codes, new.v_codes,
-            new.k_cb, new.v_cb, new.blk_q, new.block_table,
-            new.seq_lens + 1, softcap=softcap, quantized=new.quantized,
+            q if S > 1 else q[:, 0], new.k_fp, new.v_fp, new.k_codes,
+            new.v_codes, new.k_cb, new.v_cb, new.blk_q, new.block_table,
+            new.seq_lens + S, softcap=softcap, quantized=new.quantized,
             packed=new.packed, interpret=default_interpret())
-        return new, out[:, None].astype(q.dtype)
+        return new, (out if S > 1 else out[:, None]).astype(q.dtype)
 
     def _gather(self, fp, codes=None, cb=None):
         """Pages for this batch: (B, mb*bs, Hkv, Dh).
@@ -216,7 +223,7 @@ class PagedKVCache:
 
 def init_paged_layer(cfg, *, num_blocks, block_size, batch, max_blocks,
                      quantized, num_values, dtype,
-                     fused=False) -> PagedKVCache:
+                     fused=False, fused_window=1) -> PagedKVCache:
     Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
     packed = quantized and num_values <= 16
     assert Dh % 2 == 0 or not packed
@@ -234,12 +241,13 @@ def init_paged_layer(cfg, *, num_blocks, block_size, batch, max_blocks,
         block_table=jnp.zeros((batch, max_blocks), jnp.int32),
         seq_lens=jnp.zeros((batch,), jnp.int32),
         block_size=block_size, quantized=quantized, packed=packed,
-        fused=fused,
+        fused=fused, fused_window=fused_window,
     )
 
 
 def init_paged_cache(cfg, *, num_blocks, block_size, batch, max_blocks,
-                     quantized=False, num_values=16, fused=False):
+                     quantized=False, num_values=16, fused=False,
+                     fused_window=1):
     """Model-shaped cache tree mirroring ``transformer.init_lm_cache`` with
     PagedKVCache leaves (leading group axis on scanned groups)."""
     for spec in tuple(cfg.group) + tuple(cfg.head_layers):
@@ -248,7 +256,8 @@ def init_paged_cache(cfg, *, num_blocks, block_size, batch, max_blocks,
     dtype = cfg.dtype("compute")
     kw = dict(num_blocks=num_blocks, block_size=block_size, batch=batch,
               max_blocks=max_blocks, quantized=quantized,
-              num_values=num_values, dtype=dtype, fused=fused)
+              num_values=num_values, dtype=dtype, fused=fused,
+              fused_window=fused_window)
 
     def stack(_spec):
         one = init_paged_layer(cfg, **kw)

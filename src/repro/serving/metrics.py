@@ -64,6 +64,13 @@ class MetricsCollector:
         self.occupancy: list[float] = []        # allocated / total pages
         self.cache_bytes: list[tuple[float, float]] = []  # (actual, fp-equiv)
         self.steps = 0
+        # speculative decoding: drafted-token fate, counted per SEQUENCE
+        # slice of a batched verify pass (spec_step is called once per
+        # active slot, so spec_proposed == k * spec_steps always)
+        self.spec_steps = 0          # per-sequence verify slices
+        self.spec_proposed = 0       # draft tokens offered for verification
+        self.spec_accepted = 0       # draft tokens the target emitted
+        self.spec_rollbacks = 0      # slices that rolled a suffix back
 
     # ----------------------------------------------------- request events
 
@@ -89,6 +96,18 @@ class MetricsCollector:
 
     def finish(self, rid: int, t: float) -> None:
         self.traces[rid].finish_t = t
+
+    def spec_step(self, proposed: int, accepted: int,
+                  rolled_back: bool) -> None:
+        """Account one sequence's slice of a speculative verify pass:
+        ``proposed`` draft tokens went in, ``accepted`` of them were
+        emitted; ``rolled_back`` marks a rejected suffix (seq_lens rolled
+        back to the accepted watermark)."""
+        self.spec_steps += 1
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
+        if rolled_back:
+            self.spec_rollbacks += 1
 
     # ----------------------------------------------------- cache sampling
 
@@ -140,6 +159,13 @@ class MetricsCollector:
             out["itl_p50_s"] = percentile(gaps, 50)
             out["itl_p99_s"] = percentile(gaps, 99)
             out["itl_max_s"] = float(np.max(gaps))
+        if self.spec_steps:
+            out["spec_steps"] = self.spec_steps
+            out["spec_proposed"] = self.spec_proposed
+            out["spec_accepted"] = self.spec_accepted
+            out["spec_rollbacks"] = self.spec_rollbacks
+            out["spec_acceptance_rate"] = (
+                self.spec_accepted / max(self.spec_proposed, 1))
         if self.occupancy:
             out["cache_occupancy_mean"] = float(np.mean(self.occupancy))
             out["cache_occupancy_max"] = float(np.max(self.occupancy))

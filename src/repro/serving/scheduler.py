@@ -68,10 +68,15 @@ class SeqState:
 
 class ContinuousBatchingScheduler:
     def __init__(self, *, max_slots: int, block_size: int,
-                 max_queue: int = 256):
+                 max_queue: int = 256, lookahead: int = 0):
         self.max_slots = max_slots
         self.block_size = block_size
         self.max_queue = max_queue
+        # speculative decoding writes its verify window optimistically:
+        # up to `lookahead` rows past the final accepted length need pages
+        # (rolled-back rows are rewritten, never served), so worst-case
+        # admission must reserve them
+        self.lookahead = lookahead
         self.waiting: deque[Request] = deque()
         self.active: dict[int, SeqState] = {}       # slot -> state
         self._free_slots = list(range(max_slots - 1, -1, -1))
@@ -80,7 +85,7 @@ class ContinuousBatchingScheduler:
     # ------------------------------------------------------------ intake
 
     def blocks_for(self, req: Request) -> int:
-        total = req.prompt_len + req.max_new_tokens
+        total = req.prompt_len + req.max_new_tokens + self.lookahead
         return -(-total // self.block_size)
 
     def submit(self, req: Request) -> bool:
@@ -175,10 +180,21 @@ class DisaggRouter:
     nowhere *waits* (head-of-line, like the colocated scheduler): its pages
     are already computed and host-staged, so holding it costs no device
     memory, and FCFS keeps it starvation-free.
+
+    ``staging_depth`` bounds the number of prefills in flight past the
+    waiting queue (assigned to a prefill worker or already staged): when a
+    decode-capacity stall stops ``route_decode`` from draining ``staged``,
+    ``route_prefill`` stops feeding the prefill workers instead of growing
+    the staged queue without bound — backpressure propagates to the global
+    waiting queue, whose ``max_queue`` door 429s. None = unbounded (the
+    pre-limit behavior).
     """
 
-    def __init__(self, *, max_queue: int = 256):
+    def __init__(self, *, max_queue: int = 256,
+                 staging_depth: int | None = None):
+        assert staging_depth is None or staging_depth >= 1
         self.max_queue = max_queue
+        self.staging_depth = staging_depth
         self.waiting: deque[Request] = deque()
         self.staged: deque = deque()           # FinishedPrefill artifacts
         self.rejected: list[int] = []
@@ -193,15 +209,26 @@ class DisaggRouter:
 
     def route_prefill(self, workers) -> list:
         """Assign waiting requests to prefill workers; returns the
-        (worker, request) assignments made this call."""
+        (worker, request) assignments made this call.
+
+        With a ``staging_depth``, assignments stop once the in-flight
+        count (prefill-worker load + staged artifacts) reaches the limit —
+        a stalled decode side backpressures prefill instead of piling
+        finished pages into ``staged``."""
         out = []
+        inflight = (sum(w.load for w in workers) + len(self.staged)
+                    if self.staging_depth is not None else 0)
         while self.waiting:
+            if (self.staging_depth is not None
+                    and inflight >= self.staging_depth):
+                break
             ranked = sorted((w for w in workers if w.can_accept()),
                             key=lambda w: (w.load, w.worker_id))
             if not ranked:
                 break
             req = self.waiting.popleft()
             ranked[0].submit(req)
+            inflight += 1
             out.append((ranked[0], req))
         return out
 

@@ -43,6 +43,7 @@ from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
                        init_paged_cache, install_freeze, merge_pools,
                        page_bytes, thaw_blocks, with_tables)
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
+from .speculative import DraftWorker, window_step
 from .transfer import (FinishedPrefill, PagePayload, extract_pages,
                        splice_payload)
 
@@ -102,6 +103,7 @@ class DecodeWorker:
                  attn_impl: str = "gather", freeze_async: bool = True,
                  freeze_page_budget: int = 4, max_queue: int = 256,
                  eos_id: int | None = None, record_logits: bool = False,
+                 speculate: int = 0, draft: tuple | None = None,
                  metrics=None, outputs=None, request_logits=None):
         from .metrics import MetricsCollector
 
@@ -120,16 +122,38 @@ class DecodeWorker:
         self.freeze_page_budget = freeze_page_budget
         self.eos_id = eos_id
         self.record_logits = record_logits
+        assert speculate >= 0
+        if speculate:
+            if draft is None:
+                raise ValueError("speculate=k needs draft=(params, cfg) — "
+                                 "see serving.speculative.derive_draft")
+            draft_params, draft_cfg = draft
+            if draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab} != target {cfg.vocab}; "
+                    f"speculative verify compares token ids directly")
+            if attn_impl == "fused" and speculate + 1 > block_size:
+                raise ValueError(
+                    f"speculate={speculate} verify window exceeds block "
+                    f"size {block_size}; the fused-window gate would also "
+                    f"catch prefill steps")
+        self.speculate = speculate
 
         self.tree = init_paged_cache(
             cfg, num_blocks=self.num_blocks, block_size=block_size,
             batch=max_slots, max_blocks=self.max_blocks,
             quantized=kv_spec is not None,
             num_values=16 if kv_spec is None else kv_spec.num_values,
-            fused=attn_impl == "fused")
+            fused=attn_impl == "fused", fused_window=speculate + 1)
         self.alloc = BlockAllocator(self.num_blocks)
+        # `lookahead` reserves the verify window's optimistic write rows
+        # past max_new_tokens in worst-case page accounting
         self.sched = ContinuousBatchingScheduler(
-            max_slots=max_slots, block_size=block_size, max_queue=max_queue)
+            max_slots=max_slots, block_size=block_size, max_queue=max_queue,
+            lookahead=speculate)
+        self.draft = None if not speculate else DraftWorker(
+            draft[0], draft[1], max_slots=max_slots, block_size=block_size,
+            max_blocks=self.max_blocks)
         self.metrics = metrics if metrics is not None else MetricsCollector()
         self.table = np.zeros((max_slots, self.max_blocks), np.int32)
         self.lens = np.zeros((max_slots,), np.int32)
@@ -146,6 +170,7 @@ class DecodeWorker:
         # their iteration by the per-step freeze budget.
         self.counters = {"freeze_dispatches": 0, "freeze_installs": 0,
                          "host_page_solves": 0, "decode_steps": 0,
+                         "seq_decode_steps": 0,
                          "freeze_inflight_steps": 0, "freeze_overlap_steps": 0,
                          "freeze_pending_max": 0, "freeze_deferred_pages": 0,
                          "max_gather_blocks": 0, "migrated_seqs": 0,
@@ -159,13 +184,15 @@ class DecodeWorker:
         # module-level jit keyed on the (hashable) config: workers of the
         # same geometry share compiles instead of retracing per instance
         self._decode_fn = functools.partial(_decode_step_fn, cfg=cfg)
+        self._verify_fn = functools.partial(window_step, cfg=cfg)
 
     # ------------------------------------------------------------ intake
 
     def submit(self, req: Request, now: float) -> bool:
         """Colocated front door: admission control + queueing + arrival
         metric (the disaggregated router does this globally instead)."""
-        if (req.prompt_len + req.max_new_tokens > self.max_seq_len
+        if (req.prompt_len + req.max_new_tokens + self.speculate
+                > self.max_seq_len
                 or self.sched.blocks_for(req) > self.num_blocks - 1):
             # reject what can never fit (seq budget or whole page pool) —
             # admitting it would head-of-line-block the queue forever
@@ -233,6 +260,10 @@ class DecodeWorker:
         else:
             s.frozen_upto = 0
             self._queue_freeze(st.slot)
+        if self.draft is not None:
+            # the draft prefills the same prompt on its own pool (cheap:
+            # the draft config is the reduced one) and mirrors this slot
+            self.draft.attach(st.slot, req.prompt, len(blocks))
         if st.done or fin.first_token == self.eos_id:
             self._finish(st, now)
 
@@ -248,7 +279,10 @@ class DecodeWorker:
         ``has_work`` would wait on it forever."""
         self._flush_freezes()
         if self.sched.active_slots():
-            self._decode_step(now_fn)
+            if self.speculate:
+                self._spec_decode_step(now_fn)
+            else:
+                self._decode_step(now_fn)
         else:
             self._poll_freezes()
         self._sample_cache()
@@ -258,6 +292,7 @@ class DecodeWorker:
         if not active:
             return
         self.counters["decode_steps"] += 1
+        self.counters["seq_decode_steps"] += len(active)
         self._poll_freezes()
         toks = np.zeros((len(self.slots), 1), np.int32)
         for i in active:
@@ -297,6 +332,113 @@ class DecodeWorker:
                 finished.append(st)
         for st in finished:
             self._finish(st, now)
+
+    # ------------------------------------------------------- speculative
+
+    def _spec_decode_step(self, now_fn) -> None:
+        """One speculative iteration: k draft proposals per active slot,
+        ONE batched verify window on the target over all k+1 positions,
+        then per-slot accept/rollback.
+
+        The verify pass writes all k+1 KV rows and this method advances
+        ``lens`` (and queues page-freeze bids) *optimistically* before
+        acceptance is known; ``_rollback_slot`` then shrinks every slot
+        back to its accepted watermark, un-queueing bids for rolled-back
+        pages. Bids flush at the *start* of the next ``step()``, so a bid
+        queued here can never dispatch before its rollback — the invariant
+        "no frozen page past the accepted seq_lens" holds at every step
+        boundary. Every emitted token is the target's greedy argmax for
+        its exact accepted context, so the trace is token-identical to
+        non-speculative decoding by construction.
+        """
+        active = self.sched.active_slots()
+        if not active:
+            return
+        k = self.speculate
+        W = k + 1
+        self.counters["decode_steps"] += 1
+        self.counters["seq_decode_steps"] += len(active)
+        self._poll_freezes()
+        proposals = self.draft.propose(active, self.slots, k)
+        toks = np.zeros((len(self.slots), W), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].last_token
+            toks[i, 1:] = proposals[i]
+        # gather only the blocks the longest live sequence's window needs
+        need = int(self.lens.max()) + W
+        mb_used = max(1, -(-need // self.block_size))
+        self.counters["max_gather_blocks"] = max(
+            self.counters["max_gather_blocks"], mb_used)
+        tree = with_tables(self.tree, self.table[:, :mb_used], self.lens)
+        logits, new = self._verify_fn(self.params, jnp.asarray(toks), tree,
+                                      jnp.asarray(self.lens))
+        self.tree = merge_pools(self.tree, new)
+        preds = np.asarray(jnp.argmax(logits, -1))            # (B, W)
+        sampling = any(self.slots[i].temperature > 0.0 for i in active)
+        assert not sampling, (
+            "speculative decoding serves the greedy verification path; "
+            "sampled requests need the non-speculative engine")
+        rows = np.asarray(logits) if self.record_logits else None
+        now = now_fn()
+        finished = []
+        for i in active:
+            st = self.sched.active[i]
+            s = self.slots[i]
+            L = int(self.lens[i])
+            # optimistic: all W rows written; advance + queue freezes as if
+            # every draft were accepted, then roll back to the watermark
+            self.lens[i] = L + W
+            self._queue_freeze(i)
+            n_acc = 0
+            while n_acc < k and proposals[i][n_acc] == int(preds[i, n_acc]):
+                n_acc += 1
+            # row j of the verify logits is the target's next-token
+            # distribution after [ctx, last, d1..dj]: accepted drafts are
+            # emitted verbatim, and row n_acc supplies the correction (or
+            # the bonus token when every draft survived) — uniformly its
+            # argmax
+            emitted = [int(t) for t in proposals[i][:n_acc]]
+            emitted.append(int(preds[i, n_acc]))
+            emitted = emitted[:st.req.max_new_tokens - st.generated]
+            if self.eos_id is not None and self.eos_id in emitted:
+                emitted = emitted[:emitted.index(self.eos_id) + 1]
+            a = len(emitted)
+            self.metrics.spec_step(k, min(n_acc, a), a < W)
+            self._rollback_slot(i, L + a)
+            st.length = L + a
+            st.generated += a
+            for j, t in enumerate(emitted):
+                s.out.append(t)
+                if self.record_logits:
+                    s.logits.append(rows[i, j])
+                self.metrics.token(st.req.id, now)
+            s.last_token = emitted[-1]
+            self.draft.sync(i, L + a)
+            if st.done or s.last_token == self.eos_id:
+                finished.append(st)
+        for st in finished:
+            self._finish(st, now)
+
+    def _rollback_slot(self, slot: int, new_len: int) -> None:
+        """Shrink a slot to its accepted watermark ``new_len``: un-queue
+        freeze bids for pages past it and drop them from any in-flight
+        solve, so a rejected suffix can never leave a frozen page beyond
+        the accepted ``seq_lens``. Rolled-back rows hold rejected drafts'
+        KV — invisible to attention (masked past ``lens``) and rewritten
+        in place by the next verify window before ``lens`` covers them."""
+        s = self.slots[slot]
+        full = int(new_len) // self.block_size
+        if s.frozen_upto > full:
+            stale = {int(self.table[slot, j])
+                     for j in range(full, s.frozen_upto)}
+            self._freeze_bids = [b for b in self._freeze_bids
+                                 if b not in stale]
+            self._deferred_seen = min(self._deferred_seen,
+                                      len(self._freeze_bids))
+            for _, pending in self._pending_freezes:
+                pending.drop(stale)
+            s.frozen_upto = full
+        self.lens[slot] = new_len
 
     # ------------------------------------------------------------ freezing
 
@@ -397,6 +539,8 @@ class DecodeWorker:
             pending.drop(s.blocks)
         self.tree = thaw_blocks(self.tree, s.blocks)
         self.alloc.free(s.blocks)
+        if self.draft is not None:
+            self.draft.release(slot)
         self.table[slot] = 0
         self.lens[slot] = 0
         s.rid, s.blocks, s.frozen_upto, s.out = None, [], 0, []

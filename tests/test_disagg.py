@@ -121,6 +121,56 @@ def test_router_decode_most_free_slots_and_hol_wait():
     assert len(router.staged) == 2
 
 
+def test_staging_depth_backpressures_prefill():
+    """With a staging depth, a decode-capacity stall stops route_prefill
+    from feeding the prefill workers once in-flight prefills (worker load
+    + staged artifacts) hit the limit; freeing decode capacity drains the
+    staged queue and reopens prefill intake. Without the limit the staged
+    queue grows unboundedly (the pre-limit behavior, kept as default)."""
+    router = DisaggRouter(staging_depth=2)
+    pw = _FakePrefill(0)
+    dec = _FakeDecode(0, free_slots=0)              # decode stalled
+    for i in range(6):
+        assert router.submit(_req(i))
+    assert len(router.route_prefill([pw])) == 2     # capped at depth
+    assert pw.load == 2 and len(router.waiting) == 4
+    # prefills finish -> staged; decode still stalled, nothing places
+    for i in range(2):
+        router.stage(_FakeFin(_req(i)))
+        pw.load -= 1
+    assert router.route_decode([dec], lambda w, f: w.place(f)) == []
+    # in-flight (staged) still at depth: prefill intake stays closed
+    assert router.route_prefill([pw]) == []
+    assert pw.load == 0 and len(router.waiting) == 4
+    # decode frees -> staged drains -> intake reopens
+    dec.free_slots = 2
+    assert len(router.route_decode([dec], lambda w, f: w.place(f))) == 2
+    assert len(router.route_prefill([pw])) == 2
+    # unbounded default: everything flows to the workers immediately
+    router2 = DisaggRouter()
+    pw2 = _FakePrefill(0, cap=64)
+    for i in range(6):
+        router2.submit(_req(i))
+    assert len(router2.route_prefill([pw2])) == 6
+
+
+def test_staging_depth_engine_bounds_inflight(qwen_reduced):
+    """End to end: a DisaggEngine with staging_depth=1 never holds more
+    than one prefill in flight past the waiting queue, yet completes the
+    whole trace (backpressure, not starvation)."""
+    cfg, params = qwen_reduced
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, 8).tolist() for _ in range(4)]
+    eng = DisaggEngine(params, cfg, prefill_workers=1, decode_workers=1,
+                       max_slots=1, block_size=8, max_seq_len=16,
+                       staging_depth=1)
+    out = eng.generate(prompts, max_new_tokens=4)
+    assert all(out[i] is not None and len(out[i]) == 4 for i in range(4))
+    # queue_peak counts load at submit time: depth 1 means the worker
+    # never saw a second prompt queued behind an in-flight one
+    assert eng.prefills[0].counters["queue_peak"] <= 1
+
+
 # ------------------------------------------------------------- sampling
 
 

@@ -1,0 +1,111 @@
+"""Golden-trace regression: a seeded colocated AND disaggregated greedy
+trace (token ids + a digest of each request's final-step logits) is pinned
+in ``tests/golden_trace.json``, so a decode/cache/transfer refactor that
+silently changes tokens fails THIS test loudly instead of only surfacing
+under a ``launch/serve.py`` verification run.
+
+Token ids must match exactly (greedy decode is deterministic for a fixed
+seed and platform); final logits are compared against the pinned rounded
+values with a small tolerance so benign numeric drift (BLAS/jax version)
+is distinguishable from a real decode change — the sha256 token digest in
+the fixture is the one-line fingerprint to quote in a bisect.
+
+Regenerate (ONLY when an intentional decode-semantics change is being
+made, and say so in the commit):
+
+    PYTHONPATH=src python tests/test_golden_trace.py --regen
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import models
+from repro.configs import get_reduced_config
+from repro.serving import ContinuousBatchingEngine, DisaggEngine
+
+pytestmark = pytest.mark.serving
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "golden_trace.json")
+
+PROMPT_SEED, PARAM_SEED = 42, 0
+N_REQ, PROMPT_LEN, GEN = 3, 12, 8
+GEOM = dict(block_size=8, max_seq_len=48)
+
+
+def _build():
+    cfg = get_reduced_config("qwen3_0_6b")
+    params = models.init_params(cfg, jax.random.PRNGKey(PARAM_SEED))
+    rng = np.random.default_rng(PROMPT_SEED)
+    prompts = [rng.integers(0, cfg.vocab, PROMPT_LEN).tolist()
+               for _ in range(N_REQ)]
+    return cfg, params, prompts
+
+
+def _trace(engine_kind):
+    cfg, params, prompts = _build()
+    if engine_kind == "colocated":
+        eng = ContinuousBatchingEngine(params, cfg, max_slots=2,
+                                       record_logits=True, **GEOM)
+    else:
+        eng = DisaggEngine(params, cfg, prefill_workers=1, decode_workers=1,
+                           migrate="fp", max_slots=2, record_logits=True,
+                           **GEOM)
+    out = eng.generate(prompts, max_new_tokens=GEN)
+    tokens = [out[i] for i in range(N_REQ)]
+    final_logits = [np.asarray(eng.request_logits[i][-1], np.float64)
+                    for i in range(N_REQ)]
+    digest = hashlib.sha256(
+        json.dumps(tokens).encode()).hexdigest()[:16]
+    return {"tokens": tokens, "token_digest": digest,
+            "final_logits": [np.round(l, 4).tolist() for l in final_logits]}
+
+
+def _regen():
+    fix = {kind: _trace(kind) for kind in ("colocated", "disagg")}
+    fix["meta"] = {"arch": "qwen3_0_6b", "reduced": True,
+                   "prompt_seed": PROMPT_SEED, "param_seed": PARAM_SEED,
+                   "n_req": N_REQ, "prompt_len": PROMPT_LEN, "gen": GEN,
+                   **GEOM}
+    with open(FIXTURE, "w") as f:
+        json.dump(fix, f, indent=1, sort_keys=True)
+    print(f"wrote {FIXTURE}")
+
+
+@pytest.mark.parametrize("kind", ["colocated", "disagg"])
+def test_golden_trace(kind):
+    with open(FIXTURE) as f:
+        fix = json.load(f)
+    got = _trace(kind)
+    want = fix[kind]
+    assert got["tokens"] == want["tokens"], (
+        f"{kind} greedy trace changed (pinned digest "
+        f"{want['token_digest']}, got {got['token_digest']}); if this "
+        f"decode-semantics change is intentional, regenerate the fixture "
+        f"with tests/test_golden_trace.py --regen and say so in the commit")
+    assert got["token_digest"] == want["token_digest"]
+    for i in range(N_REQ):
+        np.testing.assert_allclose(
+            got["final_logits"][i], want["final_logits"][i], atol=5e-3,
+            rtol=0, err_msg=f"{kind} request {i} final logits drifted")
+
+
+def test_golden_colocated_disagg_agree():
+    """The two pinned engine compositions must pin the SAME trace: fp
+    migration is exact, so divergence means the handoff broke."""
+    with open(FIXTURE) as f:
+        fix = json.load(f)
+    assert fix["colocated"]["tokens"] == fix["disagg"]["tokens"]
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

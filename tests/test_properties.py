@@ -1,0 +1,265 @@
+"""Property-based serving invariants.
+
+Three differential/invariant suites over the paged serving stack:
+
+  * fused/interpret paged attention == the dense ``ref.ref_paged_decode``
+    oracle across randomized geometries (batch, kv heads, GQA factor, page
+    size, frozen fraction, per-sequence lengths, verify-window width);
+  * ``extract_pages`` -> ``to_host`` -> ``splice_payload`` round-trips
+    BITWISE for ``migrate="fp"`` under randomized page counts/tails;
+  * page-pool conservation: a randomized admit/decode/finish trace driven
+    through the real engine (async freezes in flight, speculative or not)
+    never leaks or double-books a page — the free list and the live block
+    tables partition the pool at every step boundary.
+
+Each property has two drivers sharing one check body: a seeded random
+corpus that runs everywhere (no hypothesis required — the same pattern as
+``test_spec``), and a hypothesis-randomized variant when hypothesis is
+installed. The hypothesis run is bounded by default (profile "ci", the CI
+fast-lane budget); set HYPOTHESIS_PROFILE=thorough for a deeper sweep.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_reduced_config
+from repro.kernels import pack4, paged_decode_attention, ref_paged_decode
+from repro.serving import (ContinuousBatchingEngine, Request, derive_draft,
+                           extract_pages, init_paged_cache, splice_payload)
+from repro.serving.transfer import collect_leaves
+
+pytestmark = pytest.mark.serving
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+    settings.register_profile("ci", max_examples=12, deadline=None,
+                              derandomize=True)
+    settings.register_profile("thorough", max_examples=100, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:                                   # pragma: no cover
+    HAVE_HYP = False
+
+needs_hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis not installed")
+
+
+@pytest.fixture(scope="module")
+def qwen_reduced():
+    cfg = get_reduced_config("qwen3_0_6b")
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ------------------------------------------------- fused vs dense oracle
+
+
+def _check_paged_attention(bs, Hkv, G, Dh, B, mb, W, frozen, lens, softcap):
+    nb, L, Hq = B * mb + 1, 16, Hkv * G
+    rng = np.random.default_rng(0)
+    kfp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, Dh)), jnp.float32)
+    vfp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, Dh)), jnp.float32)
+    kcodes = rng.integers(0, L, (nb, bs, Hkv, Dh)).astype(np.uint8)
+    vcodes = rng.integers(0, L, (nb, bs, Hkv, Dh)).astype(np.uint8)
+    kc = pack4(jnp.asarray(kcodes))
+    vc = pack4(jnp.asarray(vcodes))
+    kcb = jnp.asarray(rng.normal(size=(nb, L)), jnp.float32)
+    vcb = jnp.asarray(rng.normal(size=(nb, L)), jnp.float32)
+    blkq = np.zeros((nb,), np.int32)
+    blkq[list(frozen)] = 1
+    state = (kfp, vfp, kc, vc, kcb, vcb, jnp.asarray(blkq))
+    table = jnp.asarray(1 + np.arange(B * mb).reshape(B, mb), jnp.int32)
+    valid = jnp.asarray(lens, jnp.int32)
+    q = jnp.asarray(rng.normal(size=(B, W, Hq, Dh)), jnp.float32)
+    out = paged_decode_attention(q, *state, table, valid, softcap=softcap,
+                                 quantized=True, packed=True, interpret=True)
+    ref = ref_paged_decode(q, *state, table, valid, softcap=softcap,
+                           quantized=True, packed=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=1e-4)
+
+
+def _random_attention_geom(rng):
+    bs = int(rng.choice([4, 8, 16]))
+    Hkv = int(rng.choice([1, 2]))
+    G = int(rng.choice([1, 2, 4]))
+    Dh = int(rng.choice([8, 16]))
+    B = int(rng.integers(1, 4))
+    mb = int(rng.integers(1, 4))
+    W = int(rng.choice([1, 2, 4]))
+    nb = B * mb + 1
+    n_frozen = int(rng.integers(0, nb))
+    frozen = rng.choice(np.arange(1, nb), size=min(n_frozen, nb - 1),
+                        replace=False).tolist()
+    # valid lengths in [W, mb*bs]: every window query sees >= 1 position
+    lens = rng.integers(W, mb * bs + 1, size=B).tolist()
+    softcap = None if rng.integers(2) else 30.0
+    return bs, Hkv, G, Dh, B, mb, W, frozen, lens, softcap
+
+
+def test_fused_matches_oracle_seeded_corpus():
+    """Seeded random-geometry corpus — runs everywhere."""
+    rng = np.random.default_rng(7)
+    for _ in range(12):
+        _check_paged_attention(*_random_attention_geom(rng))
+
+
+if HAVE_HYP:
+    @st.composite
+    def attention_geoms(draw):
+        bs = draw(st.sampled_from([4, 8, 16]))
+        Hkv = draw(st.sampled_from([1, 2]))
+        G = draw(st.sampled_from([1, 2, 4]))
+        Dh = draw(st.sampled_from([8, 16]))
+        B = draw(st.integers(1, 3))
+        mb = draw(st.integers(1, 3))
+        W = draw(st.sampled_from([1, 2, 4]))
+        nb = B * mb + 1
+        frozen = draw(st.lists(st.integers(1, nb - 1), unique=True,
+                               max_size=nb - 1))
+        lens = draw(st.lists(st.integers(min_value=W, max_value=mb * bs),
+                             min_size=B, max_size=B))
+        softcap = draw(st.sampled_from([None, 30.0]))
+        return bs, Hkv, G, Dh, B, mb, W, frozen, lens, softcap
+
+    @needs_hyp
+    @given(attention_geoms())
+    def test_fused_matches_oracle_property(geom):
+        """Hypothesis-randomized geometries, incl. multi-query verify
+        windows and ragged frozen pages."""
+        _check_paged_attention(*geom)
+
+
+# ------------------------------------------------- fp migration bitwise
+
+
+def _check_fp_roundtrip(bs, max_blocks, n_tokens, seed):
+    cfg = get_reduced_config("qwen3_0_6b")
+    kw = dict(num_blocks=2 * max_blocks + 1, block_size=bs, batch=1,
+              max_blocks=max_blocks, quantized=False)
+    rng = np.random.default_rng(seed)
+    src = init_paged_cache(cfg, **kw)
+    src = jax.tree_util.tree_map(
+        lambda l: dataclasses.replace(
+            l, k_fp=jnp.asarray(rng.normal(size=l.k_fp.shape), jnp.float32),
+            v_fp=jnp.asarray(rng.normal(size=l.v_fp.shape), jnp.float32)),
+        src, is_leaf=lambda x: hasattr(x, "k_fp"))
+    n_pages = -(-n_tokens // bs)
+    perm = rng.permutation(np.arange(1, 2 * max_blocks + 1))
+    blocks = [int(b) for b in perm[:n_pages]]
+    new_blocks = [int(b) for b in perm[n_pages:2 * n_pages]]
+    payload = extract_pages(src, blocks, n_tokens, block_size=bs,
+                            mode="fp").to_host()
+    assert payload.n_pages == n_pages
+    assert payload.nbytes == payload.fp_equiv_bytes > 0
+    dst = splice_payload(init_paged_cache(cfg, **kw), payload, new_blocks)
+    for sl, dl in zip(collect_leaves(src), collect_leaves(dst)):
+        stacked = sl.k_fp.ndim == 5
+        ax = 1 if stacked else 0
+        for s_pool, d_pool in ((sl.k_fp, dl.k_fp), (sl.v_fp, dl.v_fp)):
+            s_rows = np.take(np.asarray(s_pool), blocks, axis=ax)
+            d_rows = np.take(np.asarray(d_pool), new_blocks, axis=ax)
+            # collapse (page, row) -> token rows; only the n_tokens
+            # written rows must land (the tail page's padding rows keep
+            # the destination's contents)
+            lead = (s_rows.shape[0],) if stacked else ()
+            s_tok = s_rows.reshape(lead + (-1,) + s_rows.shape[-2:])
+            d_tok = d_rows.reshape(lead + (-1,) + d_rows.shape[-2:])
+            np.testing.assert_array_equal(d_tok[..., :n_tokens, :, :],
+                                          s_tok[..., :n_tokens, :, :])
+
+
+def test_fp_migration_roundtrip_seeded_corpus():
+    rng = np.random.default_rng(11)
+    for _ in range(6):
+        bs = int(rng.choice([4, 8]))
+        n_tokens = int(rng.integers(1, bs * 4 + 1))
+        _check_fp_roundtrip(bs, 4, n_tokens, int(rng.integers(2**16)))
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @given(st.sampled_from([4, 8]), st.integers(1, 32),
+           st.integers(0, 2**16))
+    def test_fp_migration_roundtrip_property(bs, n_tokens, seed):
+        """extract -> to_host -> splice is bitwise for migrate="fp" at any
+        token count (full pages, ragged tail, single-row prompt)."""
+        _check_fp_roundtrip(bs, 4, min(n_tokens, bs * 4), seed)
+
+
+# ------------------------------------------------- pool conservation
+
+
+def assert_pool_partition(worker):
+    """Free list + live block tables partition the page pool: no page
+    leaked, none double-booked, allocator bookkeeping consistent."""
+    free = set(worker.alloc._free)
+    used = set(worker.alloc._used)
+    live = []
+    for s in worker.slots:
+        live.extend(s.blocks)
+    assert len(live) == len(set(live)), "page double-booked across slots"
+    assert set(live) == used, "allocator used-set != live tables"
+    assert not (free & used), "page both free and used"
+    assert free | used == set(range(1, worker.num_blocks)), "page leaked"
+    # frozen bookkeeping never refers to an unallocated page
+    assert worker._frozen_pages <= used
+    assert set(worker._freeze_bids) <= used
+
+
+def _check_conservation(qwen_reduced, reqs, speculate):
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(
+        params, cfg, max_slots=2, block_size=8, max_seq_len=48,
+        kv_quant="kmeans_ls@16", freeze_page_budget=1,   # keep solves queued
+        speculate=speculate,
+        draft=derive_draft(params, cfg) if speculate else None)
+    w = eng.worker
+    orig_step = w.step
+
+    def checked_step(now_fn):
+        orig_step(now_fn)
+        assert_pool_partition(w)
+
+    w.step = checked_step
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, p).tolist() for p, _ in reqs]
+    requests = [Request(id=i, prompt=tuple(p), max_new_tokens=reqs[i][1])
+                for i, p in enumerate(prompts)]
+    eng.run(requests)
+    assert_pool_partition(w)
+    # everything completed and every page returned — including sequences
+    # that finished with freeze solves still in flight (budget=1 defers)
+    assert sorted(eng.outputs) == list(range(len(reqs)))
+    assert eng.alloc.num_free == eng.num_blocks - 1
+    assert not w._pending_freezes and not w._freeze_bids
+    if speculate:
+        assert not any(w.draft.blocks)
+        assert w.draft.alloc.num_free == w.draft.num_blocks - 1
+
+
+def test_page_pool_conservation_seeded_corpus(qwen_reduced):
+    """Randomized admit/decode/finish traces (ragged prompts and budgets,
+    async freezes outliving sequences, with and without speculation) keep
+    the free list + live page tables an exact partition of the pool at
+    every worker step, and drain back to an empty pool."""
+    rng = np.random.default_rng(3)
+    for speculate in (0, 2):
+        reqs = [(int(rng.integers(1, 21)), int(rng.integers(1, 9)))
+                for _ in range(int(rng.integers(2, 6)))]
+        _check_conservation(qwen_reduced, reqs, speculate)
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(st.lists(st.tuples(st.integers(1, 20), st.integers(1, 8)),
+                    min_size=2, max_size=5),
+           st.sampled_from([0, 2]))
+    def test_page_pool_conservation_property(qwen_reduced, reqs, speculate):
+        _check_conservation(qwen_reduced, reqs, speculate)
