@@ -140,9 +140,61 @@ def run(rates=(2.0, 8.0), n=8, prompt_len=32, gen=12, kv_num_values=16,
                      f"tpot_p99_ms={s['tpot_p99_s']*1e3:.1f};"
                      f"pages={s['num_blocks']};"
                      f"compress={s.get('cache_compression_final', 1.0):.2f}x")
+    results.append(run_obs_overhead(
+        params, cfg, n=n, prompt_len=prompt_len, gen=gen,
+        kv_num_values=kv_num_values, max_slots=max_slots,
+        block_size=block_size, seed=seed))
     bench_json("serving", results,
                meta={"arch": ARCH, "reduced": True, "max_slots": max_slots,
                      "block_size": block_size, "kv_num_values": kv_num_values})
+
+
+# ------------------------------------------------------- obs overhead
+
+
+def run_obs_overhead(params, cfg, *, n=8, prompt_len=32, gen=12,
+                     kv_num_values=16, max_slots=4, block_size=16, reps=3,
+                     seed=0) -> dict:
+    """Observability overhead guard -> one BENCH_serving.json row.
+
+    The same quantized burst trace is served with tracing fully on
+    (``Tracer()``: router, decode-step phases, per-page freeze lifecycle,
+    cache/roofline counter tracks all recorded) and with the default
+    ``NULL_TRACER``; best-of-``reps`` throughput per arm de-noises shared
+    hosts. The in-bench assert is the regression gate: tracing must not
+    cost 5% tokens/s."""
+    from repro.obs import NULL_TRACER, Tracer
+    from repro.serving import ContinuousBatchingEngine
+    from repro.serving.scheduler import make_requests
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, prompt_len).tolist()
+               for _ in range(n)]
+
+    def one(tracer):
+        eng = ContinuousBatchingEngine(
+            params, cfg, max_slots=max_slots, block_size=block_size,
+            max_seq_len=-(-(prompt_len + gen) // block_size) * block_size,
+            kv_quant="kmeans_ls", kv_num_values=kv_num_values,
+            tracer=tracer)
+        return eng.run(make_requests(prompts, gen))
+
+    one(NULL_TRACER)                          # warm the jit caches
+    tok = {}
+    for arm, make_tracer in (("off", lambda: NULL_TRACER), ("on", Tracer)):
+        tok[arm] = max(one(make_tracer())["throughput_tok_s"]
+                       for _ in range(reps))
+    frac = 1.0 - tok["on"] / tok["off"]
+    emit("serving/obs_overhead", 1e6 / tok["on"],
+         f"tok_s_on={tok['on']:.1f};tok_s_off={tok['off']:.1f};"
+         f"overhead={frac*100:.1f}%")
+    assert tok["on"] >= 0.95 * tok["off"], (
+        f"tracer overhead {frac*100:.1f}% >= 5%: "
+        f"on={tok['on']:.1f} off={tok['off']:.1f} tok/s")
+    return {"scenario": "obs_overhead", "tok_s_tracer_on": tok["on"],
+            "tok_s_tracer_off": tok["off"], "overhead_frac": frac,
+            "reps": reps, "num_requests": n, "prompt_len": prompt_len,
+            "gen": gen}
 
 
 # ----------------------------------------------------------- speculative

@@ -22,8 +22,10 @@ def bench_json(name: str, results, *, meta: dict | None = None,
     {"bench": name, "meta": {...}, "results": [...]}."""
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(path, "w") as f:
+        # strict JSON: a NaN/Inf metric (e.g. a percentile over an empty
+        # population) must fail the bench, not poison downstream parsers
         json.dump({"bench": name, "meta": meta or {}, "results": results},
-                  f, indent=1, sort_keys=True)
+                  f, indent=1, sort_keys=True, allow_nan=False)
     print(f"[bench] wrote {path}")
     return path
 

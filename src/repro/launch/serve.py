@@ -82,6 +82,24 @@ speculative decoding (--speculate k, both engines):
         self      the target itself (acceptance ~100%: the upper bound)
         <arch>    an arch name (same --reduced flag; vocab must match)
 
+observability (continuous + disagg engines):
+  --trace-out PATH      write a Chrome trace-event / Perfetto-loadable
+        JSON trace of the whole run: one track per component — router
+        decisions, prefill dispatch/harvest, decode-step phases
+        (dispatch/sync/commit), transfer extract/splice with payload
+        bytes, the per-page freeze lifecycle (queued -> dispatched ->
+        installed | dropped | rolled_back) as async spans, and
+        speculative propose/verify/accept/rollback. Load it at
+        https://ui.perfetto.dev (Open trace file) or chrome://tracing.
+        The run prints a reconciliation of trace spans against the
+        engine's freeze/step counters.
+  --metrics-jsonl PATH  append one JSON metrics snapshot per
+        --metrics-interval seconds (streaming counters/gauges/histogram
+        percentiles, windowed over each interval; plus modeled HBM
+        bytes/token roofline gauges). A Prometheus text rendering of the
+        final snapshot lands next to it at PATH + ".prom".
+  --metrics-interval S  snapshot cadence in seconds (default 1.0).
+
 migration note (pre-spec flags -> QuantSpec strings):
   --quantize kmeans_ls --num-values 16   ->  --quantize kmeans_ls@16:weighted=true
                                (legacy PTQ always optimized the weighted
@@ -174,9 +192,11 @@ def _make_draft(params, cfg, args):
 
 
 def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
-                 freeze_async=True, speculate=None, draft=None):
+                 freeze_async=True, speculate=None, draft=None,
+                 tracer=None, exporter=None):
     """Build the engine composition ``args`` asks for (colocated vs
-    disaggregated) — verification replays run through the same one."""
+    disaggregated) — verification replays run through the same one
+    (with tracer/exporter left off: replays are correctness probes)."""
     from repro.serving import ContinuousBatchingEngine, DisaggEngine
 
     speculate = args.speculate if speculate is None else speculate
@@ -185,7 +205,8 @@ def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
               kv_num_values=args.kv_num_values, attn_impl=args.attn_impl,
               record_logits=record_logits, freeze_async=freeze_async,
               freeze_page_budget=args.freeze_page_budget,
-              speculate=speculate, draft=draft if speculate else None)
+              speculate=speculate, draft=draft if speculate else None,
+              tracer=tracer, exporter=exporter)
     if args.engine == "disagg":
         # fp pages are the only thing that can migrate without a spec
         migrate = args.migrate if kv_quant is not None else "fp"
@@ -262,6 +283,38 @@ def _verify_serving(params, cfg, args, draft=None):
     return ok
 
 
+def _trace_reconcile(tracer, s, speculate: int) -> bool:
+    """Cross-check trace spans against the engine's counters: the trace is
+    only trustworthy if its event counts ARE the counters."""
+    from repro.obs import count_events
+
+    ev = tracer.events
+    n_step = count_events(ev, name="decode_step", ph="X")
+    n_flush = count_events(ev, name="flush", ph="X")
+    nb = count_events(ev, name="page_freeze", ph="b")
+    ne = count_events(ev, name="page_freeze", ph="e")
+    states: dict = {}
+    for e in ev:
+        if e.get("ph") == "e" and e.get("name") == "page_freeze":
+            st = e.get("args", {}).get("state", "?")
+            states[st] = states.get(st, 0) + 1
+    ok = (n_step == s.get("decode_steps", 0)
+          and n_flush == s.get("freeze_dispatches", 0) and nb == ne)
+    if speculate:
+        n_acc = count_events(ev, name="accept", ph="i")
+        n_rb = count_events(ev, name="rollback", ph="i")
+        ok = ok and (n_acc == s.get("spec_steps", 0)
+                     and n_rb == s.get("spec_rollbacks", 0))
+    state_txt = (", ".join(f"{k}={v}" for k, v in sorted(states.items()))
+                 or "none")
+    print(f"[serve] trace: {len(ev)} events | decode_step spans {n_step} "
+          f"(counter {s.get('decode_steps', 0)}), freeze flushes {n_flush} "
+          f"(counter {s.get('freeze_dispatches', 0)}), page-freeze spans "
+          f"{nb} opened -> {ne} terminal ({state_txt}) "
+          f"-> {'reconciled' if ok else 'MISMATCH'}")
+    return ok
+
+
 def _run_continuous(args):
     import jax
 
@@ -289,8 +342,17 @@ def _run_continuous(args):
     if args.speculate and args.temperature > 0:
         raise SystemExit("[serve] --speculate serves the greedy path; "
                          "drop --temperature")
+    tracer = exporter = None
+    if args.trace_out or args.metrics_jsonl:
+        from repro.obs import MetricsExporter, Tracer
+
+        if args.trace_out:
+            tracer = Tracer()
+        if args.metrics_jsonl:
+            exporter = MetricsExporter(args.metrics_jsonl,
+                                       interval_s=args.metrics_interval)
     eng = _make_engine(params, cfg, args, kv_quant=args.kv_quant,
-                       draft=draft)
+                       draft=draft, tracer=tracer, exporter=exporter)
     trace = poisson_trace(args.num_requests, args.request_rate,
                           vocab=cfg.vocab, prompt_len=args.prompt_len,
                           max_new_tokens=args.gen, seed=args.seed,
@@ -307,6 +369,21 @@ def _run_continuous(args):
           f"kv={eng.kv_spec or 'fp'}{spec_tag}, sampling="
           f"{'greedy' if args.temperature <= 0 else f'T={args.temperature},top_k={args.top_k}'}")
     s = eng.run(trace)
+    if exporter is not None:
+        exporter.close(eng.metrics)
+        from repro.obs import prometheus_text
+
+        prom_path = args.metrics_jsonl + ".prom"
+        with open(prom_path, "w") as f:
+            f.write(prometheus_text(eng.metrics.snapshot()))
+        print(f"[serve] metrics: {len(exporter.lines)} snapshots -> "
+              f"{args.metrics_jsonl} (+ {prom_path})")
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"[serve] trace -> {args.trace_out} (load at "
+              f"https://ui.perfetto.dev or chrome://tracing)")
+        if not _trace_reconcile(tracer, s, args.speculate):
+            raise SystemExit("[serve] trace/counter reconciliation failed")
     if not s["completed"]:
         print(f"[serve] no requests completed ({s['rejected']} rejected — "
               f"prompt+gen must fit --max-seq-len {args.max_seq_len})")
@@ -420,8 +497,23 @@ def main():
                          "(0 = greedy, the default and verification path)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation when sampling (0 = full vocab)")
+    # observability
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable Chrome trace-event "
+                         "JSON of the run (one track per component; see "
+                         "epilog)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append periodic JSON metrics snapshots here "
+                         "(streaming percentiles windowed per interval; "
+                         "final Prometheus text at PATH + '.prom')")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    help="seconds between --metrics-jsonl snapshots")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if (args.trace_out or args.metrics_jsonl) \
+            and args.engine not in ("continuous", "disagg"):
+        ap.error("--trace-out/--metrics-jsonl instrument the continuous "
+                 "and disagg engines")
     serving = args.engine in ("continuous", "disagg")
     if serving and args.request_rate <= 0:
         ap.error("--request-rate must be > 0 (requests per second)")

@@ -5,7 +5,16 @@ fp/frozen KV page migration (DisaggEngine). Both engines optionally run
 speculative decoding (``speculate=k`` + a reduced draft model — see
 ``speculative.derive_draft``): k drafted tokens verified per step in one
 batched window pass, accept/rollback on the paged cache, greedy
-token-identical to plain decoding by construction."""
+token-identical to plain decoding by construction.
+
+Observability: pass ``tracer=obs.Tracer(...)`` to either engine for a
+Perfetto-loadable trace of every component (router, prefill, decode-step
+phases, transfer, per-page freeze lifecycle, speculative verify) and
+``exporter=obs.MetricsExporter(...)`` for periodic JSONL snapshots; both
+default to no-ops (``obs.NULL_TRACER`` / None) with ~zero hot-loop cost."""
+from repro.obs import (FakeClock, MetricsExporter, NULL_TRACER, NullTracer,
+                       Tracer)
+
 from .engine import ContinuousBatchingEngine, DisaggEngine
 from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
                        freeze_blocks, freeze_markers, init_paged_cache,
@@ -27,4 +36,5 @@ __all__ = [
     "freeze_blocks", "freeze_markers", "thaw_blocks", "with_tables",
     "page_bytes", "resolve_kv_spec", "DEVICE_FREEZE_METHODS",
     "MetricsCollector", "percentile",
+    "Tracer", "NullTracer", "NULL_TRACER", "FakeClock", "MetricsExporter",
 ]

@@ -51,6 +51,7 @@ from collections import deque
 import jax
 
 from repro.core import registry as quant_registry
+from repro.obs.trace import NULL_TRACER
 
 from .kv_cache import resolve_kv_spec
 from .metrics import MetricsCollector
@@ -75,8 +76,10 @@ class ContinuousBatchingEngine:
                  eos_id: int | None = None, record_logits: bool = False,
                  attn_impl: str = "auto", freeze_async: bool = True,
                  freeze_page_budget: int = 4, speculate: int = 0,
-                 draft: tuple | None = None):
+                 draft: tuple | None = None, tracer=None, exporter=None):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.exporter = exporter
         self.attn_impl = _resolve_attn_impl(attn_impl)
         # fail fast at construction: resolve_kv_spec validates the spec
         # against the solver registry and raises naming the device-capable
@@ -100,13 +103,15 @@ class ContinuousBatchingEngine:
             max_queue=max_queue, eos_id=eos_id, record_logits=record_logits,
             speculate=speculate, draft=draft,
             metrics=self.metrics, outputs=self.outputs,
-            request_logits=self.request_logits)
+            request_logits=self.request_logits, tracer=self.tracer,
+            roofline_gauges=exporter is not None)
         # prefill worker inlined into the decode worker's pool: the handoff
         # payload is a no-op "splice" of already-resident block ids
         self.prefill = PrefillWorker(
             params, cfg, block_size=block_size, max_seq_len=max_seq_len,
             kv_spec=self.kv_spec, pool=self.worker,
-            record_logits=record_logits, metrics=self.metrics)
+            record_logits=record_logits, metrics=self.metrics,
+            tracer=self.tracer)
         self.block_size = block_size
         self.max_seq_len = self.worker.max_seq_len
         self.freeze_async = self.worker.freeze_async
@@ -162,7 +167,12 @@ class ContinuousBatchingEngine:
                 "speculative decoding serves the greedy (temperature=0) "
                 "verification path; submit sampled requests to a "
                 "non-speculative engine")
-        return self.worker.submit(req, now)
+        ok = self.worker.submit(req, now)
+        # no router here — the colocated scheduler's admission decision IS
+        # the routing decision, so it lands on the same "router" track
+        self.tracer.instant("router", "admit" if ok else "reject",
+                            rid=req.id)
+        return ok
 
     # ------------------------------------------------------------ run loop
 
@@ -195,7 +205,11 @@ class ContinuousBatchingEngine:
             # the previous iteration's decode) just filled, then this
             # iteration's decode step
             w.step(now_fn)
+            if self.exporter is not None:
+                self.exporter.maybe_emit(self.metrics)
         w.drain()
+        if self.exporter is not None:
+            self.exporter.maybe_emit(self.metrics, force=True)
         out = self.metrics.summary()
         # steady-state per-page ratio: what a fully frozen cache saves
         out["page_compression"] = w._pb["fp"] / w._pb["frozen"]
@@ -238,9 +252,12 @@ class DisaggEngine:
                  eos_id: int | None = None,
                  record_logits: bool = False, attn_impl: str = "auto",
                  freeze_async: bool = True, freeze_page_budget: int = 4,
-                 speculate: int = 0, draft: tuple | None = None):
+                 speculate: int = 0, draft: tuple | None = None,
+                 tracer=None, exporter=None):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
         assert prefill_workers >= 1 and decode_workers >= 1
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.exporter = exporter
         if migrate not in ("fp", "frozen"):
             raise ValueError(f"migrate must be 'fp' or 'frozen', got "
                              f"{migrate!r}")
@@ -276,15 +293,18 @@ class DisaggEngine:
             freeze_page_budget=freeze_page_budget, eos_id=eos_id,
             record_logits=record_logits, speculate=speculate, draft=draft,
             metrics=self.metrics,
-            outputs=self.outputs, request_logits=self.request_logits)
+            outputs=self.outputs, request_logits=self.request_logits,
+            tracer=self.tracer, roofline_gauges=exporter is not None)
             for i in range(decode_workers)]
         self.prefills = [PrefillWorker(
             params, cfg, worker_id=i, block_size=block_size,
             max_seq_len=max_seq_len, kv_spec=self.kv_spec, migrate=migrate,
             num_blocks=prefill_blocks, record_logits=record_logits,
-            metrics=self.metrics) for i in range(prefill_workers)]
+            metrics=self.metrics, tracer=self.tracer)
+            for i in range(prefill_workers)]
         self.router = DisaggRouter(max_queue=max_queue,
-                                   staging_depth=staging_depth)
+                                   staging_depth=staging_depth,
+                                   tracer=self.tracer)
         self.block_size = block_size
         self.max_seq_len = self.decode[0].max_seq_len
         self.freeze_async = self.decode[0].freeze_async
@@ -307,6 +327,8 @@ class DisaggEngine:
             # reject what no worker can ever hold — staging it would
             # head-of-line-block the router's queues forever
             self.router.rejected.append(req.id)
+            self.tracer.instant("router", "reject", rid=req.id,
+                                reason="never_fits")
             return False
         ok = self.router.submit(req)
         if ok:
@@ -359,6 +381,8 @@ class DisaggEngine:
                 if dw.has_work:
                     dw.step(now_fn)
                     progressed = progressed or bool(dw.sched.active)
+            if self.exporter is not None:
+                self.exporter.maybe_emit(self.metrics)
             if not progressed:
                 # only in-flight prefills to wait on: let the device work
                 time.sleep(poll_s / 4)
@@ -366,6 +390,8 @@ class DisaggEngine:
             assert not pw.busy
         for dw in self.decode:
             dw.drain()
+        if self.exporter is not None:
+            self.exporter.maybe_emit(self.metrics, force=True)
         return self._summary()
 
     def _summary(self) -> dict:

@@ -503,6 +503,12 @@ class PendingFreeze:
         self.keep &= ~np.isin(self.bids,
                               np.asarray(list(freed_ids), np.int32))
 
+    def kept_pages(self) -> list[int]:
+        """Distinct page ids an install will mark frozen — padding
+        duplicates collapsed, dropped pages excluded. Sorted so callers
+        (frozen-set updates, tracer span ends) iterate deterministically."""
+        return sorted({int(b) for b in self.bids[self.keep]})
+
 
 def dispatch_freeze(tree, block_ids, spec=None, *, num_values=None,
                     refit=True) -> PendingFreeze:

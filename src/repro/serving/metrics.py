@@ -8,6 +8,14 @@ disaggregation wins attribute correctly:
   prefill_compute = first token - prefill start
 
 TPOT = mean inter-token time over the remaining tokens.
+
+Aggregate cache/ITL series are streaming (``obs.stats`` gauges + log
+histograms) — O(1) memory however long the run — instead of the raw
+per-step lists this collector used to keep. Per-request state
+(``RequestTrace``, including its decode ``gaps``) stays exact: it is
+bounded by max_new_tokens and benches consume it directly. ``summary()``
+keys are unchanged; ``snapshot()`` is the live view the JSONL/Prometheus
+exporters poll mid-run.
 """
 from __future__ import annotations
 
@@ -15,9 +23,15 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.stats import Registry
 
-def percentile(xs, p: float) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else float("nan")
+
+def percentile(xs, p: float) -> float | None:
+    """None (key omitted upstream) instead of NaN on empty input — NaN is
+    not valid strict JSON and used to poison BENCH_*.json artifacts."""
+    if not len(xs):
+        return None
+    return float(np.percentile(np.asarray(xs, np.float64), p))
 
 
 @dataclasses.dataclass
@@ -61,8 +75,7 @@ class RequestTrace:
 class MetricsCollector:
     def __init__(self):
         self.traces: dict[int, RequestTrace] = {}
-        self.occupancy: list[float] = []        # allocated / total pages
-        self.cache_bytes: list[tuple[float, float]] = []  # (actual, fp-equiv)
+        self.stats = Registry()
         self.steps = 0
         # speculative decoding: drafted-token fate, counted per SEQUENCE
         # slice of a batched verify pass (spec_step is called once per
@@ -71,11 +84,19 @@ class MetricsCollector:
         self.spec_proposed = 0       # draft tokens offered for verification
         self.spec_accepted = 0       # draft tokens the target emitted
         self.spec_rollbacks = 0      # slices that rolled a suffix back
+        # last cache sample where the pool held anything (fp-equiv > 0):
+        # after the final eviction both sides are zero, so "final" keeps
+        # meaning "steady state before teardown"
+        self._cache_final: tuple[float, float] | None = None
+        self._completed = 0
+        self._completed_zero_token = 0
+        self._gen_tokens_done = 0
 
     # ----------------------------------------------------- request events
 
     def arrival(self, rid: int, t: float, prompt_len: int) -> None:
         self.traces[rid] = RequestTrace(arrival_t=t, prompt_len=prompt_len)
+        self.stats.counter("requests_arrived").inc()
 
     def prefill_start(self, rid: int, t: float) -> None:
         self.traces[rid].prefill_start_t = t
@@ -85,17 +106,28 @@ class MetricsCollector:
         tr.first_token_t = t
         tr.tokens = 1
         tr._last_t = t
+        self.stats.histogram("ttft_s").observe(t - tr.arrival_t)
 
     def token(self, rid: int, t: float | None = None) -> None:
         tr = self.traces[rid]
         tr.tokens += 1
+        self.stats.counter("tokens_generated").inc()
         if t is not None:
             if tr._last_t is not None:
-                tr.gaps.append(t - tr._last_t)
+                gap = t - tr._last_t
+                tr.gaps.append(gap)
+                self.stats.histogram("itl_s").observe(gap)
             tr._last_t = t
 
     def finish(self, rid: int, t: float) -> None:
-        self.traces[rid].finish_t = t
+        tr = self.traces[rid]
+        tr.finish_t = t
+        self._completed += 1
+        self._gen_tokens_done += tr.tokens
+        if tr.first_token_t is None:
+            # finished without emitting anything (shed/rejected after
+            # admission, or eos on first verify) — no latency to report
+            self._completed_zero_token += 1
 
     def spec_step(self, proposed: int, accepted: int,
                   rolled_back: bool) -> None:
@@ -114,15 +146,43 @@ class MetricsCollector:
     def sample_cache(self, occupancy: float, actual_bytes: float,
                      fp_bytes: float) -> None:
         self.steps += 1
-        self.occupancy.append(occupancy)
-        self.cache_bytes.append((actual_bytes, fp_bytes))
+        self.stats.gauge("cache_occupancy").set(occupancy)
+        self.stats.gauge("cache_bytes").set(actual_bytes)
+        self.stats.gauge("cache_bytes_fp").set(fp_bytes)
+        if fp_bytes > 0:
+            self.stats.gauge("cache_compression").set(fp_bytes / actual_bytes)
+            self._cache_final = (actual_bytes, fp_bytes)
 
     # ----------------------------------------------------- aggregation
 
+    def snapshot(self) -> dict:
+        """Live mid-run view for the exporters: running totals + every
+        streaming metric's snapshot. JSON-safe scalars only."""
+        out = {"completed": self._completed,
+               "completed_zero_token": self._completed_zero_token,
+               "gen_tokens": self._gen_tokens_done,
+               "steps": self.steps,
+               "in_flight": len(self.traces) - self._completed}
+        if self.spec_steps:
+            out.update(spec_steps=self.spec_steps,
+                       spec_proposed=self.spec_proposed,
+                       spec_accepted=self.spec_accepted,
+                       spec_rollbacks=self.spec_rollbacks)
+        out.update(self.stats.snapshot())
+        return out
+
     def summary(self) -> dict:
         done = [t for t in self.traces.values() if t.finish_t is not None]
+        # zero-token finishes have no first_token_t: excluding them from
+        # the latency population (instead of raising on ttft's None
+        # subtraction) keeps every key below well-defined
+        zero = [t for t in done if t.first_token_t is None]
+        done = [t for t in done if t.first_token_t is not None]
         if not done:
-            return {"completed": 0}
+            out = {"completed": 0}
+            if zero:
+                out["completed_zero_token"] = len(zero)
+            return out
         t0 = min(t.arrival_t for t in done)
         t1 = max(t.finish_t for t in done)
         gen = sum(t.tokens for t in done)
@@ -136,9 +196,12 @@ class MetricsCollector:
             "ttft_mean_s": float(np.mean(ttfts)),
             "ttft_p50_s": percentile(ttfts, 50),
             "ttft_p99_s": percentile(ttfts, 99),
-            "tpot_p50_s": percentile(tpots, 50),
-            "tpot_p99_s": percentile(tpots, 99),
         }
+        if zero:
+            out["completed_zero_token"] = len(zero)
+        if tpots:
+            out["tpot_p50_s"] = percentile(tpots, 50)
+            out["tpot_p99_s"] = percentile(tpots, 99)
         # TTFT decomposition: queue_wait (admission + routing) vs
         # prefill_compute — the pair disaggregation trades against
         waits = [t.queue_wait for t in done]
@@ -166,18 +229,15 @@ class MetricsCollector:
             out["spec_rollbacks"] = self.spec_rollbacks
             out["spec_acceptance_rate"] = (
                 self.spec_accepted / max(self.spec_proposed, 1))
-        if self.occupancy:
-            out["cache_occupancy_mean"] = float(np.mean(self.occupancy))
-            out["cache_occupancy_max"] = float(np.max(self.occupancy))
-        if self.cache_bytes:
-            act, fp = np.asarray(self.cache_bytes).T
-            nz = np.flatnonzero(fp > 0)
-            if nz.size:
-                # "final" = last step the cache held anything (after the last
-                # eviction both sides are zero)
-                j = nz[-1]
-                out["cache_bytes_final"] = float(act[j])
-                out["cache_bytes_fp_final"] = float(fp[j])
-                out["cache_compression_mean"] = float(np.mean(fp[nz] / act[nz]))
-                out["cache_compression_final"] = float(fp[j] / act[j])
+        if "cache_occupancy" in self.stats:
+            occ = self.stats.gauge("cache_occupancy")
+            out["cache_occupancy_mean"] = occ.mean
+            out["cache_occupancy_max"] = occ.vmax
+        if self._cache_final is not None:
+            act, fp = self._cache_final
+            comp = self.stats.gauge("cache_compression")
+            out["cache_bytes_final"] = float(act)
+            out["cache_bytes_fp_final"] = float(fp)
+            out["cache_compression_mean"] = comp.mean
+            out["cache_compression_final"] = float(fp / act)
         return out

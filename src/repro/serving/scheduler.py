@@ -22,6 +22,8 @@ from collections import deque
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 
 @dataclasses.dataclass(frozen=True)
 class Request:
@@ -191,10 +193,11 @@ class DisaggRouter:
     """
 
     def __init__(self, *, max_queue: int = 256,
-                 staging_depth: int | None = None):
+                 staging_depth: int | None = None, tracer=None):
         assert staging_depth is None or staging_depth >= 1
         self.max_queue = max_queue
         self.staging_depth = staging_depth
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.waiting: deque[Request] = deque()
         self.staged: deque = deque()           # FinishedPrefill artifacts
         self.rejected: list[int] = []
@@ -203,8 +206,12 @@ class DisaggRouter:
         """Queue-depth admission control at the global door (429 = False)."""
         if len(self.waiting) >= self.max_queue:
             self.rejected.append(req.id)
+            self.tracer.instant("router", "reject", rid=req.id,
+                                reason="queue_full")
             return False
         self.waiting.append(req)
+        self.tracer.instant("router", "admit", rid=req.id,
+                            queued=len(self.waiting))
         return True
 
     def route_prefill(self, workers) -> list:
@@ -229,12 +236,20 @@ class DisaggRouter:
             req = self.waiting.popleft()
             ranked[0].submit(req)
             inflight += 1
+            self.tracer.instant("router", "route_prefill", rid=req.id,
+                                worker=ranked[0].worker_id,
+                                load=ranked[0].load)
             out.append((ranked[0], req))
         return out
 
     def stage(self, finished) -> None:
         """Park a finished prefill until a decode worker can take it."""
         self.staged.append(finished)
+        # getattr: the artifact is duck-typed (tests stage bare fakes)
+        self.tracer.instant("router", "stage", rid=finished.req.id,
+                            prefill_worker=getattr(finished, "worker_id",
+                                                   None),
+                            staged=len(self.staged))
 
     def route_decode(self, workers, place=None) -> list:
         """Offer staged prefills FCFS to decode workers.
@@ -251,6 +266,9 @@ class DisaggRouter:
             if not ranked:
                 break
             fin = self.staged.popleft()
+            self.tracer.instant("router", "route_decode", rid=fin.req.id,
+                                worker=ranked[0].worker_id,
+                                free_slots=ranked[0].free_slots)
             if place is not None:
                 place(ranked[0], fin)
             out.append((ranked[0], fin))

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.obs.trace import NULL_TRACER
 
 from .kv_cache import (BlockAllocator, init_paged_cache, merge_pools,
                        with_tables)
@@ -79,8 +80,11 @@ class DraftWorker:
     page pool/allocator/table, fp cache only (draft KV is throwaway)."""
 
     def __init__(self, params, cfg, *, max_slots: int, block_size: int,
-                 max_blocks: int, num_blocks: int | None = None):
+                 max_blocks: int, num_blocks: int | None = None,
+                 worker_id: int = 0, tracer=None):
         self.params, self.cfg = params, cfg
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._trk = f"draft/w{worker_id}"
         self.block_size = block_size
         self.max_blocks = max_blocks
         self.num_blocks = (num_blocks if num_blocks is not None
@@ -102,6 +106,7 @@ class DraftWorker:
         """Prefill the prompt on the draft model into this slot's pages
         (same worst-case block count as the target side, so the verify
         window's optimistic writes always fit here too)."""
+        t0 = self.tracer.now()
         blocks = self.alloc.alloc(n_blocks)
         self.blocks[slot] = blocks
         self.table[slot] = 0
@@ -116,6 +121,8 @@ class DraftWorker:
         self.tree = merge_pools(self.tree, new)
         self.lens[slot] = P
         self.plen[slot] = P
+        self.tracer.complete(self._trk, "draft_prefill", t0, slot=slot,
+                             prompt_len=P)
 
     def release(self, slot: int) -> None:
         self.alloc.free(self.blocks[slot])
@@ -155,6 +162,7 @@ class DraftWorker:
         scratch — contiguous writes at ``lens`` overwrite them before
         ``lens`` ever covers them.
         """
+        t0 = self.tracer.now()
         B = self.table.shape[0]
         Wc = 2
         toks = np.zeros((B, Wc), np.int32)
@@ -178,4 +186,6 @@ class DraftWorker:
             for i in active:
                 out[i].append(int(preds[i, 0]))
                 self.lens[i] += 1
+        self.tracer.complete(self._trk, "draft_propose", t0, k=k,
+                             active=len(active))
         return out

@@ -41,6 +41,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from .kv_cache import (PagedKVCache, PendingFreeze, dispatch_freeze,
                        install_freeze, map_layers)
 
@@ -149,7 +151,7 @@ def _take_pages(leaf: PagedKVCache, bids) -> jnp.ndarray:
 
 
 def extract_pages(tree, blocks, n_tokens: int, *, block_size: int,
-                  mode: str, spec=None) -> PagePayload:
+                  mode: str, spec=None, tracer=NULL_TRACER) -> PagePayload:
     """Pull one sequence's first ``n_tokens`` of KV out of ``tree``.
 
     ``blocks`` is the sequence's block-table prefix (sequence page order).
@@ -158,6 +160,7 @@ def extract_pages(tree, blocks, n_tokens: int, *, block_size: int,
     ``to_host()`` is where the transfer (and any waiting) happens.
     """
     assert mode in ("fp", "frozen"), mode
+    t0 = tracer.now()
     n_full, tail_rows = divmod(n_tokens, block_size)
     used = blocks[:n_full + (1 if tail_rows else 0)]
     leaves = collect_leaves(tree)
@@ -204,15 +207,20 @@ def extract_pages(tree, blocks, n_tokens: int, *, block_size: int,
         tail_bid = [used[n_full]]
         payload.tail = [_take_pages(leaf, tail_bid)[:, ..., 0, :tail_rows, :, :]
                         for leaf in leaves]
+    tracer.complete("transfer", "extract", t0, mode=mode,
+                    pages=payload.n_pages, n_tokens=n_tokens,
+                    fp_equiv_bytes=payload.fp_equiv_bytes)
     return payload
 
 
-def splice_payload(tree, payload: PagePayload, new_blocks):
+def splice_payload(tree, payload: PagePayload, new_blocks, *,
+                   tracer=NULL_TRACER):
     """Land a staged payload in the destination pool at ``new_blocks``
     (sequence page order, already allocated by the caller). Returns the
     updated tree; the caller installs the block-table row."""
     if payload.mode == "splice":
         return tree          # pages already live in this pool
+    t0 = tracer.now()
     payload.to_host()
     leaves = collect_leaves(tree)
     new_full = np.asarray(new_blocks[:payload.n_full], np.int32)
@@ -243,4 +251,7 @@ def splice_payload(tree, payload: PagePayload, new_blocks):
             new_full, [(jnp.asarray(c), jnp.asarray(cb))
                        for c, cb in payload.frozen])
         tree = install_freeze(tree, pending)
+    tracer.complete("transfer", "splice", t0, mode=payload.mode,
+                    pages=payload.n_pages, bytes=payload.nbytes,
+                    fp_equiv_bytes=payload.fp_equiv_bytes)
     return tree

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.obs.export import modeled_decode_hbm_bytes
+from repro.obs.trace import NULL_TRACER
 
 from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
                        init_paged_cache, install_freeze, merge_pools,
@@ -104,10 +106,19 @@ class DecodeWorker:
                  freeze_page_budget: int = 4, max_queue: int = 256,
                  eos_id: int | None = None, record_logits: bool = False,
                  speculate: int = 0, draft: tuple | None = None,
-                 metrics=None, outputs=None, request_logits=None):
+                 metrics=None, outputs=None, request_logits=None,
+                 tracer=None, roofline_gauges: bool = False):
         from .metrics import MetricsCollector
 
         self.worker_id = worker_id
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # compute per-step modeled HBM gauges even when tracing is off
+        # (a metrics exporter wants them); pure-NullTracer runs skip the
+        # host walk entirely
+        self.roofline_gauges = roofline_gauges
+        self._trk_decode = f"decode/w{worker_id}"
+        self._trk_freeze = f"freeze/w{worker_id}"
+        self._trk_spec = f"spec/w{worker_id}"
         self.params, self.cfg = params, cfg
         self.kv_spec = kv_spec
         self.attn_impl = attn_impl
@@ -153,7 +164,8 @@ class DecodeWorker:
             lookahead=speculate)
         self.draft = None if not speculate else DraftWorker(
             draft[0], draft[1], max_slots=max_slots, block_size=block_size,
-            max_blocks=self.max_blocks)
+            max_blocks=self.max_blocks, worker_id=worker_id,
+            tracer=self.tracer)
         self.metrics = metrics if metrics is not None else MetricsCollector()
         self.table = np.zeros((max_slots, self.max_blocks), np.int32)
         self.lens = np.zeros((max_slots,), np.int32)
@@ -180,6 +192,13 @@ class DecodeWorker:
         self._freeze_bids: list[int] = []   # queued for the next flush
         self._deferred_seen = 0    # queue suffix already counted deferred
         self._frozen_pages: set[int] = set()   # installed (codes serving)
+        # freeze-lifecycle async spans: page id -> open span id. A span
+        # opens when a bid is queued and MUST end in exactly one terminal
+        # state — installed / dropped (seq finished first) / rolled_back
+        # (speculative suffix rejected) — which the obs property test
+        # checks against the dispatch/install counters.
+        self._page_spans: dict[int, int] = {}
+        self._span_seq = 0
 
         # module-level jit keyed on the (hashable) config: workers of the
         # same geometry share compiles instead of retracing per instance
@@ -235,7 +254,8 @@ class DecodeWorker:
             blocks = list(payload.blocks)
         else:
             blocks = self.alloc.alloc(self.sched.blocks_for(req))
-            self.tree = splice_payload(self.tree, payload, blocks)
+            self.tree = splice_payload(self.tree, payload, blocks,
+                                       tracer=self.tracer)
             self.counters["migrated_seqs"] += 1
             self.counters["migrated_pages"] += payload.n_pages
             self.counters["migrate_bytes"] += payload.nbytes
@@ -291,6 +311,8 @@ class DecodeWorker:
         active = self.sched.active_slots()
         if not active:
             return
+        tr = self.tracer
+        t_step = tr.now()
         self.counters["decode_steps"] += 1
         self.counters["seq_decode_steps"] += len(active)
         self._poll_freezes()
@@ -303,15 +325,20 @@ class DecodeWorker:
         mb_used = max(1, -(-need // self.block_size))
         self.counters["max_gather_blocks"] = max(
             self.counters["max_gather_blocks"], mb_used)
+        t0 = tr.now()
         tree = with_tables(self.tree, self.table[:, :mb_used], self.lens)
         lens = jnp.asarray(self.lens)
         logits, new = self._decode_fn(self.params, jnp.asarray(toks), tree,
                                       lens)
         self.tree = merge_pools(self.tree, new)
+        tr.complete(self._trk_decode, "dispatch", t0, blocks=mb_used)
+        t0 = tr.now()
         nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
         sampling = any(self.slots[i].temperature > 0.0 for i in active)
         rows = (np.asarray(logits[:, -1])
                 if self.record_logits or sampling else None)
+        tr.complete(self._trk_decode, "sync", t0)
+        t0 = tr.now()
         now = now_fn()
         finished = []
         for i in active:
@@ -332,6 +359,9 @@ class DecodeWorker:
                 finished.append(st)
         for st in finished:
             self._finish(st, now)
+        tr.complete(self._trk_decode, "commit", t0, finished=len(finished))
+        tr.complete(self._trk_decode, "decode_step", t_step,
+                    step=self.counters["decode_steps"], active=len(active))
 
     # ------------------------------------------------------- speculative
 
@@ -354,12 +384,16 @@ class DecodeWorker:
         active = self.sched.active_slots()
         if not active:
             return
+        tr = self.tracer
+        t_step = tr.now()
         k = self.speculate
         W = k + 1
         self.counters["decode_steps"] += 1
         self.counters["seq_decode_steps"] += len(active)
         self._poll_freezes()
+        t0 = tr.now()
         proposals = self.draft.propose(active, self.slots, k)
+        tr.complete(self._trk_spec, "propose", t0, k=k, active=len(active))
         toks = np.zeros((len(self.slots), W), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].last_token
@@ -369,11 +403,14 @@ class DecodeWorker:
         mb_used = max(1, -(-need // self.block_size))
         self.counters["max_gather_blocks"] = max(
             self.counters["max_gather_blocks"], mb_used)
+        t0 = tr.now()
         tree = with_tables(self.tree, self.table[:, :mb_used], self.lens)
         logits, new = self._verify_fn(self.params, jnp.asarray(toks), tree,
                                       jnp.asarray(self.lens))
         self.tree = merge_pools(self.tree, new)
         preds = np.asarray(jnp.argmax(logits, -1))            # (B, W)
+        tr.complete(self._trk_spec, "verify", t0, window=W,
+                    active=len(active), blocks=mb_used)
         sampling = any(self.slots[i].temperature > 0.0 for i in active)
         assert not sampling, (
             "speculative decoding serves the greedy verification path; "
@@ -404,6 +441,11 @@ class DecodeWorker:
                 emitted = emitted[:emitted.index(self.eos_id) + 1]
             a = len(emitted)
             self.metrics.spec_step(k, min(n_acc, a), a < W)
+            tr.instant(self._trk_spec, "accept", slot=i, rid=st.req.id,
+                       proposed=k, accepted=min(n_acc, a), emitted=a)
+            if a < W:
+                tr.instant(self._trk_spec, "rollback", slot=i,
+                           rid=st.req.id, to_len=L + a)
             self._rollback_slot(i, L + a)
             st.length = L + a
             st.generated += a
@@ -418,6 +460,9 @@ class DecodeWorker:
                 finished.append(st)
         for st in finished:
             self._finish(st, now)
+        tr.complete(self._trk_decode, "decode_step", t_step,
+                    step=self.counters["decode_steps"], active=len(active),
+                    window=W)
 
     def _rollback_slot(self, slot: int, new_len: int) -> None:
         """Shrink a slot to its accepted watermark ``new_len``: un-queue
@@ -431,6 +476,13 @@ class DecodeWorker:
         if s.frozen_upto > full:
             stale = {int(self.table[slot, j])
                      for j in range(full, s.frozen_upto)}
+            tr = self.tracer
+            if tr.enabled:
+                for b in sorted(stale):
+                    sid = self._page_spans.pop(b, None)
+                    if sid is not None:
+                        tr.async_end(self._trk_freeze, "page_freeze", sid,
+                                     state="rolled_back", page=b)
             self._freeze_bids = [b for b in self._freeze_bids
                                  if b not in stale]
             self._deferred_seen = min(self._deferred_seen,
@@ -451,11 +503,21 @@ class DecodeWorker:
                 jax.block_until_ready(pending.markers())
             if pending.is_ready():
                 self.tree = install_freeze(self.tree, pending)
-                self._frozen_pages.update(
-                    int(b) for b in pending.bids[pending.keep])
+                kept = pending.kept_pages()
+                self._frozen_pages.update(kept)
                 self.counters["freeze_installs"] += 1
                 self.counters["freeze_overlap_steps"] += (
                     self.counters["decode_steps"] - step0)
+                tr = self.tracer
+                if tr.enabled:
+                    tr.instant(self._trk_freeze, "install", pages=len(kept),
+                               wait_steps=self.counters["decode_steps"]
+                               - step0)
+                    for b in kept:
+                        sid = self._page_spans.pop(b, None)
+                        if sid is not None:
+                            tr.async_end(self._trk_freeze, "page_freeze",
+                                         sid, state="installed", page=b)
             else:
                 self.counters["freeze_inflight_steps"] += 1
                 still.append((step0, pending))
@@ -471,8 +533,15 @@ class DecodeWorker:
         s = self.slots[slot]
         full = int(self.lens[slot]) // self.block_size
         if full > s.frozen_upto:
-            self._freeze_bids.extend(int(self.table[slot, j])
-                                     for j in range(s.frozen_upto, full))
+            tr = self.tracer
+            for j in range(s.frozen_upto, full):
+                b = int(self.table[slot, j])
+                self._freeze_bids.append(b)
+                if tr.enabled:
+                    self._span_seq += 1
+                    self._page_spans[b] = self._span_seq
+                    tr.async_begin(self._trk_freeze, "page_freeze",
+                                   self._span_seq, page=b, slot=slot)
             s.frozen_upto = full
 
     def _flush_freezes(self) -> None:
@@ -487,9 +556,17 @@ class DecodeWorker:
         ``freeze_deferred_pages`` counts how often the valve engaged."""
         if not self._freeze_bids:
             return
+        tr = self.tracer
+        t0 = tr.now()
         take = min(len(self._freeze_bids), self.freeze_page_budget)
         bids, self._freeze_bids = (self._freeze_bids[:take],
                                    self._freeze_bids[take:])
+        if tr.enabled:
+            for b in bids:
+                sid = self._page_spans.get(b)
+                if sid is not None:
+                    tr.async_instant(self._trk_freeze, "page_freeze", sid,
+                                     state="dispatched")
         # count each page's deferral once: the flush consumed ``take``
         # pages off the queue front (the oldest, hence any already-counted
         # ones first), so shrink the counted watermark by that before
@@ -518,7 +595,16 @@ class DecodeWorker:
                                       stats=self.counters)
             self._frozen_pages.update(bids)
             self.counters["freeze_installs"] += 1
+            if tr.enabled:
+                # synchronous install: the lifecycle terminates here
+                for b in sorted(set(bids)):
+                    sid = self._page_spans.pop(b, None)
+                    if sid is not None:
+                        tr.async_end(self._trk_freeze, "page_freeze", sid,
+                                     state="installed", page=b)
         self.counters["freeze_dispatches"] += 1
+        tr.complete(self._trk_freeze, "flush", t0, pages=take,
+                    mode="async" if self.freeze_async else "sync")
 
     # ------------------------------------------------------------ teardown
 
@@ -532,6 +618,15 @@ class DecodeWorker:
         # forget them (queued or dispatched) so a stale install can't mark
         # a reused page frozen
         freed = set(s.blocks)
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant(self._trk_decode, "finish", rid=st.req.id,
+                       tokens=len(s.out))
+            for b in sorted(freed):
+                sid = self._page_spans.pop(b, None)
+                if sid is not None:
+                    tr.async_end(self._trk_freeze, "page_freeze", sid,
+                                 state="dropped", page=b)
         self._freeze_bids = [b for b in self._freeze_bids if b not in freed]
         self._deferred_seen = min(self._deferred_seen, len(self._freeze_bids))
         self._frozen_pages -= freed
@@ -561,8 +656,21 @@ class DecodeWorker:
         frozen = len(self._frozen_pages)
         actual = (frozen * self._pb["frozen"]
                   + (allocated - frozen) * self._pb["fp"])
-        self.metrics.sample_cache(allocated / (self.num_blocks - 1),
-                                  actual, allocated * self._pb["fp"])
+        occ = allocated / (self.num_blocks - 1)
+        self.metrics.sample_cache(occ, actual, allocated * self._pb["fp"])
+        tr = self.tracer
+        if tr.enabled or self.roofline_gauges:
+            tr.counter(self._trk_decode, "cache", occupancy=round(occ, 6),
+                       frozen_pages=frozen)
+            m = modeled_decode_hbm_bytes(self)
+            if m is not None:
+                self.metrics.stats.gauge("hbm_bytes_per_token").set(
+                    m["hbm_bytes_per_token"])
+                self.metrics.stats.gauge("t_memory_s").set(m["t_memory_s"])
+                tr.counter(self._trk_decode, "roofline",
+                           hbm_bytes_per_token=round(
+                               m["hbm_bytes_per_token"], 3),
+                           t_memory_us=round(m["t_memory_s"] * 1e6, 6))
 
 
 class PrefillWorker:
@@ -583,11 +691,13 @@ class PrefillWorker:
                  kv_spec=None, migrate: str = "fp",
                  num_blocks: int | None = None, pool: DecodeWorker | None = None,
                  record_logits: bool = False, metrics=None,
-                 max_queue: int = 64):
+                 max_queue: int = 64, tracer=None):
         from .metrics import MetricsCollector
 
         assert migrate in ("fp", "frozen"), migrate
         self.worker_id = worker_id
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._trk = f"prefill/w{worker_id}"
         self.params, self.cfg = params, cfg
         self.block_size = block_size
         self.kv_spec = kv_spec
@@ -636,8 +746,14 @@ class PrefillWorker:
     def _dispatch(self, req: Request, now_fn) -> None:
         """Launch one prompt's prefill (and, when migrating frozen, the
         page-freeze solve chained behind it); returns without waiting."""
+        tr = self.tracer
+        t0 = tr.now()
         self.metrics.prefill_start(req.id, now_fn())
         P = req.prompt_len
+        # async span across dispatch -> harvest: the device-side lifetime
+        # of this prompt's prefill (and any chained freeze solve)
+        tr.async_begin(self._trk, "prefill", req.id, rid=req.id,
+                       prompt_len=P)
         ppad = -(-P // self.block_size) * self.block_size
         nblk = ppad // self.block_size
         if self.pool is not None:
@@ -665,12 +781,17 @@ class PrefillWorker:
             self.tree = merged
             payload = extract_pages(merged, blocks, P,
                                     block_size=self.block_size,
-                                    mode=self.migrate, spec=self.kv_spec)
+                                    mode=self.migrate, spec=self.kv_spec,
+                                    tracer=tr)
         self._inflight = (req, blocks, logits, payload)
+        tr.complete(self._trk, "dispatch", t0, rid=req.id, prompt_len=P,
+                    pages=nblk)
 
     def _harvest(self, now_fn) -> FinishedPrefill:
         """Materialize the finished prefill: sample the first token, stage
         the payload to host, release this worker's blocks."""
+        tr = self.tracer
+        t0 = tr.now()
         req, blocks, logits, payload = self._inflight
         self._inflight = None
         last = np.asarray(logits[0, req.prompt_len - 1])
@@ -679,10 +800,20 @@ class PrefillWorker:
         tok = sample_token(last, temperature=req.temperature,
                            top_k=req.top_k, rng=rng)
         self.metrics.first_token(req.id, now)
-        payload.to_host()
+        if payload.mode == "splice":
+            payload.to_host()
+        else:
+            t_host = tr.now()
+            payload.to_host()
+            tr.complete("transfer", "to_host", t_host, rid=req.id,
+                        mode=payload.mode, bytes=payload.nbytes,
+                        fp_equiv_bytes=payload.fp_equiv_bytes,
+                        pages=payload.n_pages)
         if self.pool is None:
             self.alloc.free(blocks)           # pages left as a host payload
         self.counters["prefills"] += 1
+        tr.complete(self._trk, "harvest", t0, rid=req.id)
+        tr.async_end(self._trk, "prefill", req.id, rid=req.id)
         return FinishedPrefill(
             req=req, first_token=tok, payload=payload, rng=rng,
             last_logits=last if self.record_logits else None,
