@@ -1,0 +1,235 @@
+"""Overload-survival benchmark: graceful degradation under 2-4x KV-pool
+oversubscription -> BENCH_overload.json.
+
+The same mixed-priority request set (alternating ``latency`` /
+``best_effort``, staggered arrivals) is served at shrinking page pools:
+
+  1x   enough pages for every slot — the uncontended reference whose
+       outputs are the greedy-token golden for every other run.
+  2x/4x   the pool holds 1/2 resp. 1/4 of slot demand. Each factor runs
+       two arms at identical compute:
+
+       fcfs       plain admission, no preemption, no host tier — the
+           cliff: latency-tier requests queue behind whatever arrived
+           first and inherit the full contention tail.
+       survival   ``preempt=True`` + ``offload_pages=True`` +
+           ``admission="slo"``: best_effort victims demote to the host
+           tier as packed codes+codebooks, latency heads take their
+           pages, victims restore (bit-exact) when capacity returns.
+
+Claims measured per row: per-tier itl_p99 / ttft_p99 (the latency tier
+must degrade gracefully while best_effort absorbs the contention),
+offload_compression (host-tier bytes vs demoting at fp width), and the
+preempt/offload/restore counters. Asserted, not just reported:
+
+  - zero greedy-token divergence: every completed request's tokens equal
+    the uncontended golden's, in every arm (restore is bit-exact);
+  - counters reconcile against the Perfetto trace on the harshest run:
+    page_offload begin == end == offloaded_pages == restored_pages, all
+    ends terminal-state "restored", preempt/restore instants match;
+  - both engine compositions survive: the colocated grid above plus a
+    disaggregated (1P/1D, migrate="frozen") survival run at 2x.
+
+    PYTHONPATH=src python -m benchmarks.run overload
+    PYTHONPATH=src python -m benchmarks.bench_overload --factors 2,4
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from .common import bench_json, emit
+
+ARCH = "qwen3_0_6b"
+KV = "kmeans_ls@16"
+
+
+def _requests(cfg, *, n, prompt_len, gen, stagger, seed):
+    """best_effort first (and generating 2x longer, so they still hold
+    pages mid-decode), latency behind, arrivals ``stagger`` apart: the
+    empty pool admits the best_effort cohort (occupancy is low), then the
+    latency cohort lands on a full pool — the exact shape where fcfs
+    queues the latency tier behind FCFS order while survival preempts
+    best_effort victims to the host tier."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(id=i,
+                    prompt=tuple(int(x) for x in
+                                 rng.integers(0, cfg.vocab, prompt_len)),
+                    max_new_tokens=gen * 2 if i < n // 2 else gen,
+                    arrival_time=i * stagger,
+                    priority="best_effort" if i < n // 2 else "latency")
+            for i in range(n)]
+
+
+def _tier_tails(eng, requests):
+    """Per-priority itl_p99 / ttft_p99 over the completed population."""
+    out = {}
+    pri = {r.id: r.priority for r in requests}
+    for tier in ("latency", "best_effort"):
+        done = [t for rid, t in eng.metrics.traces.items()
+                if pri[rid] == tier and t.finish_t is not None
+                and t.first_token_t is not None]
+        gaps = [g for t in done for g in t.gaps]
+        out[f"{tier}_completed"] = len(done)
+        out[f"{tier}_itl_p99_s"] = (
+            float(np.percentile(gaps, 99)) if gaps else None)
+        out[f"{tier}_ttft_p99_s"] = (
+            float(np.percentile([t.ttft for t in done], 99))
+            if done else None)
+    return out
+
+
+def _assert_identical(outputs, golden, label):
+    """Every COMPLETED request must match the uncontended trace exactly
+    (shed requests finish zero-token and never enter ``outputs``)."""
+    for rid, toks in outputs.items():
+        assert toks == golden[rid], (
+            f"{label}: request {rid} diverged from the uncontended golden")
+
+
+def run(factors=(2, 4), n=8, prompt_len=32, gen=12, max_slots=4,
+        block_size=16, stagger=0.01, seed=0) -> None:
+    import jax
+
+    from repro import models
+    from repro.configs import get_reduced_config
+    from repro.obs import Tracer, count_events
+    from repro.serving import ContinuousBatchingEngine, DisaggEngine
+
+    cfg = get_reduced_config(ARCH)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    bpr = -(-(prompt_len + 2 * gen) // block_size)   # best_effort length
+    slot_demand = max_slots * bpr
+    geometry = dict(max_slots=max_slots, block_size=block_size,
+                    max_seq_len=bpr * block_size, kv_quant=KV,
+                    freeze_async=False)
+    requests = _requests(cfg, n=n, prompt_len=prompt_len, gen=gen,
+                         stagger=stagger, seed=seed)
+
+    def colocated(num_blocks, tracer=None, **overload_kw):
+        kw = dict(geometry)
+        if tracer is not None:
+            kw["tracer"] = tracer
+        return ContinuousBatchingEngine(params, cfg, num_blocks=num_blocks,
+                                        **overload_kw, **kw)
+
+    # --- 1x golden: uncontended, overload machinery off -----------------
+    warm = colocated(slot_demand + 1)
+    rng = np.random.default_rng(123)
+    for burst in (max_slots, 2, 1):
+        warm.generate([rng.integers(0, cfg.vocab, prompt_len).tolist()
+                       for _ in range(burst)], max_new_tokens=gen * 2)
+    golden_eng = colocated(slot_demand + 1)
+    s = golden_eng.run(list(requests))
+    golden = dict(golden_eng.outputs)
+    assert len(golden) == n
+    s.update(_tier_tails(golden_eng, requests))
+    s.update(scenario="colocated", arm="golden", oversub=1,
+             num_blocks=slot_demand + 1, num_requests=n,
+             prompt_len=prompt_len, gen=gen)
+    results = [s]
+    # an achievable-but-tight SLO anchored on the uncontended tail: under
+    # contention the windowed p99 blows past it and best_effort sheds
+    itl_slo_s = 8.0 * max(s["latency_itl_p99_s"], 1e-4)
+
+    # --- 2x/4x: fcfs cliff vs survival ----------------------------------
+    for factor in factors:
+        num_blocks = max(bpr + 1, slot_demand // factor) + 1
+        for arm in ("fcfs", "survival"):
+            tracer = Tracer() if (arm, factor) == ("survival", max(factors)) \
+                else None
+            kw = {} if arm == "fcfs" else dict(
+                offload_pages=True, preempt=True, admission="slo",
+                itl_slo_s=itl_slo_s)
+            eng = colocated(num_blocks, tracer=tracer, **kw)
+            s = eng.run(list(requests))
+            _assert_identical(eng.outputs, golden, f"{arm}@{factor}x")
+            s.update(_tier_tails(eng, requests))
+            s.update(scenario="colocated", arm=arm, oversub=factor,
+                     num_blocks=num_blocks, num_requests=n,
+                     prompt_len=prompt_len, gen=gen,
+                     itl_slo_s=None if arm == "fcfs" else itl_slo_s)
+            results.append(s)
+            lat = s["latency_itl_p99_s"]
+            emit(f"overload/{arm}/{factor}x",
+                 (lat or 0.0) * 1e6,
+                 f"lat_ttft_p99_ms={(s['latency_ttft_p99_s'] or 0)*1e3:.0f};"
+                 f"be_done={s['best_effort_completed']};"
+                 f"preempt={s.get('preemptions', 0)};"
+                 f"shed={s.get('shed_slo', 0)};"
+                 f"compress={s.get('offload_compression', 0.0):.2f}x")
+            if tracer is not None:
+                # counters must reconcile against the trace exactly
+                b = count_events(tracer.events, name="page_offload", ph="b")
+                e = count_events(tracer.events, name="page_offload", ph="e")
+                assert b == e == s["offloaded_pages"] == s["restored_pages"]
+                ends = [ev["args"]["state"] for ev in tracer.events
+                        if ev.get("name") == "page_offload"
+                        and ev["ph"] == "e"]
+                assert all(st == "restored" for st in ends)
+                assert count_events(tracer.events, name="preempt",
+                                    ph="i") == s["preemptions"]
+                assert count_events(tracer.events, name="restore",
+                                    ph="i") == s["restored_seqs"]
+                results.append({
+                    "scenario": "span_reconcile", "oversub": factor,
+                    "page_offload_begins": b, "page_offload_ends": e,
+                    "offloaded_pages": s["offloaded_pages"],
+                    "restored_pages": s["restored_pages"],
+                    "terminal_states_restored": True})
+
+    # --- disagg composition survives the same squeeze at 2x -------------
+    dkw = dict(prefill_workers=1, decode_workers=1, migrate="frozen",
+               **geometry)
+    warm = DisaggEngine(params, cfg, **dkw)
+    warm.generate([rng.integers(0, cfg.vocab, prompt_len).tolist()
+                   for _ in range(2)], max_new_tokens=gen * 2)
+    dg = DisaggEngine(params, cfg, **dkw)
+    dg.run(list(requests))
+    dgold = dict(dg.outputs)
+    eng = DisaggEngine(params, cfg, num_blocks=slot_demand // 2 + 1,
+                       offload_pages=True, preempt=True, admission="slo",
+                       itl_slo_s=itl_slo_s, **dkw)
+    s = eng.run(list(requests))
+    _assert_identical(eng.outputs, dgold, "disagg-survival@2x")
+    s.update(_tier_tails(eng, requests))
+    s.update(scenario="disagg", arm="survival", oversub=2,
+             num_blocks=slot_demand // 2 + 1, num_requests=n,
+             prompt_len=prompt_len, gen=gen, itl_slo_s=itl_slo_s)
+    results.append(s)
+    emit("overload/disagg_survival/2x",
+         (s["latency_itl_p99_s"] or 0.0) * 1e6,
+         f"preempt={s.get('preemptions', 0)};"
+         f"offload_pages={s.get('offloaded_pages', 0)};"
+         f"compress={s.get('offload_compression', 0.0):.2f}x")
+
+    by = {(r["scenario"], r.get("arm"), r["oversub"]): r
+          for r in results if r.get("arm")}
+    g1 = by[("colocated", "golden", 1)]["latency_itl_p99_s"]
+    print("# overload: latency-tier itl_p99 "
+          + " ".join(
+              f"{f}x fcfs={by[('colocated', 'fcfs', f)]['latency_itl_p99_s']*1e3:.1f}ms"
+              f"/survival={by[('colocated', 'survival', f)]['latency_itl_p99_s']*1e3:.1f}ms"
+              for f in factors)
+          + f" (1x golden {g1*1e3:.1f}ms); zero token divergence")
+    bench_json("overload", results,
+               meta={"arch": ARCH, "reduced": True, "kv": KV,
+                     "max_slots": max_slots, "block_size": block_size,
+                     "stagger_s": stagger, "itl_slo_s": itl_slo_s})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--factors", default="2,4")
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    args = ap.parse_args()
+    run(factors=tuple(int(f) for f in args.factors.split(",")),
+        n=args.num_requests, prompt_len=args.prompt_len, gen=args.gen,
+        max_slots=args.max_slots, block_size=args.block_size)

@@ -8,7 +8,7 @@ import time
 
 SUITES = ["nn_weights", "l1l2", "alpha_dist", "image", "synthetic",
           "scaling", "kernels", "roofline", "paged_attention", "serving",
-          "disagg_serving", "spec_decode", "quant_api"]
+          "disagg_serving", "spec_decode", "quant_api", "overload"]
 
 
 def main() -> None:

@@ -100,6 +100,32 @@ observability (continuous + disagg engines):
         final snapshot lands next to it at PATH + ".prom".
   --metrics-interval S  snapshot cadence in seconds (default 1.0).
 
+overload survival (continuous + disagg engines):
+  --offload-pages       demote preemption victims' frozen KV pages to a
+        host-memory tier as packed codes + codebooks (~7x smaller than
+        fp rows; bit-exact on restore). Victims resume greedy-token
+        identical — restore splices the exact pages back.
+  --preempt             when a latency-tier request is blocked on pages,
+        evict the coldest (LRU by last-attended step) best_effort
+        sequence at a step boundary; a cost model picks restore (host
+        tier) vs recompute (re-prefill prompt + emitted tokens) and the
+        scheduler re-admits preempted work ahead of the FCFS queue.
+  --admission slo|fcfs  "slo" sheds or defers best_effort arrivals when
+        the windowed itl_p99 (--itl-slo) is breached or occupancy is
+        critical, protecting the latency tier; deferred requests retry
+        under hysteresis. "fcfs" (default) admits in arrival order.
+  --itl-slo S           inter-token p99 target in seconds for
+        --admission slo (unset: occupancy-only shedding).
+  --priority latency|best_effort   tier for the generated trace;
+        --best-effort-frac F marks a seed-derived fraction best_effort
+        instead (the tier SLO admission sheds first, and the only tier
+        --preempt will victimize).
+  The run epilog reports admission outcomes by reason
+  (rejected_queue_full / rejected_pool_full / shed_slo / deferred) and
+  the preempt/offload/restore counters with measured host-tier
+  compression; --trace-out reconciles page_offload spans (terminal
+  state "restored") against those counters.
+
 migration note (pre-spec flags -> QuantSpec strings):
   --quantize kmeans_ls --num-values 16   ->  --quantize kmeans_ls@16:weighted=true
                                (legacy PTQ always optimized the weighted
@@ -193,10 +219,11 @@ def _make_draft(params, cfg, args):
 
 def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
                  freeze_async=True, speculate=None, draft=None,
-                 tracer=None, exporter=None):
+                 tracer=None, exporter=None, overload=False):
     """Build the engine composition ``args`` asks for (colocated vs
     disaggregated) — verification replays run through the same one
-    (with tracer/exporter left off: replays are correctness probes)."""
+    (with tracer/exporter AND the overload machinery left off: replays
+    are correctness probes on an uncontended pool)."""
     from repro.serving import ContinuousBatchingEngine, DisaggEngine
 
     speculate = args.speculate if speculate is None else speculate
@@ -207,6 +234,9 @@ def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
               freeze_page_budget=args.freeze_page_budget,
               speculate=speculate, draft=draft if speculate else None,
               tracer=tracer, exporter=exporter)
+    if overload:
+        kw.update(offload_pages=args.offload_pages, preempt=args.preempt,
+                  admission=args.admission, itl_slo_s=args.itl_slo)
     if args.engine == "disagg":
         # fp pages are the only thing that can migrate without a spec
         migrate = args.migrate if kv_quant is not None else "fp"
@@ -305,12 +335,26 @@ def _trace_reconcile(tracer, s, speculate: int) -> bool:
         n_rb = count_events(ev, name="rollback", ph="i")
         ok = ok and (n_acc == s.get("spec_steps", 0)
                      and n_rb == s.get("spec_rollbacks", 0))
+    # overload: every offloaded page's async span must close "restored",
+    # and the preempt/restore instants must match the counters exactly
+    ob = count_events(ev, name="page_offload", ph="b")
+    oe = count_events(ev, name="page_offload", ph="e")
+    o_restored = sum(1 for e in ev if e.get("name") == "page_offload"
+                     and e.get("ph") == "e"
+                     and e.get("args", {}).get("state") == "restored")
+    ok = ok and (ob == oe == o_restored == s.get("offloaded_pages", 0)
+                 == s.get("restored_pages", 0))
+    ok = ok and (count_events(ev, name="preempt", ph="i")
+                 == s.get("preemptions", 0))
+    ok = ok and (count_events(ev, name="restore", ph="i")
+                 == s.get("restored_seqs", 0))
     state_txt = (", ".join(f"{k}={v}" for k, v in sorted(states.items()))
                  or "none")
+    off_txt = f", page-offload spans {ob} -> {oe} restored" if ob else ""
     print(f"[serve] trace: {len(ev)} events | decode_step spans {n_step} "
           f"(counter {s.get('decode_steps', 0)}), freeze flushes {n_flush} "
           f"(counter {s.get('freeze_dispatches', 0)}), page-freeze spans "
-          f"{nb} opened -> {ne} terminal ({state_txt}) "
+          f"{nb} opened -> {ne} terminal ({state_txt}){off_txt} "
           f"-> {'reconciled' if ok else 'MISMATCH'}")
     return ok
 
@@ -352,11 +396,15 @@ def _run_continuous(args):
             exporter = MetricsExporter(args.metrics_jsonl,
                                        interval_s=args.metrics_interval)
     eng = _make_engine(params, cfg, args, kv_quant=args.kv_quant,
-                       draft=draft, tracer=tracer, exporter=exporter)
+                       draft=draft, tracer=tracer, exporter=exporter,
+                       overload=True)
+    be_frac = (1.0 if args.priority == "best_effort"
+               else args.best_effort_frac)
     trace = poisson_trace(args.num_requests, args.request_rate,
                           vocab=cfg.vocab, prompt_len=args.prompt_len,
                           max_new_tokens=args.gen, seed=args.seed,
-                          temperature=args.temperature, top_k=args.top_k)
+                          temperature=args.temperature, top_k=args.top_k,
+                          best_effort_frac=be_frac)
     tag = (f"disagg {args.prefill_workers}P/{args.decode_workers}D "
            f"migrate={eng.migrate}" if args.engine == "disagg"
            else "continuous batching")
@@ -406,6 +454,23 @@ def _run_continuous(args):
           f"and install, {s['freeze_deferred_pages']} pages deferred by the "
           f"per-step budget ({args.freeze_page_budget}) | gather window <= "
           f"{s['max_gather_blocks']} blocks")
+    adm = {k: s[k] for k in ("rejected_queue_full", "rejected_pool_full",
+                             "shed_slo", "deferred") if s.get(k)}
+    if adm or args.admission == "slo":
+        txt = ", ".join(f"{k}={v}" for k, v in adm.items()) or "none"
+        print(f"[serve] admission ({args.admission}"
+              + (f", itl_slo={args.itl_slo}s" if args.itl_slo else "")
+              + f"): {txt}")
+    if s.get("preemptions"):
+        comp = s.get("offload_compression", 0.0)
+        print(f"[serve] overload: {s['preemptions']} preemptions "
+              f"({s.get('preempt_offloads', 0)} offloaded to host, "
+              f"{s.get('preempt_recomputes', 0)} recomputed); "
+              f"{s.get('offloaded_pages', 0)} pages -> host tier at "
+              f"{s.get('offload_bytes', 0)/1e6:.3f} MB"
+              + (f" ({comp:.1f}x smaller than fp)" if comp else "")
+              + f", {s.get('restored_seqs', 0)} sequences "
+              f"({s.get('restored_pages', 0)} pages) restored bit-exact")
     if args.engine == "disagg":
         mb = s.get("migrate_bytes", 0)
         print(f"[serve] migration: {s['prefills_done']} prefills -> "
@@ -497,6 +562,30 @@ def main():
                          "(0 = greedy, the default and verification path)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation when sampling (0 = full vocab)")
+    # overload survival
+    ap.add_argument("--offload-pages", action="store_true",
+                    help="demote preemption victims' frozen KV pages to a "
+                         "host tier as packed codes+codebooks; restore is "
+                         "bit-exact (see epilog)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="evict the coldest best_effort sequence when a "
+                         "latency-tier request is blocked on pages "
+                         "(restore-vs-recompute cost model; preempted work "
+                         "re-admits ahead of FCFS)")
+    ap.add_argument("--admission", choices=("fcfs", "slo"), default="fcfs",
+                    help="slo: shed/defer best_effort arrivals off windowed "
+                         "itl_p99 (--itl-slo) + occupancy, protecting the "
+                         "latency tier")
+    ap.add_argument("--itl-slo", type=float, default=None,
+                    help="inter-token p99 target in seconds for "
+                         "--admission slo (unset: occupancy-only)")
+    ap.add_argument("--priority", choices=("latency", "best_effort"),
+                    default="latency",
+                    help="tier for every request in the generated trace")
+    ap.add_argument("--best-effort-frac", type=float, default=0.0,
+                    help="mark this (seed-derived) fraction of the trace "
+                         "best_effort — the tier SLO admission sheds and "
+                         "--preempt victimizes")
     # observability
     ap.add_argument("--trace-out", default=None,
                     help="write a Perfetto-loadable Chrome trace-event "
@@ -515,6 +604,10 @@ def main():
         ap.error("--trace-out/--metrics-jsonl instrument the continuous "
                  "and disagg engines")
     serving = args.engine in ("continuous", "disagg")
+    if (args.offload_pages or args.preempt or args.admission == "slo") \
+            and not serving:
+        ap.error("--offload-pages/--preempt/--admission slo instrument the "
+                 "continuous and disagg engines")
     if serving and args.request_rate <= 0:
         ap.error("--request-rate must be > 0 (requests per second)")
     if args.engine == "disagg" and args.migrate == "frozen" \

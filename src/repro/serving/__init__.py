@@ -11,30 +11,44 @@ Observability: pass ``tracer=obs.Tracer(...)`` to either engine for a
 Perfetto-loadable trace of every component (router, prefill, decode-step
 phases, transfer, per-page freeze lifecycle, speculative verify) and
 ``exporter=obs.MetricsExporter(...)`` for periodic JSONL snapshots; both
-default to no-ops (``obs.NULL_TRACER`` / None) with ~zero hot-loop cost."""
+default to no-ops (``obs.NULL_TRACER`` / None) with ~zero hot-loop cost.
+
+Overload survival (``overload``): tiered frozen-page host offload
+(``HostPageStore`` + "resident" payloads), preempt-and-requeue with a
+restore-vs-recompute cost model, and SLO-aware admission
+(``SLOAdmission``) shedding/deferring best_effort requests off windowed
+itl_p99 + occupancy — wired into both engines via ``offload_pages`` /
+``preempt`` / ``admission="slo"``."""
 from repro.obs import (FakeClock, MetricsExporter, NULL_TRACER, NullTracer,
                        Tracer)
 
 from .engine import ContinuousBatchingEngine, DisaggEngine
 from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
-                       freeze_blocks, freeze_markers, init_paged_cache,
-                       page_bytes, resolve_kv_spec, thaw_blocks, with_tables)
+                       PoolExhausted, freeze_blocks, freeze_markers,
+                       init_paged_cache, page_bytes, resolve_kv_spec,
+                       thaw_blocks, with_tables)
 from .metrics import MetricsCollector, percentile
+from .overload import (HostPageStore, OverloadManager, ResumeEntry,
+                       SLOAdmission, choose_resume)
 from .scheduler import (ContinuousBatchingScheduler, DisaggRouter, Request,
                         SeqState)
 from .speculative import DraftWorker, derive_draft
 from .transfer import (FinishedPrefill, PagePayload, extract_pages,
-                       splice_payload)
+                       extract_resident_pages, splice_payload)
 from .workers import DecodeWorker, PrefillWorker, sample_token
 
 __all__ = [
     "ContinuousBatchingEngine", "DisaggEngine", "ContinuousBatchingScheduler",
     "DisaggRouter", "Request", "SeqState", "BlockAllocator", "PagedKVCache",
+    "PoolExhausted",
     "DecodeWorker", "PrefillWorker", "DraftWorker", "derive_draft",
     "FinishedPrefill", "PagePayload",
-    "extract_pages", "splice_payload", "sample_token", "init_paged_cache",
+    "extract_pages", "extract_resident_pages", "splice_payload",
+    "sample_token", "init_paged_cache",
     "freeze_blocks", "freeze_markers", "thaw_blocks", "with_tables",
     "page_bytes", "resolve_kv_spec", "DEVICE_FREEZE_METHODS",
     "MetricsCollector", "percentile",
+    "HostPageStore", "OverloadManager", "ResumeEntry", "SLOAdmission",
+    "choose_resume",
     "Tracer", "NullTracer", "NULL_TRACER", "FakeClock", "MetricsExporter",
 ]

@@ -55,8 +55,23 @@ from repro.obs.trace import NULL_TRACER
 
 from .kv_cache import resolve_kv_spec
 from .metrics import MetricsCollector
+from .overload import OverloadManager, SLOAdmission
 from .scheduler import DisaggRouter, Request, make_requests
 from .workers import DecodeWorker, PrefillWorker
+
+
+def _make_overload(metrics, *, offload_pages, preempt, admission, itl_slo_s,
+                   router=None):
+    """Overload machinery shared by both engine compositions: None when
+    every overload feature is off (the pre-PR fast path), else an
+    ``OverloadManager`` with an SLO policy iff admission == "slo"."""
+    assert admission in ("fcfs", "slo"), admission
+    if not (offload_pages or preempt or admission == "slo"):
+        return None
+    policy = (SLOAdmission(metrics, itl_slo_s=itl_slo_s)
+              if admission == "slo" else None)
+    return OverloadManager(offload_pages=offload_pages, policy=policy,
+                           router=router)
 
 
 def _resolve_attn_impl(attn_impl: str) -> str:
@@ -76,7 +91,9 @@ class ContinuousBatchingEngine:
                  eos_id: int | None = None, record_logits: bool = False,
                  attn_impl: str = "auto", freeze_async: bool = True,
                  freeze_page_budget: int = 4, speculate: int = 0,
-                 draft: tuple | None = None, tracer=None, exporter=None):
+                 draft: tuple | None = None, tracer=None, exporter=None,
+                 offload_pages: bool = False, preempt: bool = False,
+                 admission: str = "fcfs", itl_slo_s: float | None = None):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.exporter = exporter
@@ -116,6 +133,10 @@ class ContinuousBatchingEngine:
         self.max_seq_len = self.worker.max_seq_len
         self.freeze_async = self.worker.freeze_async
         self.eos_id = eos_id
+        self.preempt = preempt
+        self.overload = _make_overload(
+            self.metrics, offload_pages=offload_pages, preempt=preempt,
+            admission=admission, itl_slo_s=itl_slo_s)
 
     # ------------------------------------------- legacy attribute surface
 
@@ -167,7 +188,28 @@ class ContinuousBatchingEngine:
                 "speculative decoding serves the greedy (temperature=0) "
                 "verification path; submit sampled requests to a "
                 "non-speculative engine")
-        ok = self.worker.submit(req, now)
+        w = self.worker
+        om = self.overload
+        if om is not None and om.policy is not None and w.fits(req):
+            # SLO door, after the hard never-fits door (a request no pool
+            # could hold is a rejection, not a shed): consult windowed
+            # itl_p99 + live occupancy, touch only best_effort requests
+            occ = 1.0 - w.alloc.num_free / (w.num_blocks - 1)
+            verdict = om.policy.decide(req, occupancy=occ)
+            if verdict == "shed":
+                w.sched.rejected.append(req.id)
+                self.metrics.admission("shed_slo")
+                self.tracer.instant("router", "reject", rid=req.id,
+                                    reason="shed_slo")
+                return False
+            if verdict == "defer":
+                om.deferred.append(req)
+                self.metrics.arrival(req.id, now, req.prompt_len)
+                self.metrics.admission("deferred")
+                self.tracer.instant("router", "defer", rid=req.id,
+                                    deferred=len(om.deferred))
+                return True
+        ok = w.submit(req, now)
         # no router here — the colocated scheduler's admission decision IS
         # the routing decision, so it lands on the same "router" track
         self.tracer.instant("router", "admit" if ok else "reject",
@@ -183,24 +225,34 @@ class ContinuousBatchingEngine:
         passes its arrival_time; the loop sleeps only when fully idle.
         """
         w = self.worker
+        om = self.overload
         pending = deque(sorted(requests, key=lambda r: (r.arrival_time, r.id)))
         t0 = time.perf_counter()
         now_fn = lambda: time.perf_counter() - t0
-        while pending or w.sched.has_work:
+        om_work = lambda: om is not None and om.has_work
+        while pending or w.sched.has_work or om_work():
             now = now_fn()
             while pending and pending[0].arrival_time <= now:
                 self.submit(pending.popleft(), now)
-            if not w.sched.has_work:
+            if not (w.sched.has_work or om_work()):
                 if not pending:     # everything left was rejected at submit
                     break
                 nxt = pending[0].arrival_time
                 time.sleep(min(max(nxt - now, 0.0), poll_s) or poll_s)
                 continue
+            if om is not None:
+                # restore-ahead BEFORE admission: an offloaded sequence
+                # re-enters (pages re-installed while its first decode step
+                # is still an iteration away) ahead of every queued arrival
+                om.retry_deferred(w)
+                om.try_restore(w, now_fn)
             for st in w.sched.schedule(w.alloc.num_free):
                 # inline prefill straight into the decode worker's pool,
                 # then the no-op splice attaches the sequence to its slot
                 fin = self.prefill.run_inline(st.req, now_fn)
                 w.attach(st, fin, now_fn())
+            if om is not None and self.preempt:
+                om.maybe_preempt(w, now_fn)
             # one batched (budgeted) solve for the pages the prefills (and
             # the previous iteration's decode) just filled, then this
             # iteration's decode step
@@ -216,6 +268,10 @@ class ContinuousBatchingEngine:
         out["rejected"] = len(w.sched.rejected)
         out["attn_impl"] = self.attn_impl
         out.update(w.counters)
+        if out.get("offload_bytes"):
+            # what the frozen-page host tier saved vs demoting at fp width
+            out["offload_compression"] = (out["offload_fp_equiv_bytes"]
+                                          / out["offload_bytes"])
         # decode-generated tokens per per-sequence decode step (batching
         # factored out): exactly 1.0 for plain decoding, > 1 when
         # speculative verify windows accept drafts
@@ -253,7 +309,9 @@ class DisaggEngine:
                  record_logits: bool = False, attn_impl: str = "auto",
                  freeze_async: bool = True, freeze_page_budget: int = 4,
                  speculate: int = 0, draft: tuple | None = None,
-                 tracer=None, exporter=None):
+                 tracer=None, exporter=None,
+                 offload_pages: bool = False, preempt: bool = False,
+                 admission: str = "fcfs", itl_slo_s: float | None = None):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
         assert prefill_workers >= 1 and decode_workers >= 1
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -309,6 +367,10 @@ class DisaggEngine:
         self.max_seq_len = self.decode[0].max_seq_len
         self.freeze_async = self.decode[0].freeze_async
         self.eos_id = eos_id
+        self.preempt = preempt
+        self.overload = _make_overload(
+            self.metrics, offload_pages=offload_pages, preempt=preempt,
+            admission=admission, itl_slo_s=itl_slo_s, router=self.router)
 
     # ------------------------------------------------------------ intake
 
@@ -327,12 +389,35 @@ class DisaggEngine:
             # reject what no worker can ever hold — staging it would
             # head-of-line-block the router's queues forever
             self.router.rejected.append(req.id)
+            self.metrics.admission("rejected_pool_full")
             self.tracer.instant("router", "reject", rid=req.id,
                                 reason="never_fits")
             return False
+        om = self.overload
+        if om is not None and om.policy is not None:
+            # the request may land on any decode worker, so gate on the
+            # least-loaded one's occupancy
+            occ = min(1.0 - d.alloc.num_free / (d.num_blocks - 1)
+                      for d in self.decode)
+            verdict = om.policy.decide(req, occupancy=occ)
+            if verdict == "shed":
+                self.router.rejected.append(req.id)
+                self.metrics.admission("shed_slo")
+                self.tracer.instant("router", "reject", rid=req.id,
+                                    reason="shed_slo")
+                return False
+            if verdict == "defer":
+                om.deferred.append(req)
+                self.metrics.arrival(req.id, now, req.prompt_len)
+                self.metrics.admission("deferred")
+                self.tracer.instant("router", "defer", rid=req.id,
+                                    deferred=len(om.deferred))
+                return True
         ok = self.router.submit(req)
         if ok:
             self.metrics.arrival(req.id, now, req.prompt_len)
+        else:
+            self.metrics.admission("rejected_queue_full")
         return ok
 
     # ------------------------------------------------------------ run loop
@@ -340,7 +425,8 @@ class DisaggEngine:
     @property
     def _has_work(self) -> bool:
         return (self.router.has_work or any(p.busy for p in self.prefills)
-                or any(d.sched.has_work or d.has_work for d in self.decode))
+                or any(d.sched.has_work or d.has_work for d in self.decode)
+                or (self.overload is not None and self.overload.has_work))
 
     def run(self, requests: list[Request], *, poll_s: float = 0.002) -> dict:
         """Serve a trace of requests (arrival_time = seconds from start).
@@ -367,6 +453,15 @@ class DisaggEngine:
                 time.sleep(min(max(nxt - now, 0.0), poll_s) or poll_s)
                 continue
             progressed = False
+            om = self.overload
+            if om is not None:
+                # restore-ahead: offloaded sequences re-enter (onto any
+                # decode worker with capacity — payloads are portable)
+                # before staged prefills or queued arrivals take the space
+                om.retry_deferred(max(self.decode,
+                                      key=lambda d: d.alloc.num_free))
+                for dw in self.decode:
+                    progressed |= bool(om.try_restore(dw, now_fn))
             self.router.route_prefill(self.prefills)
             for pw in self.prefills:
                 for fin in pw.step(now_fn):
@@ -377,6 +472,9 @@ class DisaggEngine:
                 assert st is not None       # router checked can_accept
                 dw.attach(st, fin, now_fn())
             progressed |= bool(self.router.route_decode(self.decode, _place))
+            if om is not None and self.preempt:
+                for dw in self.decode:
+                    progressed |= om.maybe_preempt(dw, now_fn)
             for dw in self.decode:
                 if dw.has_work:
                     dw.step(now_fn)
@@ -419,6 +517,9 @@ class DisaggEngine:
         out["migrate_compression"] = (
             out["migrate_fp_equiv_bytes"] / out["migrate_bytes"]
             if out.get("migrate_bytes") else 1.0)
+        if out.get("offload_bytes"):
+            out["offload_compression"] = (out["offload_fp_equiv_bytes"]
+                                          / out["offload_bytes"])
         return out
 
     def generate(self, prompts: list[list[int]], max_new_tokens: int,

@@ -69,6 +69,18 @@ from repro.kernels import (default_interpret, pack4, paged_decode_attention,
 # ------------------------------------------------------------- allocator
 
 
+class PoolExhausted(MemoryError):
+    """Typed allocator failure carrying the shortfall, so overload-control
+    code (preemption, admission deferral) can catch-and-react instead of
+    pattern-matching a bare MemoryError message. Subclasses MemoryError for
+    callers that only care that allocation failed."""
+
+    def __init__(self, requested: int, free: int):
+        self.requested = requested
+        self.free = free
+        super().__init__(f"asked {requested} blocks, {free} free")
+
+
 class BlockAllocator:
     """Host-side free-list page allocator. Block 0 is never handed out."""
 
@@ -84,7 +96,7 @@ class BlockAllocator:
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
-            raise MemoryError(f"asked {n} blocks, {len(self._free)} free")
+            raise PoolExhausted(n, len(self._free))
         out = [self._free.pop() for _ in range(n)]
         self._used.update(out)
         return out

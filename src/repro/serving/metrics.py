@@ -91,6 +91,11 @@ class MetricsCollector:
         self._completed = 0
         self._completed_zero_token = 0
         self._gen_tokens_done = 0
+        # admission outcomes, counted by reason: rejected_queue_full /
+        # rejected_pool_full (hard doors), shed_slo / deferred (SLO-aware
+        # policy). Keys surface in summary()/snapshot() only when nonzero
+        # so the legacy key set is untouched on runs without overload.
+        self._admission: dict[str, int] = {}
 
     # ----------------------------------------------------- request events
 
@@ -98,11 +103,31 @@ class MetricsCollector:
         self.traces[rid] = RequestTrace(arrival_t=t, prompt_len=prompt_len)
         self.stats.counter("requests_arrived").inc()
 
+    def admission(self, reason: str) -> None:
+        """Count one admission-control outcome by reason."""
+        self._admission[reason] = self._admission.get(reason, 0) + 1
+
     def prefill_start(self, rid: int, t: float) -> None:
-        self.traces[rid].prefill_start_t = t
+        tr = self.traces[rid]
+        # a recompute-path resumption re-prefills mid-stream: keep the
+        # FIRST life's queue-wait attribution, don't rewrite history
+        if tr.prefill_start_t is None:
+            tr.prefill_start_t = t
 
     def first_token(self, rid: int, t: float) -> None:
         tr = self.traces[rid]
+        if tr.first_token_t is not None:
+            # resumed after preemption: the re-prefill's sampled token is
+            # just the next token of an already-started stream — one more
+            # (stall-inflated, honestly counted) decode gap, not a second
+            # TTFT, and not a reset of the token count
+            tr.tokens += 1
+            if tr._last_t is not None:
+                gap = t - tr._last_t
+                tr.gaps.append(gap)
+                self.stats.histogram("itl_s").observe(gap)
+            tr._last_t = t
+            return
         tr.first_token_t = t
         tr.tokens = 1
         tr._last_t = t
@@ -168,6 +193,9 @@ class MetricsCollector:
                        spec_proposed=self.spec_proposed,
                        spec_accepted=self.spec_accepted,
                        spec_rollbacks=self.spec_rollbacks)
+        for k, v in self._admission.items():
+            if v:
+                out[k] = v
         out.update(self.stats.snapshot())
         return out
 
@@ -182,6 +210,9 @@ class MetricsCollector:
             out = {"completed": 0}
             if zero:
                 out["completed_zero_token"] = len(zero)
+            for k, v in self._admission.items():
+                if v:
+                    out[k] = v
             return out
         t0 = min(t.arrival_t for t in done)
         t1 = max(t.finish_t for t in done)
@@ -240,4 +271,9 @@ class MetricsCollector:
             out["cache_bytes_fp_final"] = float(fp)
             out["cache_compression_mean"] = comp.mean
             out["cache_compression_final"] = float(fp / act)
+        # admission outcomes by reason, only when any occurred (keeps the
+        # legacy summary key set byte-identical on unremarkable runs)
+        for k, v in self._admission.items():
+            if v:
+                out[k] = v
         return out

@@ -35,6 +35,10 @@ class Request:
     samples from the (optionally top-k-truncated) softmax with a
     per-request numpy Generator seeded from ``seed`` (falling back to the
     request id), so a trace replays token-identically.
+
+    ``priority`` is the SLO tier: "latency" requests are protected by
+    admission control and may preempt; "best_effort" requests are the ones
+    shed or deferred under overload (and the preemption victims).
     """
 
     id: int
@@ -44,6 +48,7 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     seed: int | None = None
+    priority: str = "latency"
 
     @property
     def prompt_len(self) -> int:
@@ -80,6 +85,10 @@ class ContinuousBatchingScheduler:
         # admission must reserve them
         self.lookahead = lookahead
         self.waiting: deque[Request] = deque()
+        # requests evicted mid-decode by preemption, re-admitted ahead of
+        # FCFS: they already waited their turn once, so they outrank every
+        # queued arrival (appended in eviction order, drained FCFS)
+        self.preempted: deque[Request] = deque()
         self.active: dict[int, SeqState] = {}       # slot -> state
         self._free_slots = list(range(max_slots - 1, -1, -1))
         self.rejected: list[int] = []
@@ -105,14 +114,17 @@ class ContinuousBatchingScheduler:
 
         Returns newly admitted sequences (their prefill runs this
         iteration). Head-of-line blocking is intentional: FCFS keeps the
-        schedule deterministic and starvation-free.
+        schedule deterministic and starvation-free. Preempted requests
+        drain first — they were already admitted once, so a queued arrival
+        never overtakes them.
         """
         admitted = []
-        while self.waiting and self._free_slots:
-            need = self.blocks_for(self.waiting[0])
+        while (self.preempted or self.waiting) and self._free_slots:
+            q = self.preempted if self.preempted else self.waiting
+            need = self.blocks_for(q[0])
             if need > free_blocks:
                 break
-            req = self.waiting.popleft()
+            req = q.popleft()
             slot = self._free_slots.pop()
             st = SeqState(req=req, slot=slot, length=0)
             self.active[slot] = st
@@ -158,7 +170,7 @@ class ContinuousBatchingScheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.active)
+        return bool(self.waiting or self.preempted or self.active)
 
     def active_slots(self) -> list[int]:
         return sorted(self.active)
@@ -199,6 +211,9 @@ class DisaggRouter:
         self.staging_depth = staging_depth
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.waiting: deque[Request] = deque()
+        # preempted requests re-prefilling (recompute path): drained ahead
+        # of the FCFS waiting queue — they were already admitted once
+        self.preempted: deque[Request] = deque()
         self.staged: deque = deque()           # FinishedPrefill artifacts
         self.rejected: list[int] = []
 
@@ -225,7 +240,7 @@ class DisaggRouter:
         out = []
         inflight = (sum(w.load for w in workers) + len(self.staged)
                     if self.staging_depth is not None else 0)
-        while self.waiting:
+        while self.waiting or self.preempted:
             if (self.staging_depth is not None
                     and inflight >= self.staging_depth):
                 break
@@ -233,7 +248,8 @@ class DisaggRouter:
                             key=lambda w: (w.load, w.worker_id))
             if not ranked:
                 break
-            req = self.waiting.popleft()
+            q = self.preempted if self.preempted else self.waiting
+            req = q.popleft()
             ranked[0].submit(req)
             inflight += 1
             self.tracer.instant("router", "route_prefill", rid=req.id,
@@ -276,7 +292,7 @@ class DisaggRouter:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.staged)
+        return bool(self.waiting or self.preempted or self.staged)
 
 
 def derive_seed(seed: int | None, i: int) -> int | None:
@@ -287,28 +303,34 @@ def derive_seed(seed: int | None, i: int) -> int | None:
 
 
 def make_requests(prompts, max_new_tokens: int, *, temperature: float = 0.0,
-                  top_k: int = 0, seed: int | None = None) -> list[Request]:
+                  top_k: int = 0, seed: int | None = None,
+                  priority: str = "latency") -> list[Request]:
     """Requests for a batch of prompts, all arriving at t=0 (the engines'
     ``generate`` convenience); sampling knobs apply to every request."""
     return [Request(id=i, prompt=tuple(p), max_new_tokens=max_new_tokens,
                     temperature=temperature, top_k=top_k,
-                    seed=derive_seed(seed, i))
+                    seed=derive_seed(seed, i), priority=priority)
             for i, p in enumerate(prompts)]
 
 
 def poisson_trace(n: int, rate: float, *, vocab: int, prompt_len: int,
                   max_new_tokens: int, seed: int = 0, temperature: float = 0.0,
-                  top_k: int = 0) -> list[Request]:
+                  top_k: int = 0,
+                  best_effort_frac: float = 0.0) -> list[Request]:
     """n requests with exp(1/rate) inter-arrival gaps (rate in req/s).
     Sampling knobs apply to every request; per-request sampling seeds
-    derive from ``seed`` so a trace replays deterministically."""
+    derive from ``seed`` so a trace replays deterministically.
+    ``best_effort_frac`` marks that (deterministic, seed-derived) fraction
+    of requests "best_effort" — the tier SLO-aware admission sheds first."""
     rng = np.random.default_rng(seed)
     t = np.cumsum(rng.exponential(1.0 / rate, n))
+    tiers = rng.random(n) < best_effort_frac
     return [Request(id=i,
                     prompt=tuple(int(x) for x in
                                  rng.integers(0, vocab, prompt_len)),
                     max_new_tokens=max_new_tokens,
                     arrival_time=float(t[i]),
                     temperature=temperature, top_k=top_k,
-                    seed=derive_seed(seed, i))
+                    seed=derive_seed(seed, i),
+                    priority="best_effort" if tiers[i] else "latency")
             for i in range(n)]

@@ -29,6 +29,17 @@ Three migration modes:
              gather path (fp reconstruction). Only the trailing partial
              page still crosses fp.
 
+  "resident" Overload demotion (``extract_resident_pages``): capture a
+             LIVE sequence's pages exactly as currently served — pages
+             already installed frozen cross as their existing codes +
+             codebooks (read straight off the pool, NO re-solve, so the
+             restored values are bit-identical to what attention was
+             reading), everything else (unfrozen full pages + tail rows)
+             crosses fp. ``frozen_idx`` records which sequence-order page
+             positions carry codes. This is the tiered-paging wire format:
+             re-solving would quantize not-yet-frozen pages early and
+             diverge from the never-offloaded trace.
+
 Payloads stage through host memory (``to_host``), which is both where the
 byte accounting happens and where a NIC would sit in a multi-host
 deployment; ``nbytes`` vs ``fp_equiv_bytes`` is the measured migration
@@ -65,6 +76,10 @@ class PagePayload:
       full    (2, G?, n_full, bs, Hkv, Dh)   fp full pages       [fp]
       frozen  ((2, G?, n_full, bs, Hkv, Dc), (2, G?, n_full, L)) [frozen]
       tail    (2, G?, tail_rows, Hkv, Dh)    partial-page rows   [fp+frozen]
+
+    "resident" payloads split the full pages between ``full`` (unfrozen,
+    fp) and ``frozen`` (already-installed codes); ``frozen_idx`` names the
+    sequence-order page positions the ``frozen`` arrays cover, in order.
     """
 
     mode: str
@@ -76,6 +91,7 @@ class PagePayload:
     full: list | None = None
     frozen: list | None = None
     tail: list | None = None
+    frozen_idx: list | None = None
     nbytes: int = 0
     fp_equiv_bytes: int = 0
     staged: bool = False
@@ -213,6 +229,65 @@ def extract_pages(tree, blocks, n_tokens: int, *, block_size: int,
     return payload
 
 
+def extract_resident_pages(tree, blocks, n_tokens: int, frozen_idx, *,
+                           block_size: int,
+                           tracer=NULL_TRACER) -> PagePayload:
+    """Demote one LIVE sequence's first ``n_tokens`` of KV exactly as
+    currently served (overload tiered paging).
+
+    ``frozen_idx`` lists the sequence-order positions of pages already
+    *installed* frozen: those cross as their existing packed codes +
+    codebooks, read straight off the pool — never re-solved, so a restore
+    reproduces the exact values attention was serving. Unfrozen full pages
+    and the tail cross fp (their exact values ARE the fp rows; queued or
+    in-flight solves for them are dropped by the caller and re-queued
+    after restore). Pure gathers — no device solve — so ``to_host`` never
+    waits on a solver.
+    """
+    t0 = tracer.now()
+    n_full, tail_rows = divmod(n_tokens, block_size)
+    fset = {int(j) for j in frozen_idx if int(j) < n_full}
+    fidx = sorted(fset)
+    used = blocks[:n_full + (1 if tail_rows else 0)]
+    leaves = collect_leaves(tree)
+    payload = PagePayload(mode="resident", blocks=list(map(int, used)),
+                          n_tokens=n_tokens, block_size=block_size,
+                          n_full=n_full, tail_rows=tail_rows,
+                          frozen_idx=fidx)
+    fp_equiv = 0
+    for leaf in leaves:
+        G = leaf.k_fp.shape[0] if leaf.k_fp.ndim == 5 else 1
+        _, _, Hkv, Dh = leaf.k_fp.shape[-4:]
+        fp_equiv += (2 * G * (n_full * block_size + tail_rows)
+                     * Hkv * Dh * leaf.k_fp.dtype.itemsize)
+    payload.fp_equiv_bytes = fp_equiv
+
+    fp_pos = [j for j in range(n_full) if j not in fset]
+    if fp_pos:
+        fp_bids = [used[j] for j in fp_pos]
+        payload.full = [_take_pages(leaf, fp_bids) for leaf in leaves]
+    if fidx:
+        jb = jnp.asarray(np.asarray([used[j] for j in fidx], np.int32))
+        frozen = []
+        for leaf in leaves:
+            axis = 1 if leaf.k_fp.ndim == 5 else 0
+            frozen.append((
+                jnp.stack([jnp.take(leaf.k_codes, jb, axis=axis),
+                           jnp.take(leaf.v_codes, jb, axis=axis)]),
+                jnp.stack([jnp.take(leaf.k_cb, jb, axis=axis),
+                           jnp.take(leaf.v_cb, jb, axis=axis)])))
+        payload.frozen = frozen
+    if tail_rows:
+        tail_bid = [used[n_full]]
+        payload.tail = [_take_pages(leaf, tail_bid)[:, ..., 0, :tail_rows, :, :]
+                        for leaf in leaves]
+    tracer.complete("transfer", "extract", t0, mode="resident",
+                    pages=payload.n_pages, n_tokens=n_tokens,
+                    frozen_pages=len(fidx),
+                    fp_equiv_bytes=payload.fp_equiv_bytes)
+    return payload
+
+
 def splice_payload(tree, payload: PagePayload, new_blocks, *,
                    tracer=NULL_TRACER):
     """Land a staged payload in the destination pool at ``new_blocks``
@@ -223,14 +298,25 @@ def splice_payload(tree, payload: PagePayload, new_blocks, *,
     t0 = tracer.now()
     payload.to_host()
     leaves = collect_leaves(tree)
-    new_full = np.asarray(new_blocks[:payload.n_full], np.int32)
+    # "resident" payloads interleave fp and frozen full pages: the fp
+    # arrays cover the positions NOT in frozen_idx, the frozen arrays the
+    # rest — other modes are the frozen_idx = all-or-nothing special case
+    if payload.mode == "resident":
+        fset = set(payload.frozen_idx or ())
+        fp_pos = [j for j in range(payload.n_full) if j not in fset]
+        fp_full = np.asarray([new_blocks[j] for j in fp_pos], np.int32)
+        fro_full = np.asarray([new_blocks[j] for j in sorted(fset)],
+                              np.int32)
+    else:
+        fp_full = fro_full = np.asarray(new_blocks[:payload.n_full],
+                                        np.int32)
     out: list[PagedKVCache] = []
     for li, leaf in enumerate(leaves):
         stacked = leaf.k_fp.ndim == 5
         k_fp, v_fp = leaf.k_fp, leaf.v_fp
         if payload.full is not None:
             both = jnp.asarray(payload.full[li])
-            sel = (slice(None), new_full) if stacked else (new_full,)
+            sel = (slice(None), fp_full) if stacked else (fp_full,)
             k_fp = k_fp.at[sel].set(both[0])
             v_fp = v_fp.at[sel].set(both[1])
         if payload.tail is not None:
@@ -248,7 +334,7 @@ def splice_payload(tree, payload: PagePayload, new_blocks, *,
         # same install path as in-place freezing: scatters codes/codebooks,
         # flips blk_q, and materializes the reconstruction into the fp rows
         pending = PendingFreeze(
-            new_full, [(jnp.asarray(c), jnp.asarray(cb))
+            fro_full, [(jnp.asarray(c), jnp.asarray(cb))
                        for c, cb in payload.frozen])
         tree = install_freeze(tree, pending)
     tracer.complete("transfer", "splice", t0, mode=payload.mode,

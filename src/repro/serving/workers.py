@@ -30,6 +30,7 @@ are thin run loops over these two roles plus a scheduler/router.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from collections import deque
 
@@ -46,8 +47,9 @@ from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
                        page_bytes, thaw_blocks, with_tables)
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
 from .speculative import DraftWorker, window_step
+from .overload import ResumeEntry
 from .transfer import (FinishedPrefill, PagePayload, extract_pages,
-                       splice_payload)
+                       extract_resident_pages, splice_payload)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -187,7 +189,14 @@ class DecodeWorker:
                          "freeze_pending_max": 0, "freeze_deferred_pages": 0,
                          "max_gather_blocks": 0, "migrated_seqs": 0,
                          "migrated_pages": 0, "migrate_bytes": 0,
-                         "migrate_fp_equiv_bytes": 0}
+                         "migrate_fp_equiv_bytes": 0,
+                         # overload survival: whole-sequence evictions and
+                         # the host-tier traffic they caused
+                         "preemptions": 0, "preempt_offloads": 0,
+                         "preempt_recomputes": 0, "offloaded_pages": 0,
+                         "offload_bytes": 0, "offload_fp_equiv_bytes": 0,
+                         "restored_seqs": 0, "restored_pages": 0,
+                         "restore_bytes": 0}
         self._pending_freezes: list[tuple[int, object]] = []
         self._freeze_bids: list[int] = []   # queued for the next flush
         self._deferred_seen = 0    # queue suffix already counted deferred
@@ -199,6 +208,12 @@ class DecodeWorker:
         # checks against the dispatch/install counters.
         self._page_spans: dict[int, int] = {}
         self._span_seq = 0
+        # overload machinery: per-slot LRU signal (decode step the slot
+        # last attended) and, for recompute-path preemptions, the tokens
+        # already emitted under the request's first life — merged back
+        # into ``outputs`` when the resumed request finishes
+        self.last_attended: dict[int, int] = {}
+        self._resume_prefix: dict[int, tuple[list, list]] = {}
 
         # module-level jit keyed on the (hashable) config: workers of the
         # same geometry share compiles instead of retracing per instance
@@ -207,19 +222,27 @@ class DecodeWorker:
 
     # ------------------------------------------------------------ intake
 
+    def fits(self, req: Request) -> bool:
+        """Whether this worker could EVER hold the request (sequence
+        budget and whole page pool) — the never-admit door. Admitting a
+        request that fails this would head-of-line-block the queue
+        forever."""
+        return not (req.prompt_len + req.max_new_tokens + self.speculate
+                    > self.max_seq_len
+                    or self.sched.blocks_for(req) > self.num_blocks - 1)
+
     def submit(self, req: Request, now: float) -> bool:
         """Colocated front door: admission control + queueing + arrival
         metric (the disaggregated router does this globally instead)."""
-        if (req.prompt_len + req.max_new_tokens + self.speculate
-                > self.max_seq_len
-                or self.sched.blocks_for(req) > self.num_blocks - 1):
-            # reject what can never fit (seq budget or whole page pool) —
-            # admitting it would head-of-line-block the queue forever
+        if not self.fits(req):
             self.sched.rejected.append(req.id)
+            self.metrics.admission("rejected_pool_full")
             return False
         ok = self.sched.submit(req)
         if ok:
             self.metrics.arrival(req.id, now, req.prompt_len)
+        else:
+            self.metrics.admission("rejected_queue_full")
         return ok
 
     def can_accept(self, req: Request) -> bool:
@@ -344,6 +367,7 @@ class DecodeWorker:
         for i in active:
             st = self.sched.active[i]
             s = self.slots[i]
+            self.last_attended[i] = self.counters["decode_steps"]
             self.lens[i] += 1
             st.length += 1
             st.generated += 1
@@ -421,6 +445,7 @@ class DecodeWorker:
         for i in active:
             st = self.sched.active[i]
             s = self.slots[i]
+            self.last_attended[i] = self.counters["decode_steps"]
             L = int(self.lens[i])
             # optimistic: all W rows written; advance + queue freezes as if
             # every draft were accepted, then roll back to the watermark
@@ -610,9 +635,12 @@ class DecodeWorker:
 
     def _finish(self, st: SeqState, now: float) -> None:
         slot, s = st.slot, self.slots[st.slot]
-        self.outputs[st.req.id] = list(s.out)
-        if self.record_logits and s.logits:
-            self.request_logits[st.req.id] = np.stack(s.logits)
+        # a recompute-path resumption carries its first life's tokens as
+        # prompt; stitch them back so the caller sees one output stream
+        pre_out, pre_logits = self._resume_prefix.pop(st.req.id, ([], []))
+        self.outputs[st.req.id] = pre_out + list(s.out)
+        if self.record_logits and (pre_logits or s.logits):
+            self.request_logits[st.req.id] = np.stack(pre_logits + s.logits)
         self.metrics.finish(st.req.id, now)
         # freed pages may be reallocated before an in-flight solve lands —
         # forget them (queued or dispatched) so a stale install can't mark
@@ -640,7 +668,153 @@ class DecodeWorker:
         self.lens[slot] = 0
         s.rid, s.blocks, s.frozen_upto, s.out = None, [], 0, []
         s.rng, s.temperature, s.top_k = None, 0.0, 0
+        self.last_attended.pop(slot, None)
         self.sched.release(st)
+
+    # ------------------------------------------------------------ overload
+
+    def preempt(self, st: SeqState, mode: str, now: float) -> ResumeEntry:
+        """Evict a live sequence at a step boundary (overload pressure).
+
+        mode "restore": demote its pages to a host payload via the
+        "resident" extraction — installed-frozen pages cross as their
+        existing packed codes + codebooks (bit-exact on re-install), the
+        rest fp — for exact resumption later. mode "recompute": drop the
+        pages and return a requeue request whose prompt is the original
+        plus everything emitted; the re-prefill re-derives the KV (only
+        chosen for unquantized greedy runs, where it is value-exact).
+
+        The teardown mirrors ``_finish`` minus the output/latency events —
+        the request stays live, only its residency changes — so every pool
+        invariant (freeze watermark, conservation, pending-solve staleness)
+        holds exactly as for a finished sequence. Open ``page_freeze``
+        spans terminate ``offloaded`` / ``dropped`` per mode.
+        """
+        assert mode in ("restore", "recompute"), mode
+        slot, s, req = st.slot, self.slots[st.slot], st.req
+        assert not st.done and s.out, "preempt targets a live sequence"
+        n_tok = int(self.lens[slot])
+        tr = self.tracer
+        self.counters["preemptions"] += 1
+        if mode == "restore":
+            full = n_tok // self.block_size
+            frozen_idx = [j for j in range(full)
+                          if int(self.table[slot, j]) in self._frozen_pages]
+            payload = extract_resident_pages(
+                self.tree, s.blocks, n_tok, frozen_idx,
+                block_size=self.block_size, tracer=tr)
+            t_host = tr.now()
+            payload.to_host()
+            tr.complete("transfer", "to_host", t_host, rid=req.id,
+                        mode=payload.mode, bytes=payload.nbytes,
+                        fp_equiv_bytes=payload.fp_equiv_bytes,
+                        pages=payload.n_pages)
+            entry = ResumeEntry(req=req, out=list(s.out),
+                                generated=st.generated, n_tokens=n_tok,
+                                rng=s.rng, logits=list(s.logits),
+                                payload=payload, frozen_idx=frozen_idx)
+            self.counters["preempt_offloads"] += 1
+            self.counters["offloaded_pages"] += payload.n_pages
+            self.counters["offload_bytes"] += payload.nbytes
+            self.counters["offload_fp_equiv_bytes"] += payload.fp_equiv_bytes
+            if tr.enabled:
+                for j in range(payload.n_pages):
+                    self._span_seq += 1
+                    entry.span_ids[j] = self._span_seq
+                    tr.async_begin(self._trk_freeze, "page_offload",
+                                   self._span_seq, rid=req.id, page_pos=j)
+        else:
+            rem = req.max_new_tokens - st.generated
+            resume = dataclasses.replace(
+                req, prompt=tuple(req.prompt) + tuple(s.out),
+                max_new_tokens=rem)
+            pre_out, pre_logits = self._resume_prefix.get(req.id, ([], []))
+            self._resume_prefix[req.id] = (pre_out + list(s.out),
+                                           pre_logits + list(s.logits))
+            entry = ResumeEntry(req=resume, out=list(s.out),
+                                generated=st.generated, n_tokens=n_tok)
+            self.counters["preempt_recomputes"] += 1
+        tr.instant(self._trk_decode, "preempt", rid=req.id, slot=slot,
+                   mode=mode, tokens=n_tok, pages=len(s.blocks))
+        freed = set(s.blocks)
+        if tr.enabled:
+            end_state = "offloaded" if mode == "restore" else "dropped"
+            for b in sorted(freed):
+                sid = self._page_spans.pop(b, None)
+                if sid is not None:
+                    tr.async_end(self._trk_freeze, "page_freeze", sid,
+                                 state=end_state, page=b)
+        self._freeze_bids = [b for b in self._freeze_bids if b not in freed]
+        self._deferred_seen = min(self._deferred_seen, len(self._freeze_bids))
+        self._frozen_pages -= freed
+        for _, pending in self._pending_freezes:
+            pending.drop(s.blocks)
+        self.tree = thaw_blocks(self.tree, s.blocks)
+        self.alloc.free(s.blocks)
+        if self.draft is not None:
+            self.draft.release(slot)
+        self.table[slot] = 0
+        self.lens[slot] = 0
+        s.rid, s.blocks, s.frozen_upto, s.out, s.logits = None, [], 0, [], []
+        s.rng, s.temperature, s.top_k = None, 0.0, 0
+        self.last_attended.pop(slot, None)
+        self.sched.release(st)
+        return entry
+
+    def restore(self, st: SeqState, entry: ResumeEntry, now: float) -> None:
+        """Re-install an offloaded sequence at slot ``st.slot`` and resume
+        decoding exactly where it stopped.
+
+        Restore-ahead: this runs at re-admission — before any decode
+        window needs the pages — and the jit dataflow chains the next
+        decode step behind the splice/install, so the resumed sequence is
+        greedy-token-identical to one that never left. Frozen pages land
+        through ``install_freeze`` (bit-exact codes), fp pages scatter
+        verbatim; the stall the sequence suffered shows up honestly in its
+        next inter-token gap."""
+        req, s = st.req, self.slots[st.slot]
+        blocks = self.alloc.alloc(self.sched.blocks_for(req))
+        self.tree = splice_payload(self.tree, entry.payload, blocks,
+                                   tracer=self.tracer)
+        s.rid, s.blocks = req.id, blocks
+        s.out, s.logits = list(entry.out), list(entry.logits)
+        s.last_token = entry.out[-1]
+        s.rng, s.temperature, s.top_k = entry.rng, req.temperature, req.top_k
+        self.table[st.slot] = 0
+        self.table[st.slot, :len(blocks)] = blocks
+        self.lens[st.slot] = entry.n_tokens
+        st.length, st.generated = entry.n_tokens, entry.generated
+        self._frozen_pages.update(int(blocks[j]) for j in entry.frozen_idx)
+        # frozen_upto is the maximal frozen PREFIX; installs land in queue
+        # order so the frozen set is a prefix in practice. If it ever
+        # weren't, _queue_freeze would re-solve an already-frozen page —
+        # value-exact (kmeans_ls on a 16-distinct-value reconstruction
+        # reproduces it), so at most a redundant solve, never divergence.
+        fset = set(entry.frozen_idx)
+        upto = 0
+        while upto in fset:
+            upto += 1
+        s.frozen_upto = upto
+        self._queue_freeze(st.slot)
+        self.counters["restored_seqs"] += 1
+        self.counters["restored_pages"] += entry.payload.n_pages
+        self.counters["restore_bytes"] += entry.payload.nbytes
+        tr = self.tracer
+        tr.instant(self._trk_decode, "restore", rid=req.id, slot=st.slot,
+                   pages=entry.payload.n_pages, tokens=entry.n_tokens)
+        if tr.enabled:
+            for j, sid in sorted(entry.span_ids.items()):
+                tr.async_end(self._trk_freeze, "page_offload", sid,
+                             state="restored", rid=req.id, page_pos=j)
+        if self.draft is not None:
+            # the draft re-prefills the full accepted context (out[-1] has
+            # no KV row yet, same as at attach); plen pins back to the
+            # ORIGINAL prompt length because propose slices pending tokens
+            # as out[lens - plen:]
+            self.draft.attach(st.slot,
+                              tuple(req.prompt) + tuple(entry.out[:-1]),
+                              len(blocks))
+            self.draft.plen[st.slot] = req.prompt_len
 
     def drain(self) -> None:
         """Flush every still-queued freeze and land in-flight solves (end

@@ -1,0 +1,371 @@
+"""Overload survival: tiered host offload, preempt-and-requeue, SLO-aware
+admission.
+
+The load-bearing guarantees under test:
+
+  * typed allocator failure — ``BlockAllocator.alloc`` raises
+    ``PoolExhausted`` carrying requested/free counts (and stays a
+    ``MemoryError`` for legacy callers);
+  * the restore-vs-recompute cost model's hard rules (quantized or
+    sampled runs must restore — recompute is not value-exact for them);
+  * SLO admission decisions (latency protected; best_effort shed on a
+    breached windowed itl p99, deferred at high occupancy, re-admitted
+    with hysteresis);
+  * seeded fault injection forcing a preempt-offload at the WORST moment
+    — the victim's pages demanded by the very next decode window — must
+    be token-identical to the never-offloaded golden run, on both engine
+    compositions, with and without speculation, and under sampling
+    (restore carries the live rng);
+  * offload/restore counters reconcile against the ``page_offload``
+    trace-span lifecycle.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_reduced_config
+from repro.obs import FakeClock, Tracer, count_events
+from repro.serving import (BlockAllocator, ContinuousBatchingEngine,
+                           DisaggEngine, PoolExhausted, Request, SLOAdmission,
+                           choose_resume, derive_draft)
+
+pytestmark = pytest.mark.serving
+
+
+@pytest.fixture(scope="module")
+def qwen_reduced():
+    cfg = get_reduced_config("qwen3_0_6b")
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk_requests(cfg, n, *, max_new=12, temperature=0.0, top_k=0, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(id=i,
+                    prompt=tuple(int(x) for x in
+                                 rng.integers(0, cfg.vocab, 12)),
+                    max_new_tokens=max_new, temperature=temperature,
+                    top_k=top_k, seed=1000 + i,
+                    priority="best_effort" if i % 2 else "latency")
+            for i in range(n)]
+
+
+# ------------------------------------------------------- typed exhaustion
+
+
+def test_pool_exhausted_typed():
+    a = BlockAllocator(4)
+    a.alloc(2)
+    with pytest.raises(PoolExhausted) as ei:
+        a.alloc(5)
+    assert ei.value.requested == 5
+    assert ei.value.free == 1
+    assert "5" in str(ei.value) and "1" in str(ei.value)
+    # legacy callers that only catch MemoryError keep working
+    with pytest.raises(MemoryError):
+        a.alloc(5)
+
+
+# --------------------------------------------------------- cost model
+
+
+def test_choose_resume_cost_model():
+    # quantized / sampled runs MUST restore: recompute re-prefills through
+    # exact fp where the first life served reconstructions
+    assert choose_resume(frozen_pages=0, total_pages=4, restore_bytes=4000,
+                         fp_equiv_bytes=4000, exact_required=True) == "restore"
+    # well-compressed payload (most pages frozen): moving it back is cheap
+    assert choose_resume(frozen_pages=3, total_pages=4, restore_bytes=1000,
+                         fp_equiv_bytes=4000,
+                         exact_required=False) == "restore"
+    # nothing frozen: payload is full-width, re-prefill instead
+    assert choose_resume(frozen_pages=0, total_pages=4, restore_bytes=4000,
+                         fp_equiv_bytes=4000,
+                         exact_required=False) == "recompute"
+    assert choose_resume(frozen_pages=0, total_pages=0, restore_bytes=0,
+                         fp_equiv_bytes=0, exact_required=False) == "recompute"
+
+
+# ------------------------------------------------------- SLO admission
+
+
+class _Hist:
+    def __init__(self):
+        from repro.obs.stats import Registry
+        self.stats = Registry()
+
+
+def test_slo_admission_decisions():
+    m = _Hist()
+    pol = SLOAdmission(m, itl_slo_s=0.010, occ_defer=0.95, occ_resume=0.80,
+                       min_samples=4)
+    lat = Request(id=0, prompt=(1,), max_new_tokens=4, priority="latency")
+    be = Request(id=1, prompt=(1,), max_new_tokens=4, priority="best_effort")
+    # no samples yet: no shed signal; low occupancy: admit
+    assert pol.decide(be, occupancy=0.5) == "admit"
+    # latency tier passes regardless of pressure
+    assert pol.decide(lat, occupancy=1.0) == "admit"
+    # best_effort defers at the occupancy door
+    assert pol.decide(be, occupancy=0.99) == "defer"
+    # breach the itl SLO: windowed p99 over min_samples gaps
+    h = m.stats.histogram("itl_s")
+    for _ in range(8):
+        h.observe(0.050)
+    assert pol.decide(be, occupancy=0.5) == "shed"
+    assert pol.decide(lat, occupancy=0.5) == "admit"
+    # hysteresis band for deferred retries
+    assert not pol.may_resume(occupancy=0.90, idle=False)
+    assert pol.may_resume(occupancy=0.70, idle=False)
+    assert pol.may_resume(occupancy=1.0, idle=True)
+
+
+def test_slo_windowed_not_lifetime():
+    """The shed signal is the WINDOWED p99 — a bad cold-start tail must
+    wash out once the live window is healthy again."""
+    m = _Hist()
+    pol = SLOAdmission(m, itl_slo_s=0.010, window=16, min_samples=4)
+    be = Request(id=1, prompt=(1,), max_new_tokens=4,
+                 priority="best_effort")
+    h = m.stats.histogram("itl_s")
+    for _ in range(32):                      # terrible cold-start window
+        h.observe(0.100)
+    assert pol.decide(be, occupancy=0.1) == "shed"
+    for _ in range(64):                      # recovered steady state
+        h.observe(0.001)
+    assert pol.decide(be, occupancy=0.1) == "admit"
+
+
+def test_defer_and_retry(qwen_reduced):
+    """A best_effort arrival against a ~full pool parks in the deferred
+    queue (arrival metered once); once occupancy recedes it rejoins the
+    ordinary waiting queue behind the FCFS door."""
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=2, block_size=8,
+                                   max_seq_len=48, num_blocks=7,
+                                   admission="slo")
+    om, w = eng.overload, eng.worker
+    held = w.alloc.alloc(6)                   # occupy the whole pool
+    # a live occupant, so the retry gate can't take the idle shortcut
+    w.sched.admit_direct(Request(id=9, prompt=(1,), max_new_tokens=2))
+    be = Request(id=0, prompt=(1, 2, 3), max_new_tokens=4,
+                 priority="best_effort")
+    lat = Request(id=1, prompt=(1, 2, 3), max_new_tokens=4)
+    assert eng.submit(be, 0.0) is True        # accepted... into deferral
+    assert list(om.deferred) == [be]
+    assert not w.sched.waiting
+    assert eng.submit(lat, 0.0) is True       # latency passes the door
+    assert list(w.sched.waiting) == [lat]
+    # pressure stays: retry is a no-op (hysteresis)
+    assert om.retry_deferred(w) == 0
+    w.alloc.free(held)
+    assert om.retry_deferred(w) == 1
+    assert list(w.sched.waiting) == [lat, be]
+    s = eng.metrics.summary()
+    assert s["deferred"] == 1
+
+
+# ------------------------------------- fault injection: worst-moment restore
+
+
+def _forced_offload_outputs(eng, requests, *, at_steps, worker=None):
+    """Run ``requests`` on ``eng``, force-preempting (offload mode) the
+    longest active sequence at each decode step in ``at_steps`` — its
+    pages are then demanded by the very next decode window, so the
+    restore-ahead path has zero slack. Returns (outputs, summary)."""
+    om = eng.overload
+    w = worker if worker is not None else eng.worker
+    orig_step = w.step
+    fired = set()
+
+    def step(now_fn):
+        n = w.counters["decode_steps"]
+        if n in at_steps and n not in fired and w.sched.active:
+            fired.add(n)
+            slot = max(w.sched.active,
+                       key=lambda i: (int(w.lens[i]), i))
+            st = w.sched.active[slot]
+            if not st.done and w.slots[slot].out:
+                entry = w.preempt(st, "restore", now_fn())
+                om.store.put(entry)
+                om.resume.append(entry)
+        orig_step(now_fn)
+
+    w.step = step
+    summary = eng.run(requests)
+    assert fired, "fault injection never fired — trace too short"
+    assert len(om.store) == 0 and not om.resume
+    return dict(eng.outputs), summary
+
+
+@pytest.mark.parametrize("speculate", [0, 2])
+def test_forced_restore_token_identity_colocated(qwen_reduced, speculate):
+    cfg, params = qwen_reduced
+    kw = dict(max_slots=2, block_size=8, max_seq_len=48,
+              kv_quant="kmeans_ls@16", freeze_async=False,
+              speculate=speculate,
+              draft=derive_draft(params, cfg) if speculate else None)
+    golden_eng = ContinuousBatchingEngine(params, cfg, **kw)
+    golden_eng.run(_mk_requests(cfg, 3))
+    golden = dict(golden_eng.outputs)
+    eng = ContinuousBatchingEngine(params, cfg, offload_pages=True, **kw)
+    outs, s = _forced_offload_outputs(eng, _mk_requests(cfg, 3),
+                                      at_steps={3, 7})
+    assert outs == golden
+    assert s["preempt_offloads"] == s["restored_seqs"] >= 1
+    assert s["offloaded_pages"] == s["restored_pages"]
+    assert s["offload_bytes"] == s["restore_bytes"] > 0
+
+
+def test_forced_restore_token_identity_disagg(qwen_reduced):
+    cfg, params = qwen_reduced
+    kw = dict(max_slots=2, block_size=8, max_seq_len=48,
+              kv_quant="kmeans_ls@16", freeze_async=False)
+    golden_eng = ContinuousBatchingEngine(params, cfg, **kw)
+    golden_eng.run(_mk_requests(cfg, 3))
+    golden = dict(golden_eng.outputs)
+    eng = DisaggEngine(params, cfg, prefill_workers=1, decode_workers=1,
+                       migrate="frozen", offload_pages=True, **kw)
+    outs, s = _forced_offload_outputs(eng, _mk_requests(cfg, 3),
+                                      at_steps={3, 7}, worker=eng.decode[0])
+    assert outs == golden
+    assert s["preempt_offloads"] == s["restored_seqs"] >= 1
+
+
+def test_forced_restore_sampled_rng_carries(qwen_reduced):
+    """A sampled sequence restores with its live Generator: the tokens
+    drawn after the stall must equal the uninterrupted run's."""
+    cfg, params = qwen_reduced
+    kw = dict(max_slots=2, block_size=8, max_seq_len=48,
+              kv_quant="kmeans_ls@16", freeze_async=False)
+    reqs = lambda: _mk_requests(cfg, 3, temperature=0.7, top_k=5)
+    golden_eng = ContinuousBatchingEngine(params, cfg, **kw)
+    golden_eng.run(reqs())
+    golden = dict(golden_eng.outputs)
+    eng = ContinuousBatchingEngine(params, cfg, offload_pages=True, **kw)
+    outs, _ = _forced_offload_outputs(eng, reqs(), at_steps={4})
+    assert outs == golden
+
+
+# ----------------------------------------- preempt-and-requeue, end to end
+
+
+@pytest.mark.parametrize("offload", [True, False])
+def test_preempt_under_pressure_completes_identically(qwen_reduced, offload):
+    """2x-oversubscribed pool with preemption on: every request still
+    completes, outputs are token-identical to the uncontended golden run,
+    and the chosen resume path matches the cost model (quantized -> must
+    restore; fp greedy with the host tier off -> recompute)."""
+    cfg, params = qwen_reduced
+    kv = "kmeans_ls@16" if offload else None
+    kw = dict(max_slots=2, block_size=8, max_seq_len=48, kv_quant=kv,
+              freeze_async=False)
+    golden_eng = ContinuousBatchingEngine(params, cfg, **kw)
+    golden_eng.run(_mk_requests(cfg, 4))
+    golden = dict(golden_eng.outputs)
+    eng = ContinuousBatchingEngine(params, cfg, num_blocks=8,
+                                   offload_pages=offload, preempt=True, **kw)
+    s = eng.run(_mk_requests(cfg, 4))
+    assert dict(eng.outputs) == golden
+    assert s["preemptions"] >= 1
+    if offload:
+        assert s["preempt_recomputes"] == 0
+        assert s["preempt_offloads"] == s["restored_seqs"] >= 1
+    else:
+        assert s["preempt_offloads"] == 0
+        assert s["preempt_recomputes"] >= 1
+
+
+def test_preempted_requeue_ahead_of_fcfs():
+    """A preempted request outranks every queued arrival at re-admission."""
+    from repro.serving import ContinuousBatchingScheduler
+    sched = ContinuousBatchingScheduler(max_slots=1, block_size=8)
+    a = Request(id=0, prompt=(1,) * 8, max_new_tokens=8)
+    b = Request(id=1, prompt=(1,) * 8, max_new_tokens=8)
+    sched.submit(a)
+    sched.preempted.append(b)
+    admitted = sched.schedule(free_blocks=64)
+    assert [st.req.id for st in admitted] == [1]
+
+
+# -------------------------------------------------- span/counter reconcile
+
+
+def test_offload_spans_reconcile(qwen_reduced):
+    """Every offloaded page opens a ``page_offload`` async span and every
+    restore closes it ``restored``; the victim's open ``page_freeze``
+    spans terminate ``offloaded``. Counters must agree exactly."""
+    cfg, params = qwen_reduced
+    tr = Tracer(clock=FakeClock())
+    # freeze_page_budget=1 keeps freezes queued across step boundaries so
+    # preemption catches in-flight page_freeze spans (terminal "offloaded")
+    kw = dict(max_slots=2, block_size=8, max_seq_len=48,
+              kv_quant="kmeans_ls@16", freeze_async=False,
+              freeze_page_budget=1, tracer=tr)
+    eng = ContinuousBatchingEngine(params, cfg, num_blocks=8,
+                                   offload_pages=True, preempt=True, **kw)
+    s = eng.run(_mk_requests(cfg, 4))
+    assert s["preempt_offloads"] >= 1
+    b = count_events(tr.events, name="page_offload", ph="b")
+    e = count_events(tr.events, name="page_offload", ph="e")
+    assert b == e == s["offloaded_pages"] == s["restored_pages"]
+    restored = [ev for ev in tr.events if ev.get("name") == "page_offload"
+                and ev["ph"] == "e"]
+    assert all(ev["args"]["state"] == "restored" for ev in restored)
+    frz_ends = [ev["args"]["state"] for ev in tr.events
+                if ev.get("name") == "page_freeze" and ev["ph"] == "e"]
+    assert "offloaded" in frz_ends
+    assert count_events(tr.events, name="preempt", ph="i") \
+        == s["preemptions"]
+    assert count_events(tr.events, name="restore", ph="i") \
+        == s["restored_seqs"]
+
+
+# ----------------------------------------------- admission reason counters
+
+
+def test_admission_reason_counters(qwen_reduced):
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=2, block_size=8,
+                                   max_seq_len=48, max_queue=1)
+    # never fits the pool/sequence budget
+    assert not eng.submit(Request(id=0, prompt=(1,) * 40,
+                                  max_new_tokens=40), 0.0)
+    # queue-depth door
+    assert eng.submit(Request(id=1, prompt=(1, 2), max_new_tokens=2), 0.0)
+    assert not eng.submit(Request(id=2, prompt=(1, 2), max_new_tokens=2),
+                          0.0)
+    snap = eng.metrics.snapshot()
+    assert snap["rejected_pool_full"] == 1
+    assert snap["rejected_queue_full"] == 1
+
+
+def test_summary_keys_absent_without_overload(qwen_reduced):
+    """Runs that never shed/deferred/rejected keep the legacy summary key
+    set — the reason counters only appear when nonzero."""
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=2, block_size=8,
+                                   max_seq_len=48)
+    s = eng.run(_mk_requests(cfg, 2))
+    for k in ("rejected_queue_full", "rejected_pool_full", "shed_slo",
+              "deferred"):
+        assert k not in s
+
+
+def test_shed_slo_end_to_end(qwen_reduced):
+    """With an impossible itl SLO, later best_effort arrivals shed while
+    every latency-tier request completes."""
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=2, block_size=8,
+                                   max_seq_len=48, admission="slo",
+                                   itl_slo_s=1e-9)
+    reqs = [dataclasses.replace(r, arrival_time=0.3 * i)
+            for i, r in enumerate(_mk_requests(cfg, 8))]
+    s = eng.run(reqs)
+    shed = s.get("shed_slo", 0)
+    assert shed >= 1
+    assert s["rejected"] == shed               # shed are the only rejects
+    done = set(eng.outputs)
+    assert {r.id for r in reqs if r.priority == "latency"} <= done

@@ -263,3 +263,89 @@ if HAVE_HYP:
            st.sampled_from([0, 2]))
     def test_page_pool_conservation_property(qwen_reduced, reqs, speculate):
         _check_conservation(qwen_reduced, reqs, speculate)
+
+
+# --------------------------------------- tiered residency (host offload)
+
+
+def assert_tiered_partition(worker, om):
+    """Device free list + live tables + host-resident set partition the
+    logical pool: the device-side invariants hold unchanged, and every
+    demoted sequence's residency moved WHOLE to the host tier (no page of
+    it left on device, its payload staged, its resume entry queued)."""
+    assert_pool_partition(worker)
+    active_rids = {st.req.id for st in worker.sched.active.values()}
+    store_rids = {e.req.id for e in om.store.entries()}
+    assert not (store_rids & active_rids), "sequence resident in both tiers"
+    for e in om.store.entries():
+        assert e.payload is not None and e.payload.staged
+        assert e.payload.n_pages >= 1
+        assert len(e.out) == e.generated
+    assert {e.req.id for e in om.resume} == store_rids
+    assert om.store.pages == sum(e.payload.n_pages
+                                 for e in om.store.entries())
+
+
+def _check_tiered_conservation(qwen_reduced, reqs, speculate):
+    """Overloaded engine (pool ~half the demand) with preempt + offload
+    on: the two-tier partition must hold at every step — including
+    preemptions landing between speculative verify windows and offloaded
+    payloads sitting in the host store while OTHER sequences finish and
+    recycle their device pages — and the run must drain both tiers."""
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(
+        params, cfg, max_slots=2, block_size=8, max_seq_len=48,
+        kv_quant="kmeans_ls@16", freeze_page_budget=1, num_blocks=8,
+        offload_pages=True, preempt=True, speculate=speculate,
+        draft=derive_draft(params, cfg) if speculate else None)
+    w, om = eng.worker, eng.overload
+    orig_step = w.step
+    outlived = [False]
+
+    def checked_step(now_fn):
+        orig_step(now_fn)
+        assert_tiered_partition(w, om)
+        if len(om.store) and eng.outputs:
+            outlived[0] = True          # host entries outlive finished seqs
+
+    w.step = checked_step
+    rng = np.random.default_rng(0)
+    requests = [Request(id=i,
+                        prompt=tuple(rng.integers(0, cfg.vocab, p).tolist()),
+                        max_new_tokens=n,
+                        priority="best_effort" if i % 2 else "latency")
+                for i, (p, n) in enumerate(reqs)]
+    s = eng.run(requests)
+    assert_tiered_partition(w, om)
+    assert sorted(eng.outputs) == list(range(len(reqs)))
+    assert eng.alloc.num_free == eng.num_blocks - 1
+    assert len(om.store) == 0 and not om.resume and not om.deferred
+    assert not w._pending_freezes and not w._freeze_bids
+    # quantized serving must never pick the recompute path (not exact)
+    assert s["preempt_recomputes"] == 0
+    return s["preemptions"], outlived[0]
+
+
+def test_tiered_residency_conservation_seeded_corpus(qwen_reduced):
+    rng = np.random.default_rng(5)
+    preempted = outlived = 0
+    for speculate in (0, 2):
+        reqs = [(int(rng.integers(4, 21)), int(rng.integers(4, 9)))
+                for _ in range(4)]
+        p, o = _check_tiered_conservation(qwen_reduced, reqs, speculate)
+        preempted += p
+        outlived += o
+    # the corpus must actually exercise the machinery it checks
+    assert preempted >= 1
+    assert outlived >= 1
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(st.lists(st.tuples(st.integers(4, 20), st.integers(4, 8)),
+                    min_size=3, max_size=5),
+           st.sampled_from([0, 2]))
+    def test_tiered_residency_conservation_property(qwen_reduced, reqs,
+                                                    speculate):
+        _check_tiered_conservation(qwen_reduced, reqs, speculate)
