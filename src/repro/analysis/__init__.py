@@ -1,1 +1,12 @@
-"""Static analysis of lowered HLO: bytes/FLOPs accounting and roofline."""
+"""Static analysis: HLO bytes/FLOPs accounting + roofline (``hlo``,
+``roofline``) and the stdlib-ast lint suite gating CI
+(``python -m repro.analysis`` — see ``lint`` for the framework and
+``hostsync``/``retrace``/``spans``/``counters`` for the passes)."""
+
+from .lint import (Finding, LintPass, Module, all_passes, load_baseline,
+                   partition_baseline, run_passes, run_paths, save_baseline)
+
+__all__ = [
+    "Finding", "LintPass", "Module", "all_passes", "load_baseline",
+    "partition_baseline", "run_passes", "run_paths", "save_baseline",
+]

@@ -1,0 +1,275 @@
+"""Host-sync sanitizer (pass ``sync``): no device→host synchronization on
+the decode/step hot path.
+
+A single stray ``np.asarray``/``.item()``/``float()`` on a device value
+inside the decode loop serializes the host against the device pipeline and
+silently halves throughput — the exact failure mode PR 2's async freeze
+path was built to avoid.  This pass audits the hot-path modules
+(``serving/workers.py``, ``serving/speculative.py``,
+``serving/kv_cache.py``, ``kernels/paged_attention.py``), computes the set
+of functions reachable from any ``step()`` entry point by name-based call
+graph, and flags host-sync constructs inside them:
+
+  SYNC001  jax.block_until_ready(...)            (always a sync)
+  SYNC002  np.asarray / np.array on a device value
+  SYNC003  .item() call                          (device scalar pull)
+  SYNC004  .to_host() call                       (payload staging)
+  SYNC005  float()/int() directly on a device value
+
+"Device value" is a local taint: results of ``jnp.*``/``jax.*`` calls and
+of callees named ``*_fn`` (the jitted-step convention), propagated through
+subscripts/attributes/arithmetic/unpacking.  Host-only numpy code in the
+same functions stays clean — ``np.asarray(sorted(ids))`` is not a sync.
+
+Intentional syncs carry a pragma with the reason, e.g.::
+
+    nxt = np.asarray(argmax)  # lint: sync(step-end token sync: the host
+                              # scheduler needs the sampled ids)
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable
+
+from .lint import Finding, LintPass, Module, dotted_name, register
+
+#: path suffixes of the modules whose step-reachable functions are audited
+HOT_SUFFIXES = (
+    "serving/workers.py",
+    "serving/speculative.py",
+    "serving/kv_cache.py",
+    "kernels/paged_attention.py",
+)
+
+#: function names treated as hot-path entry points
+ROOT_NAMES = ("step",)
+
+_NP_PREFIXES = ("np.", "numpy.")
+_DEVICE_PREFIXES = ("jnp.", "jax.")
+
+
+def is_hot_module(relpath: str) -> bool:
+    return relpath.endswith(HOT_SUFFIXES)
+
+
+@dataclasses.dataclass
+class _Func:
+    module: Module
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    qualname: str
+    calls: set[str] = dataclasses.field(default_factory=set)
+
+
+def _callee_name(call: ast.Call) -> str | None:
+    """Bare name a call resolves through: ``f(...)`` -> f,
+    ``self.f(...)``/``obj.f(...)`` -> f (name-based linking)."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _collect_functions(mod: Module) -> tuple[list[_Func], dict[str, str]]:
+    """All function defs with qualnames + class name -> __init__ bare-name
+    mapping (so ``Cls(...)`` links to its constructor)."""
+    funcs: list[_Func] = []
+    ctor_of: dict[str, str] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{child.name}"
+                f = _Func(mod, child, qn)
+                for sub in ast.walk(child):
+                    if isinstance(sub, ast.Call):
+                        n = _callee_name(sub)
+                        if n:
+                            f.calls.add(n)
+                funcs.append(f)
+                visit(child, qn + ".")
+            elif isinstance(child, ast.ClassDef):
+                ctor_of[child.name] = "__init__"
+                visit(child, f"{child.name}.")
+            else:
+                visit(child, prefix)
+
+    visit(mod.tree, "")
+    return funcs, ctor_of
+
+
+def _device_call(node: ast.AST) -> bool:
+    """Call whose result lives on device: jnp.*/jax.* or a ``*_fn``."""
+    if not isinstance(node, ast.Call):
+        return False
+    dn = dotted_name(node.func)
+    if dn and dn.startswith(_DEVICE_PREFIXES):
+        return True
+    callee = _callee_name(node)
+    return bool(callee and callee.endswith("_fn"))
+
+
+def _contains_device_call(node: ast.AST) -> bool:
+    return any(_device_call(n) for n in ast.walk(node))
+
+
+class _Taint:
+    """Flow-insensitive local taint: two passes over the function body in
+    source order reach a fixpoint for the loop-carried case."""
+
+    def __init__(self, func: ast.AST):
+        self.tainted: set[str] = set()
+        for _ in range(2):
+            before = len(self.tainted)
+            self._scan(func)
+            if len(self.tainted) == before:
+                break
+
+    def _scan(self, root: ast.AST) -> None:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Assign) and self.expr(node.value):
+                for tgt in node.targets:
+                    self._taint_target(tgt)
+            elif isinstance(node, ast.AugAssign) and (
+                    self.expr(node.value) or self.expr(node.target)):
+                self._taint_target(node.target)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                    and self.expr(node.value):
+                self._taint_target(node.target)
+
+    def _taint_target(self, tgt: ast.AST) -> None:
+        if isinstance(tgt, ast.Name):
+            self.tainted.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for elt in tgt.elts:
+                self._taint_target(elt)
+
+    def expr(self, node: ast.AST) -> bool:
+        """Does ``node`` evaluate to a (possibly) device value?"""
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Call):
+            if _device_call(node):
+                return True
+            # method on a tainted value: x.astype(...), x.at[i].set(...)
+            if isinstance(node.func, ast.Attribute):
+                return self.expr(node.func.value)
+            return False
+        if isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+            return self.expr(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.expr(node.left) or self.expr(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.expr(node.left) or any(
+                self.expr(c) for c in node.comparators)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.expr(node.body) or self.expr(node.orelse)
+        return False
+
+
+def _snippet(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)[:60]
+    except Exception:  # pragma: no cover - unparse is total on parsed code
+        return "<expr>"
+
+
+@register
+class HostSyncPass(LintPass):
+    name = "sync"
+    description = ("no host synchronization (np.asarray/.item()/float()/"
+                   "block_until_ready/.to_host()) on device values in "
+                   "functions reachable from step()")
+
+    def __init__(self) -> None:
+        self._funcs: list[_Func] = []
+        self._ctors: dict[str, str] = {}
+
+    def check_module(self, mod: Module) -> Iterable[Finding]:
+        if is_hot_module(mod.relpath):
+            funcs, ctors = _collect_functions(mod)
+            self._funcs.extend(funcs)
+            self._ctors.update(ctors)
+        return ()
+
+    # -- call-graph reachability over the audited modules ----------------
+
+    def _reachable(self) -> list[_Func]:
+        by_name: dict[str, list[_Func]] = {}
+        for f in self._funcs:
+            by_name.setdefault(f.node.name, []).append(f)
+        work = [f for f in self._funcs if f.node.name in ROOT_NAMES]
+        seen = {id(f.node): f for f in work}
+        while work:
+            cur = work.pop()
+            for callee in cur.calls:
+                if callee in self._ctors:
+                    callee = "__init__"
+                for nxt in by_name.get(callee, ()):
+                    if id(nxt.node) not in seen:
+                        seen[id(nxt.node)] = nxt
+                        work.append(nxt)
+        return list(seen.values())
+
+    def finish(self) -> Iterable[Finding]:
+        out: list[Finding] = []
+        for f in self._reachable():
+            out.extend(self._audit(f))
+        return out
+
+    # -- per-function site detection -------------------------------------
+
+    def _audit(self, f: _Func) -> Iterable[Finding]:
+        taint = _Taint(f.node)
+        nested = {id(n) for sub in ast.iter_child_nodes(f.node)
+                  for n in ast.walk(sub)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and n is not f.node}
+        skip: set[int] = set()
+        for n in ast.walk(f.node):
+            if id(n) in nested:
+                skip.update(id(s) for s in ast.walk(n))
+
+        def finding(node: ast.AST, code: str, what: str) -> Finding:
+            return Finding(
+                f.module.relpath, node.lineno, code, self.name,
+                f"{what} in hot function {f.qualname} "
+                f"[{_snippet(node)}]")
+
+        for node in ast.walk(f.node):
+            if id(node) in skip or not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func)
+            if dn == "jax.block_until_ready" or (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "block_until_ready"):
+                yield finding(node, "SYNC001", "block_until_ready")
+                continue
+            if dn and dn.startswith(_NP_PREFIXES) \
+                    and dn.split(".", 1)[1] in ("asarray", "array"):
+                if node.args and (taint.expr(node.args[0])
+                                  or _contains_device_call(node.args[0])):
+                    yield finding(node, "SYNC002",
+                                  "np.asarray on device value")
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                yield finding(node, "SYNC003", ".item() device scalar pull")
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "to_host":
+                yield finding(node, "SYNC004", ".to_host() payload staging")
+                continue
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int") \
+                    and len(node.args) == 1 \
+                    and (taint.expr(node.args[0])
+                         or _contains_device_call(node.args[0])):
+                yield finding(node, "SYNC005",
+                              f"{node.func.id}() on device value")

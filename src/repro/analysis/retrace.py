@@ -1,0 +1,175 @@
+"""Retrace lint (pass ``retrace``): jit surfaces must be shared and
+hashable.
+
+PR 2 established the shared-jit convention (one module-level jitted
+callable per step shape, reused across workers) and PR 3 made specs
+hashable precisely so they can key jit entries (``static_argnames``).
+Violations recompile per instance or retrace per call — the classic
+silent 100x serving slowdown.  Checks, over every scanned module:
+
+  RET001  jax.jit created inside a function or class body (instance- or
+          call-scoped jit: each construction compiles its own cache)
+  RET002  static_argnames entry that is not a parameter of the jitted
+          function (jax raises only when the arg is actually passed)
+  RET003  static parameter annotated with an unhashable type
+          (list/dict/set/ndarray/Array cannot key a jit cache)
+  RET004  jax.jit(lambda ...): unnameable, unshareable jit entry
+
+Intentional exceptions (one-shot launchers whose shardings depend on a
+runtime mesh) carry ``# lint: retrace(reason)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .lint import Finding, LintPass, Module, dotted_name, register
+
+_UNHASHABLE = {"list", "dict", "set", "bytearray", "ndarray", "Array",
+               "DeviceArray"}
+
+
+def _jit_refs(mod: Module) -> list[ast.AST]:
+    """Every Name/Attribute node referring to jax.jit (``jax.jit`` always;
+    bare ``jit`` only when imported from jax)."""
+    bare_jit = any(
+        isinstance(n, ast.ImportFrom) and n.module == "jax"
+        and any(a.name == "jit" for a in n.names)
+        for n in ast.walk(mod.tree))
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Attribute) and dotted_name(node) == "jax.jit":
+            out.append(node)
+        elif bare_jit and isinstance(node, ast.Name) and node.id == "jit" \
+                and isinstance(node.ctx, ast.Load):
+            out.append(node)
+    return out
+
+
+def _scope(node: ast.AST) -> ast.AST | None:
+    """Nearest function/class body enclosing ``node`` — decorator position
+    does NOT count as inside the decorated def (decorator linenos precede
+    the def's lineno)."""
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            if node.lineno >= cur.lineno:       # not one of its decorators
+                return cur
+        cur = getattr(cur, "parent", None)
+    return None
+
+
+def _options_call(node: ast.AST) -> ast.Call | None:
+    """The Call carrying jit options for this jit reference:
+    ``jax.jit(f, static_argnames=...)`` (node is func) or
+    ``functools.partial(jax.jit, static_argnames=...)`` (node is arg)."""
+    parent = getattr(node, "parent", None)
+    if not isinstance(parent, ast.Call):
+        return None
+    if parent.func is node:
+        return parent
+    pf = dotted_name(parent.func)
+    if node in parent.args and pf in ("functools.partial", "partial"):
+        return parent
+    return None
+
+
+def _decorated_def(node: ast.AST) -> ast.FunctionDef | None:
+    """The function whose decorator list this jit reference sits in."""
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.lineno < cur.lineno:
+            return cur
+        cur = getattr(cur, "parent", None)
+    return None
+
+
+def _static_names(call: ast.Call) -> list[tuple[str, ast.AST]]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            if kw.arg == "static_argnums":
+                return []                       # positional: not checkable
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            return [(e.value, e) for e in elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value,
+                                                                  str)]
+    return []
+
+
+def _params(fn: ast.FunctionDef) -> dict[str, ast.arg]:
+    a = fn.args
+    out = {}
+    for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        out[arg.arg] = arg
+    return out
+
+
+def _unhashable_annotation(arg: ast.arg) -> str | None:
+    ann = arg.annotation
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Subscript):          # list[int], dict[str, int]
+        ann = ann.value
+    name = dotted_name(ann)
+    if name and name.split(".")[-1] in _UNHASHABLE:
+        return name
+    return None
+
+
+@register
+class RetracePass(LintPass):
+    name = "retrace"
+    description = ("jit at module scope only, static_argnames entries must "
+                   "be hashable-typed parameters of the jitted callable")
+
+    def check_module(self, mod: Module) -> Iterable[Finding]:
+        module_defs = {
+            n.name: n for n in ast.iter_child_nodes(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+        for ref in _jit_refs(mod):
+            scope = _scope(ref)
+            if scope is not None:
+                kind = ("class" if isinstance(scope, ast.ClassDef)
+                        else "function")
+                yield Finding(
+                    mod.relpath, ref.lineno, "RET001", self.name,
+                    f"jax.jit created inside {kind} {scope.name}: jitted "
+                    f"callables must live at module scope so every caller "
+                    f"shares one compile cache")
+
+            call = _options_call(ref)
+            target: ast.FunctionDef | None = _decorated_def(ref)
+            if call is not None and call.func is ref and call.args:
+                first = call.args[0]
+                if isinstance(first, ast.Lambda):
+                    yield Finding(
+                        mod.relpath, first.lineno, "RET004", self.name,
+                        "jax.jit(lambda ...): unnameable jit entry — "
+                        "define and jit a module-level function")
+                    target = None
+                elif isinstance(first, ast.Name):
+                    target = module_defs.get(first.id, target)
+
+            if call is None or target is None:
+                continue
+            params = _params(target)
+            for sname, snode in _static_names(call):
+                if sname not in params:
+                    yield Finding(
+                        mod.relpath, snode.lineno, "RET002", self.name,
+                        f"static_argnames entry {sname!r} is not a "
+                        f"parameter of {target.name}() "
+                        f"(has: {', '.join(params) or 'none'})")
+                else:
+                    bad = _unhashable_annotation(params[sname])
+                    if bad:
+                        yield Finding(
+                            mod.relpath, params[sname].lineno, "RET003",
+                            self.name,
+                            f"static parameter {sname!r} of {target.name}()"
+                            f" is annotated {bad}, which is unhashable and "
+                            f"cannot key a jit cache")

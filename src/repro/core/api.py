@@ -58,8 +58,10 @@ _UNSET = object()
 _LEGACY_KEYS = ("num_values", "lam", "lam2", "weighted", "clip", "seed")
 
 
-def resolve_spec(spec=None, *, method=_UNSET, num_values=_UNSET, lam=_UNSET,
-                 lam2=_UNSET, weighted=_UNSET, clip=_UNSET, seed=_UNSET,
+def resolve_spec(spec: QuantSpec | str | None = None, *, method: Any = _UNSET,
+                 num_values: Any = _UNSET, lam: Any = _UNSET,
+                 lam2: Any = _UNSET, weighted: Any = _UNSET,
+                 clip: Any = _UNSET, seed: Any = _UNSET,
                  _warn_stacklevel: int = 3) -> QuantSpec:
     """Coerce (spec | spec-string | legacy kwargs) to a validated QuantSpec.
 
@@ -99,8 +101,10 @@ def resolve_spec(spec=None, *, method=_UNSET, num_values=_UNSET, lam=_UNSET,
     return out
 
 
-def quantize(w, spec=None, *, method=_UNSET, num_values=_UNSET, lam=_UNSET,
-             lam2=_UNSET, weighted=_UNSET, clip=_UNSET, seed=_UNSET,
+def quantize(w: Any, spec: QuantSpec | str | None = None, *,
+             method: Any = _UNSET, num_values: Any = _UNSET, lam: Any = _UNSET,
+             lam2: Any = _UNSET, weighted: Any = _UNSET, clip: Any = _UNSET,
+             seed: Any = _UNSET,
              **kw: Any) -> tuple[types.QuantizedTensor, dict]:
     """Quantize any array into a value-shared QuantizedTensor.
 

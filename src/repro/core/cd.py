@@ -22,16 +22,18 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from .problem import LSQProblem, reconstruct
 
 
-def _soft(g, lam):
+def _soft(g: jax.Array, lam: jax.Array) -> jax.Array:
     return jnp.sign(g) * jnp.maximum(jnp.abs(g) - lam, 0.0)
 
 
-def cd_sweep(alpha, problem: LSQProblem, lam1_vec, lam2: float):
+def cd_sweep(alpha: jax.Array, problem: LSQProblem, lam1_vec: jax.Array,
+             lam2: float) -> tuple[jax.Array, jax.Array]:
     """One full cyclic CD sweep. Returns (alpha_new, max |delta|)."""
     w, d, n, z, N = problem.w_hat, problem.d, problem.counts, problem.z, problem.n_suffix
     r0 = w - reconstruct(alpha, d)
@@ -39,7 +41,10 @@ def cd_sweep(alpha, problem: LSQProblem, lam1_vec, lam2: float):
 
     denom = z - 2.0 * lam2  # must be > 0 (validated by caller); == z for lasso
 
-    def body(carry, xs):
+    def body(carry: tuple[jax.Array, jax.Array],
+             xs: tuple[jax.Array, ...],
+             ) -> tuple[tuple[jax.Array, jax.Array],
+                        tuple[jax.Array, jax.Array]]:
         S, c = carry
         w_k, d_k, n_k, z_k, N_k, lam_k, den_k, a_old = xs
         g = d_k * S + z_k * a_old
@@ -62,11 +67,11 @@ def cd_solve(
     lam1: float,
     lam2: float = 0.0,
     *,
-    alpha0=None,
+    alpha0: jax.Array | None = None,
     max_sweeps: int = 200,
     tol: float = 1e-7,
     penalize_first: bool = True,
-):
+) -> tuple[jax.Array, jax.Array]:
     """Solve eq. 6 (lam2=0) or eq. 13 (lam2>0) by cyclic CD.
 
     Returns (alpha, n_sweeps). alpha has exact zeros on the pruned support.
@@ -81,11 +86,12 @@ def cd_solve(
     # scale tolerance to the data so convergence is size-independent
     scale = jnp.maximum(jnp.max(jnp.abs(problem.w_hat)), 1e-12)
 
-    def cond(state):
+    def cond(state: tuple[jax.Array, jax.Array, jax.Array]) -> jax.Array:
         _, sweep, max_delta = state
         return jnp.logical_and(sweep < max_sweeps, max_delta > tol * scale)
 
-    def step(state):
+    def step(state: tuple[jax.Array, jax.Array, jax.Array],
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
         alpha, sweep, _ = state
         alpha, max_delta = cd_sweep(alpha, problem, lam1_vec, lam2)
         return alpha, sweep + 1, max_delta
@@ -102,16 +108,16 @@ def max_stable_lam2(problem: LSQProblem) -> float:
     The paper reports numerical instability when lam2 is 'too large' (§4.1);
     this is the exact threshold (DESIGN.md §8).
     """
-    import numpy as np
-
     return float(0.5 * np.min(np.asarray(problem.z)))
 
 
-def cd_solve_dense_reference(problem: LSQProblem, lam1, lam2=0.0, *, alpha0=None,
-                             max_sweeps=200, tol=1e-7, penalize_first=True):
+def cd_solve_dense_reference(problem: LSQProblem, lam1: float,
+                             lam2: float = 0.0, *,
+                             alpha0: np.ndarray | None = None,
+                             max_sweeps: int = 200, tol: float = 1e-7,
+                             penalize_first: bool = True,
+                             ) -> tuple[np.ndarray, int]:
     """Naive O(m^2)-per-sweep CD on the materialized V. Oracle for tests only."""
-    import numpy as np
-
     w = np.asarray(problem.w_hat).astype(np.float64)
     d = np.asarray(problem.d).astype(np.float64)
     n = np.asarray(problem.counts).astype(np.float64)

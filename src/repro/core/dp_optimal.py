@@ -12,7 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 
-def optimal_kmeans_1d(vals: np.ndarray, counts: np.ndarray, k: int):
+def optimal_kmeans_1d(vals: np.ndarray, counts: np.ndarray, k: int,
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray, float]:
     """Returns (recon (m,), assignment (m,), centers (k',), sse). k' <= k."""
     y = np.asarray(vals, np.float64)
     n = np.asarray(counts, np.float64)
@@ -38,7 +39,7 @@ def optimal_kmeans_1d(vals: np.ndarray, counts: np.ndarray, k: int):
     for layer in range(1, k):
         cur = np.full(m, INF)
 
-        def solve(jlo, jhi, ilo, ihi):
+        def solve(jlo: int, jhi: int, ilo: int, ihi: int) -> None:
             if jlo > jhi:
                 return
             jmid = (jlo + jhi) // 2
@@ -60,7 +61,7 @@ def optimal_kmeans_1d(vals: np.ndarray, counts: np.ndarray, k: int):
     # fewer distinct values can never be better, so use k (or m) segments.
     sse = prev[m - 1] if k > 1 else cost(0, m - 1)
     # backtrack boundaries
-    bounds = []
+    bounds: list[int] = []
     j = m - 1
     for layer in range(k - 1, 0, -1):
         i = int(back[layer, j])

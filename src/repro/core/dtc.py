@@ -19,7 +19,9 @@ from .kmeans import kmeans_1d
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def dtc_quantize_unique(vals, counts, k: int, *, seed: int = 0):
+def dtc_quantize_unique(vals: jax.Array, counts: jax.Array, k: int, *,
+                        seed: int = 0,
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (recon (m,), assignment (m,), centers (k,))."""
     m = vals.shape[0]
     # weighted quantile transform (midpoint rank)

@@ -11,6 +11,7 @@ solution at each lambda (DESIGN.md §5.2).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -20,7 +21,8 @@ from .refit import effective_num_values, refit_support, support_of
 
 
 def iterative_l1(problem: LSQProblem, l: int, *, lam0: float | None = None,
-                 max_iters: int = 60, max_sweeps: int = 200):
+                 max_iters: int = 60, max_sweeps: int = 200,
+                 ) -> tuple[jax.Array, jax.Array, int, int]:
     """Returns (w_star, alpha_star, nnz, iters)."""
     if lam0 is None:
         # relative to the scale of the objective so the ramp is data-independent
@@ -50,7 +52,8 @@ def iterative_l1(problem: LSQProblem, l: int, *, lam0: float | None = None,
     return w_star, alpha_star, nnz, it
 
 
-def tv_iterative(problem: LSQProblem, l: int, *, bisect_steps: int = 40):
+def tv_iterative(problem: LSQProblem, l: int, *, bisect_steps: int = 40,
+                 ) -> tuple[jax.Array, jax.Array, int, int]:
     """Beyond-paper: exact-count targeting via bisection on lambda with the
     exact TV solver. Returns (w_star, alpha_star, nnz, iters)."""
     from .tv_exact import tv_solve_problem

@@ -17,20 +17,23 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def _assign(vals, centers):
+def _assign(vals: jax.Array, centers: jax.Array) -> jax.Array:
     """Interval assignment: cluster id per value, given sorted centers."""
     mid = 0.5 * (centers[1:] + centers[:-1])
     return jnp.searchsorted(mid, vals)
 
 
-def _lloyd(vals, counts, centers0, max_iter: int, tol: float):
+def _lloyd(vals: jax.Array, counts: jax.Array, centers0: jax.Array,
+           max_iter: int, tol: float,
+           ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     k = centers0.shape[0]
 
-    def cond(state):
+    def cond(state: tuple[jax.Array, jax.Array, jax.Array]) -> jax.Array:
         centers, prev, it = state
         return jnp.logical_and(it < max_iter, jnp.max(jnp.abs(centers - prev)) > tol)
 
-    def step(state):
+    def step(state: tuple[jax.Array, jax.Array, jax.Array],
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
         centers, _, it = state
         idx = _assign(vals, centers)
         num = jax.ops.segment_sum(counts * vals, idx, num_segments=k)
@@ -47,7 +50,8 @@ def _lloyd(vals, counts, centers0, max_iter: int, tol: float):
     return centers, idx, inertia, iters
 
 
-def _kmeanspp(vals, counts, k: int, key):
+def _kmeanspp(vals: jax.Array, counts: jax.Array, k: int,
+              key: jax.Array) -> jax.Array:
     """Weighted k-means++ seeding."""
     m = vals.shape[0]
     key, sub = jax.random.split(key)
@@ -55,7 +59,9 @@ def _kmeanspp(vals, counts, k: int, key):
     centers = jnp.full((k,), vals[first])
     d2 = (vals - vals[first]) ** 2
 
-    def body(carry, key_i):
+    def body(carry: tuple[jax.Array, jax.Array, jax.Array],
+             key_i: jax.Array,
+             ) -> tuple[tuple[jax.Array, jax.Array, jax.Array], None]:
         centers, d2, i = carry
         logits = jnp.log(jnp.maximum(counts * d2, 1e-30))
         nxt = jax.random.categorical(key_i, logits)
@@ -69,8 +75,9 @@ def _kmeanspp(vals, counts, k: int, key):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "restarts", "max_iter"))
-def kmeans_1d(vals, counts, k: int, *, seed: int = 0, restarts: int = 10,
-              max_iter: int = 300, tol: float = 1e-7):
+def kmeans_1d(vals: jax.Array, counts: jax.Array, k: int, *, seed: int = 0,
+              restarts: int = 10, max_iter: int = 300, tol: float = 1e-7,
+              ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Weighted 1-D k-means. Returns (centers (k,), assignment (m,), inertia, iters).
 
     vals must be sorted ascending (unique values); counts are multiplicities
@@ -78,7 +85,8 @@ def kmeans_1d(vals, counts, k: int, *, seed: int = 0, restarts: int = 10,
     """
     keys = jax.random.split(jax.random.PRNGKey(seed), restarts)
 
-    def one(key):
+    def one(key: jax.Array,
+            ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
         c0 = _kmeanspp(vals, counts, k, key)
         return _lloyd(vals, counts, c0, max_iter, tol)
 
@@ -87,8 +95,10 @@ def kmeans_1d(vals, counts, k: int, *, seed: int = 0, restarts: int = 10,
     return centers[best], idx[best], inertia[best], jnp.sum(iters)
 
 
-def kmeans_quantize_unique(vals, counts, k: int, *, seed: int = 0, restarts: int = 10,
-                           max_iter: int = 300):
+def kmeans_quantize_unique(
+        vals: jax.Array, counts: jax.Array, k: int, *, seed: int = 0,
+        restarts: int = 10, max_iter: int = 300,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Reconstruction on unique values using plain k-means centroids."""
     centers, idx, inertia, iters = kmeans_1d(vals, counts, k, seed=seed,
                                              restarts=restarts, max_iter=max_iter)

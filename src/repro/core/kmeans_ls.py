@@ -10,6 +10,7 @@ tests to prove equivalence.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -19,7 +20,8 @@ from .refit import refit_support
 
 
 def kmeans_ls_quantize(problem: LSQProblem, l: int, *, seed: int = 0,
-                       restarts: int = 10, max_iter: int = 300):
+                       restarts: int = 10, max_iter: int = 300,
+                       ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Returns (w_star, alpha_star, assignment, iters)."""
     vals, counts = problem.w_hat, problem.counts
     _, idx, _, iters = kmeans_1d(vals, counts, l, seed=seed, restarts=restarts,
@@ -31,7 +33,8 @@ def kmeans_ls_quantize(problem: LSQProblem, l: int, *, seed: int = 0,
     return w_star, alpha_star, idx, iters
 
 
-def kmeans_ls_dense_reference(problem: LSQProblem, assignment) -> np.ndarray:
+def kmeans_ls_dense_reference(problem: LSQProblem,
+                              assignment: np.ndarray) -> np.ndarray:
     """Oracle: materialize E and V-hat* exactly as eq. 18-20 and solve."""
     w = np.asarray(problem.w_hat).astype(np.float64)
     n = np.asarray(problem.counts).astype(np.float64)

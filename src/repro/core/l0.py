@@ -20,10 +20,14 @@ from jax import lax
 from .problem import LSQProblem, reconstruct
 
 
-def l0_sweep(alpha, problem: LSQProblem, gamma):
+def l0_sweep(alpha: jax.Array, problem: LSQProblem,
+             gamma: jax.Array) -> tuple[jax.Array, jax.Array]:
     w, d, n, z, N = problem.w_hat, problem.d, problem.counts, problem.z, problem.n_suffix
 
-    def body(carry, xs):
+    def body(carry: tuple[jax.Array, jax.Array],
+             xs: tuple[jax.Array, ...],
+             ) -> tuple[tuple[jax.Array, jax.Array],
+                        tuple[jax.Array, jax.Array]]:
         S, c = carry
         w_k, d_k, n_k, z_k, N_k, a_old = xs
         g = d_k * S + z_k * a_old
@@ -44,18 +48,20 @@ def l0_sweep(alpha, problem: LSQProblem, gamma):
 
 
 @functools.partial(jax.jit, static_argnames=("max_sweeps",))
-def l0_solve(problem: LSQProblem, gamma, *, alpha0=None, max_sweeps: int = 100,
-             tol: float = 1e-7):
+def l0_solve(problem: LSQProblem, gamma: jax.Array, *,
+             alpha0: jax.Array | None = None, max_sweeps: int = 100,
+             tol: float = 1e-7) -> jax.Array:
     m = problem.m
     if alpha0 is None:
         alpha0 = jnp.ones((m,), jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(problem.w_hat)), 1e-12)
 
-    def cond(s):
+    def cond(s: tuple[jax.Array, jax.Array, jax.Array]) -> jax.Array:
         _, it, md = s
         return jnp.logical_and(it < max_sweeps, md > tol * scale)
 
-    def step(s):
+    def step(s: tuple[jax.Array, jax.Array, jax.Array],
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
         a, it, _ = s
         a, md = l0_sweep(a, problem, gamma)
         return a, it + 1, md
@@ -65,7 +71,7 @@ def l0_solve(problem: LSQProblem, gamma, *, alpha0=None, max_sweeps: int = 100,
 
 
 def l0_quantize(problem: LSQProblem, l: int, *, bisect_steps: int = 30,
-                max_sweeps: int = 100):
+                max_sweeps: int = 100) -> tuple[jax.Array, int]:
     """Constrained form: largest support size <= l reachable by gamma bisection.
 
     Returns (alpha, nnz). May return nnz < l (paper: 'non-universal') or fail

@@ -15,14 +15,17 @@ from .kmeans import kmeans_1d
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_iter"))
-def mog_quantize_unique(vals, counts, k: int, *, seed: int = 0, n_iter: int = 100):
+def mog_quantize_unique(vals: jax.Array, counts: jax.Array, k: int, *,
+                        seed: int = 0, n_iter: int = 100,
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (recon (m,), assignment (m,), means (k,))."""
     centers, _, _, _ = kmeans_1d(vals, counts, k, seed=seed, restarts=4)
     n_tot = jnp.sum(counts)
     var0 = jnp.maximum(jnp.sum(counts * (vals - jnp.sum(counts * vals) / n_tot) ** 2) / n_tot, 1e-12)
     state0 = (centers, jnp.full((k,), var0 / k), jnp.full((k,), 1.0 / k))
 
-    def em(state, _):
+    def em(state: tuple[jax.Array, jax.Array, jax.Array], _: None,
+           ) -> tuple[tuple[jax.Array, jax.Array, jax.Array], None]:
         mu, var, pi = state
         # E-step (log domain), counts as fractional repetitions
         logp = (

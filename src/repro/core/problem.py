@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +44,7 @@ class LSQProblem:
         return int(self.w_hat.shape[0])
 
 
-def unique_with_counts(w) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def unique_with_counts(w: Any) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Sorted unique values, multiplicities and inverse indices (host-side)."""
     flat = np.asarray(w).reshape(-1).astype(np.float64)
     vals, inverse, counts = np.unique(flat, return_inverse=True, return_counts=True)
@@ -67,12 +68,13 @@ def make_problem(w_hat: np.ndarray, counts: np.ndarray | None = None, *, weighte
     return LSQProblem(w_hat=f32(w_hat), d=f32(d), counts=f32(n), z=f32(z), n_suffix=f32(n_suffix))
 
 
-def reconstruct(alpha, d):
+def reconstruct(alpha: jax.Array, d: jax.Array) -> jax.Array:
     """w* on unique values: V @ alpha = cumsum(alpha * d)   (paper eq. 11)."""
     return jnp.cumsum(alpha * d)
 
 
-def objective(problem: LSQProblem, alpha, lam1: float, lam2: float = 0.0, *, penalize_first: bool = True):
+def objective(problem: LSQProblem, alpha: jax.Array, lam1: float,
+              lam2: float = 0.0, *, penalize_first: bool = True) -> jax.Array:
     """0.5 * ||sqrt(n) (w_hat - V a)||^2 + lam1 ||a||_1 - lam2 ||a||_2^2."""
     r = problem.w_hat - reconstruct(alpha, problem.d)
     pen = jnp.abs(alpha)

@@ -18,7 +18,8 @@ from .problem import LSQProblem
 
 
 @functools.partial(jax.jit, static_argnames=())
-def refit_support(problem: LSQProblem, support: jnp.ndarray):
+def refit_support(problem: LSQProblem, support: jnp.ndarray,
+                  ) -> tuple[jax.Array, jax.Array]:
     """Optimal piecewise-constant reconstruction given a boolean support mask.
 
     Returns (w_star, alpha_star): reconstruction on unique values (m,) and the
@@ -41,7 +42,8 @@ def refit_support(problem: LSQProblem, support: jnp.ndarray):
     return w_star, alpha_star
 
 
-def refit_support_dense_reference(problem: LSQProblem, support) -> np.ndarray:
+def refit_support_dense_reference(problem: LSQProblem,
+                                  support: np.ndarray) -> np.ndarray:
     """Oracle: materialize V*, solve eq. 9 by lstsq. Tests only."""
     w = np.asarray(problem.w_hat).astype(np.float64)
     d = np.asarray(problem.d).astype(np.float64)
@@ -54,11 +56,11 @@ def refit_support_dense_reference(problem: LSQProblem, support) -> np.ndarray:
     return Vs @ coef
 
 
-def support_of(alpha, tol: float = 1e-10):
+def support_of(alpha: jax.Array, tol: float = 1e-10) -> jax.Array:
     return jnp.abs(alpha) > tol
 
 
-def effective_num_values(support) -> int:
+def effective_num_values(support: np.ndarray | jax.Array) -> int:
     """Distinct values of the reconstruction for a support mask.
 
     If index 0 is off-support, rows before the first support index reconstruct

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,6 +43,9 @@ from .mog import mog_quantize_unique
 from .problem import LSQProblem, reconstruct
 from .refit import refit_support, support_of
 from .tv_exact import tv_solve_problem
+
+if TYPE_CHECKING:
+    from .spec import QuantSpec
 
 
 @dataclasses.dataclass
@@ -71,7 +74,7 @@ class Solver:
     tree_batched: bool = False
     description: str = ""
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         assert self.param_kind in ("lam", "count"), self.param_kind
 
 
@@ -139,19 +142,22 @@ def device_batch_solve(name: str) -> Callable:
 # (max_sweeps, bisect_steps, ...) passed through quantize().
 
 
-def _solve_l1(ctx, spec, **kw):
+def _solve_l1(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     alpha, sweeps = cd_solve(ctx.problem, jnp.float32(spec.lam), **kw)
     ctx.info["sweeps"] = int(sweeps)
     return reconstruct(alpha, ctx.problem.d), alpha
 
 
-def _solve_l1_ls(ctx, spec, **kw):
+def _solve_l1_ls(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     alpha, sweeps = cd_solve(ctx.problem, jnp.float32(spec.lam), **kw)
     ctx.info["sweeps"] = int(sweeps)
     return refit_support(ctx.problem, support_of(alpha))
 
 
-def _solve_l1l2(ctx, spec, **kw):
+def _solve_l1l2(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     lam2 = spec.lam2
     if lam2 is None:
         lam2 = 0.25 * max_stable_lam2(ctx.problem)
@@ -164,38 +170,44 @@ def _solve_l1l2(ctx, spec, **kw):
     return refit_support(ctx.problem, support_of(alpha))
 
 
-def _solve_tv(ctx, spec, **kw):
+def _solve_tv(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     u = tv_solve_problem(ctx.problem, float(spec.lam), **kw)
     support = jnp.asarray(np.abs(np.diff(u, prepend=0.0)) > 1e-10)
     return refit_support(ctx.problem, support)
 
 
-def _solve_l0(ctx, spec, **kw):
+def _solve_l0(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     alpha, nnz = l0_quantize(ctx.problem, ctx.num_values, **kw)
     ctx.info["nnz"] = nnz
     return refit_support(ctx.problem, support_of(alpha))
 
 
-def _solve_iter_l1(ctx, spec, **kw):
+def _solve_iter_l1(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     recon, alpha, nnz, iters = iterative_l1(ctx.problem, ctx.num_values, **kw)
     ctx.info.update(nnz=nnz, iters=iters)
     return recon, alpha
 
 
-def _solve_tv_iter(ctx, spec, **kw):
+def _solve_tv_iter(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     recon, alpha, nnz, iters = tv_iterative(ctx.problem, ctx.num_values, **kw)
     ctx.info.update(nnz=nnz, iters=iters)
     return recon, alpha
 
 
-def _solve_kmeans_ls(ctx, spec, **kw):
+def _solve_kmeans_ls(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     recon, alpha, _, iters = kmeans_ls_quantize(ctx.problem, ctx.num_values,
                                                 seed=spec.seed, **kw)
     ctx.info["lloyd_iters"] = int(iters)
     return recon, alpha
 
 
-def _solve_kmeans(ctx, spec, **kw):
+def _solve_kmeans(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     recon, _, _, inertia, iters = kmeans_quantize_unique(
         ctx.problem.w_hat, ctx.problem.counts, ctx.num_values,
         seed=spec.seed, **kw)
@@ -203,19 +215,22 @@ def _solve_kmeans(ctx, spec, **kw):
     return recon, None
 
 
-def _solve_mog(ctx, spec, **kw):
+def _solve_mog(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     recon, _, _ = mog_quantize_unique(ctx.problem.w_hat, ctx.problem.counts,
                                       ctx.num_values, seed=spec.seed, **kw)
     return recon, None
 
 
-def _solve_dtc(ctx, spec, **kw):
+def _solve_dtc(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     recon, _, _ = dtc_quantize_unique(ctx.problem.w_hat, ctx.problem.counts,
                                       ctx.num_values, seed=spec.seed, **kw)
     return recon, None
 
 
-def _solve_dp(ctx, spec, **kw):
+def _solve_dp(ctx: HostSolveContext, spec: "QuantSpec",
+              **kw: Any) -> tuple[Any, Any]:
     recon, _, _, sse = optimal_kmeans_1d(
         ctx.vals,
         ctx.counts if spec.weighted else np.ones_like(ctx.counts),

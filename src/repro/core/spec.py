@@ -62,7 +62,7 @@ class QuantSpec:
     clip: tuple[float, float] | None = None
     seed: int = 0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         solver = registry.get(self.method)    # raises on unknown method
         _set = object.__setattr__
         if self.num_values is not None:
@@ -120,7 +120,7 @@ class QuantSpec:
         """A batched on-device row solver exists for this method."""
         return self.solver.device_batch is not None
 
-    def replace(self, **kw) -> "QuantSpec":
+    def replace(self, **kw: Any) -> "QuantSpec":
         return dataclasses.replace(self, **kw)
 
     # ------------------------------------------------------ compact string
@@ -128,7 +128,7 @@ class QuantSpec:
         head = self.method
         if self.num_values is not None:
             head += f"@{self.num_values}"
-        opts = []
+        opts: list[str] = []
         if self.lam is not None:
             opts.append(f"lam={_fmt_float(self.lam)}")
         if self.lam2 is not None:
@@ -191,7 +191,7 @@ class QuantSpec:
     # -------------------------------------------------------------- JSON
     def to_json(self) -> dict:
         """Dict form for BENCH_*.json rows (clip as a 2-list)."""
-        d = {"method": self.method}
+        d: dict[str, Any] = {"method": self.method}
         for k, default in _DEFAULTS.items():
             v = getattr(self, k)
             if v != default:
@@ -220,7 +220,7 @@ def _parse_bool(v: str, spec: str) -> bool:
     raise ValueError(f"bad boolean {v!r} in spec {spec!r}")
 
 
-def as_spec(spec, **replace_kw) -> QuantSpec:
+def as_spec(spec: "str | QuantSpec", **replace_kw: Any) -> QuantSpec:
     """Coerce a QuantSpec | compact string to QuantSpec (with optional
     field overrides), for APIs that accept either form."""
     out = QuantSpec.parse(spec)

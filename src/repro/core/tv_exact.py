@@ -14,7 +14,12 @@ Host-side numpy; O(m) time and memory (amortised knot insertion/deletion).
 """
 from __future__ import annotations
 
+from typing import TYPE_CHECKING
+
 import numpy as np
+
+if TYPE_CHECKING:
+    from .problem import LSQProblem
 
 
 def tv1d_weighted(y: np.ndarray, w: np.ndarray, lam_edges: np.ndarray) -> np.ndarray:
@@ -91,7 +96,7 @@ def tv1d_weighted(y: np.ndarray, w: np.ndarray, lam_edges: np.ndarray) -> np.nda
     return u
 
 
-def tv_solve_problem(problem, lam: float) -> np.ndarray:
+def tv_solve_problem(problem: "LSQProblem", lam: float) -> np.ndarray:
     """Exact solution of eq. 6 (penalize_first=False) on an LSQProblem."""
     y = np.asarray(problem.w_hat).astype(np.float64)
     n = np.asarray(problem.counts).astype(np.float64)

@@ -63,11 +63,14 @@ class QuantizedTensor:
         cb = int(np.prod(self.codebook.shape))
         return cb * 4 + (n * self.bits_per_value() + 7) // 8
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> tuple[tuple[jax.Array, jax.Array],
+                                    tuple[tuple, Any]]:
         return (self.codebook, self.indices), (self.shape, self.dtype)
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: tuple[tuple, Any],
+                       children: tuple[jax.Array, jax.Array],
+                       ) -> "QuantizedTensor":
         codebook, indices = children
         shape, dtype = aux
         return cls(codebook=codebook, indices=indices, shape=shape, dtype=dtype)
@@ -101,7 +104,7 @@ def stack_quantized(qts: list[QuantizedTensor]) -> QuantizedTensor:
     so every slice shares one static width for lax.scan."""
     assert len({qt.shape for qt in qts}) == 1, "slices must share a shape"
     L = max(qt.num_values for qt in qts)
-    cbs = []
+    cbs: list[np.ndarray] = []
     for qt in qts:
         cb = np.asarray(qt.codebook, np.float32)
         if cb.shape[0] < L:
@@ -118,6 +121,6 @@ def stack_quantized(qts: list[QuantizedTensor]) -> QuantizedTensor:
     )
 
 
-def hard_sigmoid(x, a: float, b: float):
+def hard_sigmoid(x: jax.Array, a: float, b: float) -> jax.Array:
     """Eq. 21 of the paper: clamp quantized outputs into a legal range [a, b]."""
     return jnp.clip(x, a, b)

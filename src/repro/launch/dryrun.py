@@ -47,6 +47,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool, overrides=None):
     if kind == "train":
         step, opt = make_train_step(cfg, mesh)
         state_shape, state_shard = train_state_specs(cfg, mesh, opt)
+        # lint: retrace(one-shot AOT lowering; shardings need the mesh)
         jit = jax.jit(step, in_shardings=(state_shard, bshard),
                       out_shardings=(state_shard, None), donate_argnums=(0,))
         lowered = jit.lower(state_shape, bspecs)
@@ -59,6 +60,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool, overrides=None):
         cshape = cache_specs(cfg, shape)
         cshard = cache_shardings(mesh, cfg, cshape,
                                  batch_size=SHAPES[shape]["batch"])
+        # lint: retrace(one-shot AOT lowering; shardings need the mesh)
         jit = jax.jit(step, in_shardings=(pshard, bshard),
                       out_shardings=(None, cshard))
         lowered = jit.lower(pshape, bspecs)
@@ -71,6 +73,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool, overrides=None):
         cshape = cache_specs(cfg, shape)
         cshard = cache_shardings(mesh, cfg, cshape,
                                  batch_size=SHAPES[shape]["batch"])
+        # lint: retrace(one-shot AOT lowering; shardings need the mesh)
         jit = jax.jit(step, in_shardings=(pshard, bshard["tokens"], cshard),
                       out_shardings=(bshard["tokens"], cshard),
                       donate_argnums=(2,))

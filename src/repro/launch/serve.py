@@ -154,6 +154,7 @@ def _run_static(args):
 
     from repro import models
     from repro.configs import get_config, get_reduced_config
+    from repro.launch.static_steps import static_decode_step, static_prefill
     from repro.quant.ptq import (compression_ratio, dequantize_tree,
                                  quantize_tree)
 
@@ -171,25 +172,12 @@ def _run_static(args):
     enc = (jax.random.normal(jax.random.PRNGKey(2), (B, P, cfg.d_model))
            if cfg.family == "encdec" else None)
 
-    @jax.jit
-    def prefill(p, toks):
-        cache = models.init_cache(cfg, B, P + G, enc_len=P)
-        batch = {"tokens": toks}
-        if enc is not None:
-            batch["enc_embeds"] = enc
-        logits, cache = models.prefill(p, cfg, batch, cache)
-        return jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32), cache
-
-    @jax.jit
-    def step(p, tok, cache, idx):
-        logits, cache = models.decode_step(p, cfg, tok, cache, idx)
-        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
-
     t0 = time.perf_counter()
-    tok, cache = prefill(params, tokens)
+    tok, cache = static_prefill(params, cfg, tokens, enc, G)
     out = [tok]
     for i in range(G - 1):
-        tok, cache = step(params, tok, cache, jnp.int32(P + i))
+        tok, cache = static_decode_step(params, cfg, tok, cache,
+                                        jnp.int32(P + i))
         out.append(tok)
     gen = jnp.concatenate(out, axis=1).block_until_ready()
     dt = time.perf_counter() - t0

@@ -57,6 +57,7 @@ def main():
              "labels": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)}
     pipe = SyntheticLM(cfg, args.batch, args.seq)
     bshard = batch_shardings(mesh, specs)
+    # lint: retrace(one-shot launcher jit; shardings close over the mesh)
     jit_step = jax.jit(step_fn, in_shardings=(state_shard, bshard),
                        out_shardings=(state_shard, None), donate_argnums=(0,))
 

@@ -18,10 +18,11 @@ from __future__ import annotations
 
 import json
 import time
+from typing import Any, Callable
 
 from repro.analysis.roofline import HBM_BW
 
-from .stats import Counter, Gauge, LogHistogram
+from .stats import Counter, Gauge, LogHistogram, Registry
 
 
 class MetricsExporter:
@@ -29,22 +30,23 @@ class MetricsExporter:
     percentiles. ``path=None`` keeps lines in ``self.lines`` only (tests).
     """
 
-    def __init__(self, path=None, *, interval_s: float = 1.0, clock=None,
-                 registry=None):
+    def __init__(self, path: str | None = None, *, interval_s: float = 1.0,
+                 clock: Callable[[], float] | None = None,
+                 registry: Registry | None = None) -> None:
         self.path = path
         self.interval_s = interval_s
         self.clock = clock if clock is not None else time.perf_counter
         self.registry = registry
         self.lines: list[dict] = []
         self._file = open(path, "w") if path else None
-        self._last_emit = None
+        self._last_emit: float | None = None
         self._hist_states: dict[str, dict] = {}
         self.seq = 0
 
-    def _windowed(self, registry) -> dict:
+    def _windowed(self, registry: Registry) -> dict:
         """p50/p99 over just the interval since the previous emit, from
         histogram counts-deltas (O(buckets), no samples retained)."""
-        out = {}
+        out: dict[str, dict] = {}
         for name in registry.names():
             m = registry[name]
             if not isinstance(m, LogHistogram):
@@ -61,7 +63,7 @@ class MetricsExporter:
                              "p99": m.percentile(99, **delta)}
         return out
 
-    def maybe_emit(self, metrics=None, *, force: bool = False,
+    def maybe_emit(self, metrics: Any = None, *, force: bool = False,
                    extra: dict | None = None) -> dict | None:
         """Emit one snapshot line if ``interval_s`` elapsed (or ``force``).
 
@@ -92,7 +94,7 @@ class MetricsExporter:
             self._file.flush()
         return line
 
-    def close(self, metrics=None) -> None:
+    def close(self, metrics: Any = None) -> None:
         """Final forced snapshot, then release the file."""
         self.maybe_emit(metrics, force=True)
         if self._file is not None:
@@ -114,7 +116,7 @@ def prometheus_text(snapshot: dict, *, prefix: str = "repro") -> str:
     """Render a ``Registry.snapshot()`` / ``MetricsCollector.snapshot()``
     dict as Prometheus text exposition (counters -> _total, gauges ->
     last + _mean/_max, histograms -> quantile-labeled gauges)."""
-    lines = []
+    lines: list[str] = []
     for name in sorted(snapshot):
         v = snapshot[name]
         base = f"{prefix}_{_prom_name(name)}"
@@ -150,7 +152,7 @@ def prometheus_text(snapshot: dict, *, prefix: str = "repro") -> str:
 # ------------------------------------------------------------- roofline
 
 
-def modeled_decode_hbm_bytes(worker) -> dict | None:
+def modeled_decode_hbm_bytes(worker: Any) -> dict | None:
     """Price the KV traffic of the next decode step for a ``DecodeWorker``
     from host state only (no device sync).
 

@@ -20,12 +20,13 @@ metric to plain JSON-safe scalars for the JSONL/Prometheus exporters.
 from __future__ import annotations
 
 import math
+from typing import TypeVar, Union
 
 
 class Counter:
     __slots__ = ("value",)
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.value = 0
 
     def inc(self, n: int = 1) -> None:
@@ -40,8 +41,8 @@ class Gauge:
 
     __slots__ = ("last", "n", "total", "vmin", "vmax")
 
-    def __init__(self):
-        self.last = None
+    def __init__(self) -> None:
+        self.last: float | None = None
         self.n = 0
         self.total = 0.0
         self.vmin = math.inf
@@ -86,7 +87,7 @@ class LogHistogram:
                  "n", "total", "vmin", "vmax")
 
     def __init__(self, lo: float = 1e-7, hi: float = 1e3,
-                 per_decade: int = 16):
+                 per_decade: int = 16) -> None:
         assert 0 < lo < hi
         self.lo, self.hi, self.per_decade = lo, hi, per_decade
         self._log_lo = math.log10(lo)
@@ -130,8 +131,10 @@ class LogHistogram:
         # geometric midpoint of bucket i
         return 10.0 ** (self._log_lo + (i + 0.5) / self.per_decade)
 
-    def percentile(self, p: float, *, counts=None, underflow=None,
-                   overflow=None, n=None) -> float | None:
+    def percentile(self, p: float, *, counts: list[int] | None = None,
+                   underflow: int | None = None,
+                   overflow: int | None = None,
+                   n: int | None = None) -> float | None:
         """p in [0, 100]. Pass the delta fields to answer over a window."""
         counts = self.counts if counts is None else counts
         underflow = self.underflow if underflow is None else underflow
@@ -181,13 +184,18 @@ class LogHistogram:
                 "p99": self.percentile(99)}
 
 
+Metric = Union[Counter, Gauge, LogHistogram]
+_M = TypeVar("_M", Counter, Gauge, LogHistogram)
+
+
 class Registry:
     """Flat name -> metric map with get-or-create accessors."""
 
-    def __init__(self):
-        self._metrics: dict[str, object] = {}
+    def __init__(self) -> None:
+        self._metrics: dict[str, Metric] = {}
 
-    def _get(self, name: str, cls, *args, **kw):
+    def _get(self, name: str, cls: type[_M], *args: object,
+             **kw: object) -> _M:
         m = self._metrics.get(name)
         if m is None:
             m = self._metrics[name] = cls(*args, **kw)
@@ -200,13 +208,13 @@ class Registry:
     def gauge(self, name: str) -> Gauge:
         return self._get(name, Gauge)
 
-    def histogram(self, name: str, **kw) -> LogHistogram:
+    def histogram(self, name: str, **kw: object) -> LogHistogram:
         return self._get(name, LogHistogram, **kw)
 
     def __contains__(self, name: str) -> bool:
         return name in self._metrics
 
-    def __getitem__(self, name: str):
+    def __getitem__(self, name: str) -> Metric:
         return self._metrics[name]
 
     def names(self) -> list[str]:

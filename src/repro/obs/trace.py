@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import json
 import time
+from typing import Any, Callable, Iterable
 
 
 class FakeClock:
@@ -49,7 +50,7 @@ class FakeClock:
     its event sequence — byte-identical across runs and platforms.
     """
 
-    def __init__(self, tick: float = 0.001, t0: float = 0.0):
+    def __init__(self, tick: float = 0.001, t0: float = 0.0) -> None:
         self.tick = tick
         self._t = t0
 
@@ -62,10 +63,10 @@ class FakeClock:
 class _NullSpan:
     __slots__ = ()
 
-    def __enter__(self):
+    def __enter__(self) -> "_NullSpan":
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, *exc: object) -> bool:
         return False
 
 
@@ -82,31 +83,35 @@ class NullTracer:
     def now(self) -> float:
         return 0.0
 
-    def span(self, track, name, **args):
+    def span(self, track: str, name: str, **args: Any) -> "_NullSpan":
         return _NULL_SPAN
 
-    def complete(self, track, name, t0, **args) -> None:
+    def complete(self, track: str, name: str, t0: float,
+                 **args: Any) -> None:
         pass
 
-    def instant(self, track, name, **args) -> None:
+    def instant(self, track: str, name: str, **args: Any) -> None:
         pass
 
-    def counter(self, track, name, **values) -> None:
+    def counter(self, track: str, name: str, **values: Any) -> None:
         pass
 
-    def async_begin(self, track, name, id, **args) -> None:
+    def async_begin(self, track: str, name: str, id: Any,
+                    **args: Any) -> None:
         pass
 
-    def async_instant(self, track, name, id, **args) -> None:
+    def async_instant(self, track: str, name: str, id: Any,
+                      **args: Any) -> None:
         pass
 
-    def async_end(self, track, name, id, **args) -> None:
+    def async_end(self, track: str, name: str, id: Any,
+                  **args: Any) -> None:
         pass
 
     def to_dict(self) -> dict:
         return {"traceEvents": [], "displayTimeUnit": "ms"}
 
-    def write(self, path) -> None:
+    def write(self, path: str) -> None:
         pass
 
 
@@ -118,14 +123,15 @@ class _Span:
 
     __slots__ = ("tr", "track", "name", "args", "t0")
 
-    def __init__(self, tr, track, name, args):
+    def __init__(self, tr: "Tracer", track: str, name: str,
+                 args: dict[str, Any]) -> None:
         self.tr, self.track, self.name, self.args = tr, track, name, args
 
-    def __enter__(self):
+    def __enter__(self) -> "_Span":
         self.t0 = self.tr.clock()
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, *exc: object) -> bool:
         self.tr._emit_complete(self.track, self.name, self.t0,
                                self.tr.clock(), self.args)
         return False
@@ -137,7 +143,8 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, clock=None, *, pid: int = 0):
+    def __init__(self, clock: Callable[[], float] | None = None, *,
+                 pid: int = 0) -> None:
         self.clock = clock if clock is not None else time.perf_counter
         self.pid = pid
         self._t0 = self.clock()
@@ -161,7 +168,8 @@ class Tracer:
 
     # ------------------------------------------------------------ events
 
-    def _emit_complete(self, track, name, t0, t1, args) -> None:
+    def _emit_complete(self, track: str, name: str, t0: float, t1: float,
+                       args: dict[str, Any]) -> None:
         ev = {"ph": "X", "name": name, "pid": self.pid,
               "tid": self._tid(track), "ts": self._us(t0),
               "dur": round((t1 - t0) * 1e6, 3)}
@@ -169,27 +177,29 @@ class Tracer:
             ev["args"] = args
         self.events.append(ev)
 
-    def span(self, track: str, name: str, **args) -> _Span:
+    def span(self, track: str, name: str, **args: Any) -> _Span:
         return _Span(self, track, name, args)
 
-    def complete(self, track: str, name: str, t0: float, **args) -> None:
+    def complete(self, track: str, name: str, t0: float,
+                 **args: Any) -> None:
         """Close an explicitly-timed region opened at ``t0 = tracer.now()``
         — for spans whose args (payload bytes, ...) exist only at the end."""
         self._emit_complete(track, name, t0, self.clock(), args)
 
-    def instant(self, track: str, name: str, **args) -> None:
+    def instant(self, track: str, name: str, **args: Any) -> None:
         ev = {"ph": "i", "s": "t", "name": name, "pid": self.pid,
               "tid": self._tid(track), "ts": self._us(self.clock())}
         if args:
             ev["args"] = args
         self.events.append(ev)
 
-    def counter(self, track: str, name: str, **values) -> None:
+    def counter(self, track: str, name: str, **values: Any) -> None:
         self.events.append({"ph": "C", "name": name, "pid": self.pid,
                             "tid": self._tid(track),
                             "ts": self._us(self.clock()), "args": values})
 
-    def _async(self, ph, track, name, id, args) -> None:
+    def _async(self, ph: str, track: str, name: str, id: Any,
+               args: dict[str, Any]) -> None:
         ev = {"ph": ph, "cat": track, "name": name, "id": str(id),
               "pid": self.pid, "tid": self._tid(track),
               "ts": self._us(self.clock())}
@@ -197,13 +207,16 @@ class Tracer:
             ev["args"] = args
         self.events.append(ev)
 
-    def async_begin(self, track: str, name: str, id, **args) -> None:
+    def async_begin(self, track: str, name: str, id: Any,
+                    **args: Any) -> None:
         self._async("b", track, name, id, args)
 
-    def async_instant(self, track: str, name: str, id, **args) -> None:
+    def async_instant(self, track: str, name: str, id: Any,
+                      **args: Any) -> None:
         self._async("n", track, name, id, args)
 
-    def async_end(self, track: str, name: str, id, **args) -> None:
+    def async_end(self, track: str, name: str, id: Any,
+                  **args: Any) -> None:
         self._async("e", track, name, id, args)
 
     # ------------------------------------------------------------ output
@@ -223,7 +236,7 @@ class Tracer:
         return {"traceEvents": self._metadata() + self.events,
                 "displayTimeUnit": "ms"}
 
-    def write(self, path) -> None:
+    def write(self, path: str) -> None:
         """Write Perfetto-loadable JSON. ``sort_keys`` + fixed separators
         keep the bytes deterministic for the fake-clock golden tests."""
         with open(path, "w") as f:
@@ -234,15 +247,16 @@ class Tracer:
 # ------------------------------------------------------------ inspection
 
 
-def count_events(events, *, track: str | None = None, name: str | None = None,
-                 ph: str | None = None) -> int:
+def count_events(events: Iterable[dict], *, track: str | None = None,
+                 name: str | None = None, ph: str | None = None) -> int:
     """Count events matching the filters (trace-vs-counter reconciliation;
     ``track`` matches the async ``cat`` field or is resolved by callers that
     hold the tracer via ``select_events``)."""
     return len(select_events(events, track=track, name=name, ph=ph))
 
 
-def select_events(events, *, track: str | None = None, name: str | None = None,
+def select_events(events: Iterable[dict], *, track: str | None = None,
+                  name: str | None = None,
                   ph: str | None = None) -> list[dict]:
     out = []
     for ev in events:

@@ -149,6 +149,7 @@ class DraftWorker:
         logits, new = self._window_fn(self.params, jnp.asarray(toks), tree,
                                       jnp.asarray(self.lens))
         self.tree = merge_pools(self.tree, new)
+        # lint: sync(draft tokens feed the host-side proposal loop)
         return np.asarray(jnp.argmax(logits, -1))          # (B, W)
 
     def propose(self, active, slots, k: int) -> dict[int, list[int]]:

@@ -1,0 +1,472 @@
+"""Fixture tests for the repro.analysis lint suite.
+
+Each pass gets good/bad fixture pairs asserting exact finding codes and
+line numbers, pragma suppression is exercised per pass, the baseline
+round-trips, and a self-check asserts the repo itself scans clean (the
+same invariant the CI fast-lane gate enforces).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis import lint
+from repro.analysis.counters import CounterNamePass
+from repro.analysis.hostsync import HostSyncPass
+from repro.analysis.retrace import RetracePass
+from repro.analysis.spans import SpanLifecyclePass
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+HOT_PATH = "fx/serving/workers.py"       # matches a hostsync HOT_SUFFIX
+AUDITED_PATH = "fx/serving/metrics.py"   # matches a counters audit marker
+COLD_PATH = "fx/launch/tool.py"
+
+
+def run_src(src, relpath=HOT_PATH, passes=None):
+    src = textwrap.dedent(src).lstrip("\n")
+    mod = lint.Module(Path(relpath), relpath, src)
+    return lint.run_passes([mod], passes)
+
+
+def line_of(src, needle):
+    """1-based line of the first source line containing ``needle``."""
+    src = textwrap.dedent(src).lstrip("\n")
+    for i, ln in enumerate(src.splitlines(), start=1):
+        if needle in ln:
+            return i
+    raise AssertionError(f"needle {needle!r} not in fixture")
+
+
+def codes(findings):
+    return sorted((f.code, f.line) for f in findings)
+
+
+# ------------------------------------------------------------------ sync
+
+SYNC_BAD = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class W:
+    def step(self):
+        logits = self.decode_fn(self.tok)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        jax.block_until_ready(logits)
+        v = logits.item()
+        self.payload.to_host()
+        x = float(jnp.max(logits))
+        return nxt, v, x
+"""
+
+
+def test_sync_codes_and_lines():
+    findings = run_src(SYNC_BAD, passes=[HostSyncPass])
+    assert codes(findings) == [
+        ("SYNC001", line_of(SYNC_BAD, "block_until_ready")),
+        ("SYNC002", line_of(SYNC_BAD, "np.asarray")),
+        ("SYNC003", line_of(SYNC_BAD, ".item()")),
+        ("SYNC004", line_of(SYNC_BAD, ".to_host()")),
+        ("SYNC005", line_of(SYNC_BAD, "float(")),
+    ]
+    for f in findings:
+        assert "W.step" in f.message  # names the hot function, not a line
+
+
+def test_sync_only_fires_on_step_reachable_functions():
+    src = """
+    import jax.numpy as jnp
+    import numpy as np
+
+
+    class W:
+        def cold_admin_path(self):
+            return np.asarray(jnp.zeros((2,)))
+    """
+    assert run_src(src, passes=[HostSyncPass]) == []
+
+
+def test_sync_reaches_through_the_call_graph():
+    src = """
+    import jax.numpy as jnp
+    import numpy as np
+
+
+    class W:
+        def step(self):
+            return self.helper()
+
+        def helper(self):
+            return np.asarray(jnp.zeros((2,)))
+    """
+    (f,) = run_src(src, passes=[HostSyncPass])
+    assert f.code == "SYNC002"
+    assert "W.helper" in f.message
+
+
+def test_sync_host_only_numpy_is_clean():
+    src = """
+    import numpy as np
+
+
+    class W:
+        def step(self, ids):
+            return np.asarray(sorted(ids))
+    """
+    assert run_src(src, passes=[HostSyncPass]) == []
+
+
+def test_sync_ignores_non_hot_modules():
+    assert run_src(SYNC_BAD, relpath=COLD_PATH, passes=[HostSyncPass]) == []
+
+
+# --------------------------------------------------------------- retrace
+
+RETRACE_BAD = """
+import functools
+
+import jax
+
+
+def step(params, cfg):
+    return params
+
+
+def make_worker(mesh):
+    return jax.jit(step, static_argnames=("cfg",))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "oops"))
+def prefill(params, cfg: int):
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("tbl",))
+def decode(params, tbl: list):
+    return params
+
+
+doubler = jax.jit(lambda x: x * 2)
+"""
+
+
+def test_retrace_codes_and_lines():
+    findings = run_src(RETRACE_BAD, relpath=COLD_PATH, passes=[RetracePass])
+    assert codes(findings) == [
+        ("RET001", line_of(RETRACE_BAD, 'jax.jit(step')),
+        ("RET002", line_of(RETRACE_BAD, '"oops"')),
+        ("RET003", line_of(RETRACE_BAD, "tbl: list")),
+        ("RET004", line_of(RETRACE_BAD, "lambda x")),
+    ]
+
+
+def test_retrace_module_scope_jit_is_clean():
+    src = """
+    import functools
+
+    import jax
+
+
+    @functools.partial(jax.jit, static_argnames=("cfg",))
+    def step(params, cfg: int):
+        return params
+
+
+    other = jax.jit(step, static_argnames=("cfg",))
+    """
+    assert run_src(src, relpath=COLD_PATH, passes=[RetracePass]) == []
+
+
+def test_retrace_bare_jit_needs_the_import():
+    src = """
+    def jit(f):
+        return f
+
+
+    def make():
+        return jit(lambda x: x)
+    """
+    assert run_src(src, relpath=COLD_PATH, passes=[RetracePass]) == []
+
+
+# ------------------------------------------------------------------ span
+
+# page_freeze deliberately never closes with "offloaded" (a removed
+# terminal state), plus one typo'd state and one non-literal state.
+SPAN_BAD = """
+def freeze(tr, sid):
+    tr.async_begin("w0", "page_freeze", sid)
+    tr.async_end("w0", "page_freeze", sid, state="installed")
+    tr.async_end("w0", "page_freeze", sid, state="dropped")
+    tr.async_end("w0", "page_freeze", sid, state="rolled_back")
+    tr.async_end("w0", "page_freeze", sid, state="zombie")
+    tr.async_end("w0", "page_freeze", sid, state=mode)
+    tr.async_begin("w0", "orphan", sid)
+    tr.async_end("w0", "ghost", sid)
+"""
+
+
+def test_span_codes_and_lines():
+    findings = run_src(SPAN_BAD, relpath=COLD_PATH,
+                       passes=[SpanLifecyclePass])
+    begin_line = line_of(SPAN_BAD, 'async_begin("w0", "page_freeze"')
+    assert codes(findings) == [
+        ("SPAN001", begin_line),                        # missing "offloaded"
+        ("SPAN001", line_of(SPAN_BAD, '"zombie"')),     # undeclared state
+        ("SPAN002", line_of(SPAN_BAD, "state=mode")),   # non-literal state
+        ("SPAN003", line_of(SPAN_BAD, '"orphan"')),
+        ("SPAN004", line_of(SPAN_BAD, '"ghost"')),
+    ]
+    missing = [f for f in findings if f.line == begin_line]
+    assert "offloaded" in missing[0].message
+
+
+def test_span_complete_machine_is_clean():
+    src = """
+    def freeze(tr, sid):
+        tr.async_begin("w0", "page_freeze", sid)
+        tr.async_end("w0", "page_freeze", sid, state="installed")
+        tr.async_end("w0", "page_freeze", sid, state="dropped")
+        tr.async_end("w0", "page_freeze", sid, state="rolled_back")
+        tr.async_end("w0", "page_freeze", sid, state="offloaded")
+        tr.async_begin("w0", "page_offload", sid)
+        tr.async_end("w0", "page_offload", sid, state="restored")
+        tr.async_begin("w0", "plain_span", sid)
+        tr.async_end("w0", "plain_span", sid)
+    """
+    assert run_src(src, relpath=COLD_PATH, passes=[SpanLifecyclePass]) == []
+
+
+# --------------------------------------------------------------- counter
+
+COUNTER_BAD = """
+class Worker:
+    def __init__(self):
+        self.counters = {"tokens": 0}
+
+    def summary(self):
+        out = {"spec_steps": 1}
+        out["extra"] = 2
+        return out
+
+
+def ingest(stats, sched):
+    stats.gauge("hbm_bytes_per_token").set(1.0)
+    sched.admission("backpressure")
+
+
+def report(s, stats):
+    ok = (s.get("tokens", 0), s.get("spec_steps", 0), s.get("extra", 0),
+          s.get("backpressure", 0))
+    h = stats.histogram("hbm_bytes_per_token")
+    bad = s.get("typo_key", 0)
+    worse = stats.gauge("hbm_bytez")
+    return ok, h, bad, worse
+"""
+
+
+def test_counter_codes_and_lines():
+    findings = run_src(COUNTER_BAD, relpath=AUDITED_PATH,
+                       passes=[CounterNamePass])
+    assert codes(findings) == [
+        ("CTR001", line_of(COUNTER_BAD, '"typo_key"')),
+        ("CTR001", line_of(COUNTER_BAD, '"hbm_bytez"')),
+    ]
+
+
+def test_counter_skips_unaudited_modules():
+    assert run_src(COUNTER_BAD, relpath="fx/core/solver.py",
+                   passes=[CounterNamePass]) == []
+
+
+# --------------------------------------------------------------- pragmas
+
+
+def test_pragma_suppresses_on_same_line():
+    src = """
+    import jax.numpy as jnp
+    import numpy as np
+
+
+    class W:
+        def step(self):
+            return np.asarray(jnp.zeros(2))  # lint: sync(step-end sync)
+    """
+    assert run_src(src, passes=[HostSyncPass]) == []
+
+
+def test_pragma_suppresses_from_line_above():
+    src = """
+    import jax.numpy as jnp
+    import numpy as np
+
+
+    class W:
+        def step(self):
+            # lint: sync(step-end sync on purpose)
+            return np.asarray(jnp.zeros(2))
+    """
+    assert run_src(src, passes=[HostSyncPass]) == []
+
+
+def test_pragma_is_per_pass():
+    src = """
+    import jax.numpy as jnp
+    import numpy as np
+
+
+    class W:
+        def step(self):
+            # lint: retrace(wrong pass name for this site)
+            return np.asarray(jnp.zeros(2))
+    """
+    findings = run_src(src, passes=[HostSyncPass, RetracePass])
+    assert [f.code for f in findings] == ["LINT003", "SYNC002"]
+
+
+def test_pragma_empty_reason_is_lint001():
+    src = """
+    import jax.numpy as jnp
+    import numpy as np
+
+
+    class W:
+        def step(self):
+            return np.asarray(jnp.zeros(2))  # lint: sync()
+    """
+    (f,) = run_src(src, passes=[HostSyncPass])
+    assert f.code == "LINT001"
+
+
+def test_pragma_unknown_pass_is_lint002():
+    src = """
+    x = 1  # lint: hotloop(no such pass)
+    """
+    (f,) = run_src(src, relpath=COLD_PATH, passes=[HostSyncPass])
+    assert f.code == "LINT002"
+    assert "hotloop" in f.message
+
+
+def test_pragma_unused_is_lint003():
+    src = """
+    x = 1  # lint: sync(nothing here needed suppressing)
+    """
+    (f,) = run_src(src, relpath=COLD_PATH, passes=[HostSyncPass])
+    assert f.code == "LINT003"
+
+
+def test_docstring_pragma_examples_do_not_count():
+    src = '''
+    def helper():
+        """Example:  # lint: sync(docstring, not a comment)"""
+        return 1
+    '''
+    assert run_src(src, relpath=COLD_PATH, passes=[HostSyncPass]) == []
+
+
+# -------------------------------------------------------------- baseline
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = run_src(SYNC_BAD, passes=[HostSyncPass])
+    assert findings
+    bpath = tmp_path / "baseline.json"
+    lint.save_baseline(bpath, findings)
+    baseline = lint.load_baseline(bpath)
+    new, old = lint.partition_baseline(findings, baseline)
+    assert new == [] and len(old) == len(findings)
+
+    extra = lint.Finding("fx/serving/workers.py", 99, "SYNC001", "sync",
+                         "a finding the baseline has never seen")
+    new, old = lint.partition_baseline(findings + [extra], baseline)
+    assert new == [extra]
+
+
+def test_baseline_fingerprint_is_line_independent():
+    f1 = lint.Finding("a.py", 10, "SYNC001", "sync", "msg")
+    f2 = lint.Finding("a.py", 99, "SYNC001", "sync", "msg")
+    assert f1.fingerprint == f2.fingerprint
+    assert lint.load_baseline(None) == set()
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert lint.load_baseline(tmp_path / "nope.json") == set()
+
+
+# ------------------------------------------------------------ self-check
+
+
+def test_repo_scans_clean():
+    """The invariant CI enforces: zero unbaselined findings on src/repro,
+    and zero findings at all under serving/ and kernels/."""
+    findings = lint.run_paths([str(REPO_ROOT / "src" / "repro")])
+    baseline = lint.load_baseline(REPO_ROOT / "analysis-baseline.json")
+    new, _ = lint.partition_baseline(findings, baseline)
+    assert new == [], "\n".join(f.render() for f in new)
+    hot = [f for f in findings
+           if "/serving/" in f.path or "/kernels/" in f.path]
+    assert hot == [], "\n".join(f.render() for f in hot)
+
+
+def test_all_passes_registered():
+    names = set(lint.all_passes())
+    assert names == {"sync", "retrace", "span", "counter"}
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def _run_cli(*argv, cwd=REPO_ROOT):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_repo_gate_passes():
+    r = _run_cli("src/repro")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 new finding(s)" in r.stdout
+
+
+def test_cli_fails_on_injected_violation(tmp_path):
+    bad = tmp_path / "serving" / "workers.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+
+
+        class W:
+            def step(self, logits):
+                return float(jnp.max(logits))
+    """).lstrip("\n"))
+    r = _run_cli(str(bad), "--baseline", str(tmp_path / "none.json"))
+    assert r.returncode == 1
+    assert "SYNC005" in r.stdout
+
+
+def test_cli_json_format(tmp_path):
+    bad = tmp_path / "serving" / "workers.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax\n\n\ndef step(x):\n"
+                   "    jax.block_until_ready(x)\n")
+    r = _run_cli(str(bad), "--format", "json",
+                 "--baseline", str(tmp_path / "none.json"))
+    assert r.returncode == 1
+    payload = json.loads(r.stdout)
+    assert payload["scanned_files"] == 1
+    assert [f["code"] for f in payload["new"]] == ["SYNC001"]
+    assert payload["baselined"] == []
+
+
+def test_cli_list_passes():
+    r = _run_cli("--list-passes")
+    assert r.returncode == 0
+    for name in ("sync", "retrace", "span", "counter"):
+        assert name in r.stdout
