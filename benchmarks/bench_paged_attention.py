@@ -1,8 +1,11 @@
-"""Decode-step paged-attention microbench: fused Pallas kernel vs the
-gather (dense-expand) read path, on a frozen-heavy paged layer and on an
-fp-only one. Reports wall-clock tokens/s plus the modeled HBM bytes/token
-each path moves (the bandwidth a TPU decode step actually pays — off-TPU
-the fused kernel runs interpreted, so bytes/token is the portable metric).
+"""Paged-attention microbench: decode three ways (gather dense-expand vs
+fused kernel serial-DMA vs fused double-buffered DMA) and chunked prefill
+(gather vs fused) on a frozen-heavy paged layer and an fp-only one.
+Reports wall-clock tokens/s plus the modeled HBM bytes/token each path
+moves (the bandwidth a TPU step actually pays — off-TPU the fused kernel
+runs interpreted, so bytes/token is the portable metric; the serial vs
+double-buffered split is a wall-clock row only on real hardware, and the
+two variants are asserted bitwise identical either way).
 Emits CSV rows plus the standard BENCH_paged_attention.json artifact.
 
     PYTHONPATH=src python -m benchmarks.run paged_attention
@@ -47,25 +50,36 @@ def _build_state(cfg, *, B, mb, block_size, num_values, quantized, seed=0):
 
 
 def run(B=4, mb=4, block_size=16, num_values=16, iters=5, seed=0) -> None:
+    import functools
+
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.configs import get_reduced_config
     from repro.core import QuantSpec
-    from repro.kernels import modeled_hbm_bytes_per_token
+    from repro.kernels import (default_interpret, modeled_hbm_bytes_per_token,
+                               modeled_prefill_hbm_bytes_per_token,
+                               paged_decode_attention,
+                               paged_prefill_attention)
     from repro.models.attention import sdpa
 
     cfg = get_reduced_config(ARCH)
     Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    interp = default_interpret()
     rng = np.random.default_rng(seed)
     q = jnp.asarray(rng.normal(size=(B, 1, Hq, Dh)), jnp.float32)
     k1 = jnp.asarray(rng.normal(size=(B, 1, Hkv, Dh)), jnp.float32)
     v1 = jnp.asarray(rng.normal(size=(B, 1, Hkv, Dh)), jnp.float32)
 
-    @jax.jit
-    def fused_step(leaf, q, k, v):
-        return leaf.fused_decode(q, k, v)[1]
+    @functools.partial(jax.jit, static_argnames=("dbuf",))
+    def fused_step(leaf, q, k, v, dbuf):
+        new = leaf._write(k, v)
+        return paged_decode_attention(
+            q[:, 0], new.k_fp, new.v_fp, new.k_codes, new.v_codes,
+            new.k_cb, new.v_cb, new.blk_q, new.block_table,
+            new.seq_lens + 1, quantized=new.quantized, packed=new.packed,
+            double_buffer=dbuf, interpret=interp)
 
     @jax.jit
     def gather_step(leaf, q, k, v):
@@ -73,6 +87,11 @@ def run(B=4, mb=4, block_size=16, num_values=16, iters=5, seed=0) -> None:
         return sdpa(q, k_all, v_all, causal=True, q_offset=q_off,
                     kv_valid_len=valid)
 
+    steps = (
+        ("gather", lambda lf: gather_step(lf, q, k1, v1)),
+        ("fused-serial", lambda lf: fused_step(lf, q, k1, v1, dbuf=False)),
+        ("fused-dbuf", lambda lf: fused_step(lf, q, k1, v1, dbuf=True)),
+    )
     results = []
     for quantized in (True, False):
         leaf, table, lens = _build_state(
@@ -84,12 +103,16 @@ def run(B=4, mb=4, block_size=16, num_values=16, iters=5, seed=0) -> None:
         bytes_kw = dict(block_size=block_size, n_kv_heads=Hkv, head_dim=Dh,
                         num_values=num_values, quantized=quantized,
                         packed=leaf.packed)
-        for path, fn in (("fused", fused_step), ("gather", gather_step)):
+        fused_outs = {}
+        for path, fn in steps:
             out, dt = timed(
-                lambda: jax.block_until_ready(fn(leaf, q, k1, v1)),
+                lambda fn=fn: jax.block_until_ready(fn(leaf)),
                 warmup=1, iters=iters)
+            if path.startswith("fused"):
+                fused_outs[path] = np.asarray(out)
             bpt = modeled_hbm_bytes_per_token(
-                table, lens, np.asarray(leaf.blk_q), path=path, **bytes_kw)
+                table, lens, np.asarray(leaf.blk_q),
+                path="gather" if path == "gather" else "fused", **bytes_kw)
             row = {"path": path, "kv": kv, "tok_s": B / dt,
                    "us_per_step": dt * 1e6, "hbm_bytes_per_token": bpt,
                    "frozen_frac": frozen_frac, "batch": B, "max_blocks": mb,
@@ -100,15 +123,70 @@ def run(B=4, mb=4, block_size=16, num_values=16, iters=5, seed=0) -> None:
             emit(f"paged_attention/{kv}/{path}", dt * 1e6,
                  f"tok_s={row['tok_s']:.1f};bytes_per_tok={bpt:.0f};"
                  f"frozen={frozen_frac:.2f}")
+        # identical per-page arithmetic, different DMA schedule -> bitwise
+        assert np.array_equal(fused_outs["fused-serial"],
+                              fused_outs["fused-dbuf"]), \
+            "double-buffered fused decode diverged from serial"
+
+    # chunked prefill over a >=50%-frozen shared prefix (restored system
+    # context): one block_size-token chunk entering at the prompt's end,
+    # scored against every earlier page
+    leaf, table, lens = _build_state(
+        cfg, B=B, mb=mb, block_size=block_size, num_values=num_values,
+        quantized=True, seed=seed + 1)
+    frozen_frac = float(np.asarray(leaf.blk_q)[1:].mean())
+    C = block_size
+    qc = jnp.asarray(rng.normal(size=(B, C, Hq, Dh)), jnp.float32)
+    off = jnp.asarray(lens, jnp.int32) - C
+
+    @jax.jit
+    def prefill_fused(leaf, q, off):
+        return paged_prefill_attention(
+            q, leaf.k_fp, leaf.v_fp, leaf.k_codes, leaf.v_codes, leaf.k_cb,
+            leaf.v_cb, leaf.blk_q, leaf.block_table, off,
+            quantized=leaf.quantized, packed=leaf.packed, interpret=interp)
+
+    @jax.jit
+    def prefill_gather(leaf, q, off):
+        k_all = leaf._gather(leaf.k_fp, leaf.k_codes, leaf.k_cb)
+        v_all = leaf._gather(leaf.v_fp, leaf.v_codes, leaf.v_cb)
+        return sdpa(q, k_all, v_all, causal=True, q_offset=off,
+                    kv_valid_len=off + C)
+
+    pf_kw = dict(chunk=C, block_size=block_size, n_kv_heads=Hkv, head_dim=Dh,
+                 num_values=num_values, quantized=True, packed=leaf.packed)
+    for path, fn in (("gather", prefill_gather), ("fused", prefill_fused)):
+        _, dt = timed(
+            lambda fn=fn: jax.block_until_ready(fn(leaf, qc, off)),
+            warmup=1, iters=iters)
+        bpt = modeled_prefill_hbm_bytes_per_token(
+            table, lens, np.asarray(leaf.blk_q), path=path, **pf_kw)
+        row = {"path": f"prefill-{path}", "kv": f"kmeans_ls@{num_values}",
+               "tok_s": B * C / dt, "us_per_step": dt * 1e6,
+               "hbm_bytes_per_token": bpt, "frozen_frac": frozen_frac,
+               "batch": B, "max_blocks": mb, "block_size": block_size,
+               "chunk": C,
+               "spec": QuantSpec.parse(f"kmeans_ls@{num_values}").to_json()}
+        results.append(row)
+        emit(f"paged_attention/prefill/{path}", dt * 1e6,
+             f"tok_s={row['tok_s']:.1f};bytes_per_tok={bpt:.0f};"
+             f"frozen={frozen_frac:.2f}")
+
     by = {(r["kv"], r["path"]): r for r in results}
     qkv = f"kmeans_ls@{num_values}"
     ratio = (by[(qkv, "gather")]["hbm_bytes_per_token"]
-             / by[(qkv, "fused")]["hbm_bytes_per_token"])
-    emit("paged_attention/hbm_reduction", 0.0, f"gather/fused={ratio:.2f}x")
+             / by[(qkv, "fused-dbuf")]["hbm_bytes_per_token"])
+    pf_ratio = (by[(qkv, "prefill-gather")]["hbm_bytes_per_token"]
+                / by[(qkv, "prefill-fused")]["hbm_bytes_per_token"])
+    emit("paged_attention/hbm_reduction", 0.0,
+         f"decode gather/fused={ratio:.2f}x;"
+         f"prefill gather/fused={pf_ratio:.2f}x")
     bench_json("paged_attention", results,
                meta={"arch": ARCH, "reduced": True,
                      "interpret": jax.default_backend() != "tpu",
-                     "hbm_reduction_frozen": ratio})
+                     "hbm_reduction_frozen": ratio,
+                     "prefill_hbm_reduction_frozen": pf_ratio,
+                     "prefill_frozen_frac": frozen_frac})
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ HOT_SUFFIXES = (
     "serving/speculative.py",
     "serving/kv_cache.py",
     "kernels/paged_attention.py",
+    "kernels/quant_matmul.py",
 )
 
 #: function names treated as hot-path entry points

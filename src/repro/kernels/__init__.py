@@ -1,26 +1,37 @@
 """Pallas TPU kernels for the perf-critical paths.
 
 - fista_quant: batched sparse-LSQ solver (the paper's technique, MXU-native)
-- quant_matmul: fused codebook-dequant matmul (quantized serving hot path)
-- paged_decode_attention: fused paged-attention flash decode with in-VMEM
-  codebook dequant (serving decode hot path)
+- quant_matmul / quant_matmul_stacked: fused codebook-dequant matmul, flat
+  and stacked-group (leading lax.scan group axis) forms (quantized serving
+  hot path)
+- paged_decode_attention / paged_prefill_attention: fused paged-attention
+  flash decode and chunked prefill with double-buffered page DMA and
+  in-VMEM codebook dequant (serving hot path)
 - quantize_pages_device: batched on-device kmeans_ls for KV page freezing
 
 Each kernel has a pure-jnp oracle in ref.py and a padded wrapper in ops.py;
 tests sweep shapes/dtypes against the oracles in interpret mode.
 """
 from .fista_quant import fista_quant
-from .ops import default_interpret, power_iter_lipschitz, quant_matmul, solve_fista_batch
+from .ops import (default_interpret, power_iter_lipschitz, quant_matmul,
+                  quant_matmul_stacked, solve_fista_batch)
 from .page_quant import quantize_pages_device, quantize_pages_fista
-from .paged_attention import (modeled_hbm_bytes_per_token, pack4,
-                              paged_decode_attention, unpack4)
+from .paged_attention import (modeled_hbm_bytes_per_token,
+                              modeled_prefill_hbm_bytes_per_token, pack4,
+                              paged_decode_attention,
+                              paged_prefill_attention, unpack4)
 from .quant_matmul import quant_matmul as quant_matmul_raw
-from .ref import ref_fista, ref_paged_decode, ref_quant_matmul
+from .quant_matmul import quant_matmul_stacked as quant_matmul_stacked_raw
+from .ref import (ref_fista, ref_paged_decode, ref_quant_matmul,
+                  ref_quant_matmul_stacked)
 
 __all__ = [
-    "fista_quant", "quant_matmul", "quant_matmul_raw", "solve_fista_batch",
-    "ref_fista", "ref_quant_matmul", "power_iter_lipschitz", "default_interpret",
-    "paged_decode_attention", "ref_paged_decode", "pack4", "unpack4",
-    "modeled_hbm_bytes_per_token", "quantize_pages_device",
+    "fista_quant", "quant_matmul", "quant_matmul_raw", "quant_matmul_stacked",
+    "quant_matmul_stacked_raw", "solve_fista_batch",
+    "ref_fista", "ref_quant_matmul", "ref_quant_matmul_stacked",
+    "power_iter_lipschitz", "default_interpret",
+    "paged_decode_attention", "paged_prefill_attention", "ref_paged_decode",
+    "pack4", "unpack4", "modeled_hbm_bytes_per_token",
+    "modeled_prefill_hbm_bytes_per_token", "quantize_pages_device",
     "quantize_pages_fista",
 ]

@@ -13,6 +13,7 @@ import numpy as np
 
 from .fista_quant import fista_quant as _fista_kernel
 from .quant_matmul import quant_matmul as _qmm_kernel
+from .quant_matmul import quant_matmul_stacked as _qmm_stacked_kernel
 from .ref import ref_fista, ref_quant_matmul
 
 
@@ -131,3 +132,23 @@ def quant_matmul(x, idx, codebook, *, bm=None, bn=None, bk=None,
     out = _qmm_kernel(xp, ip, codebook, bm=bm, bn=bn, bk=bk,
                       out_dtype=out_dtype, interpret=interpret)
     return out[:M, :N]
+
+
+def quant_matmul_stacked(x, idx, codebook, *, bm=None, bn=None, bk=None,
+                         out_dtype=None, interpret: bool | None = None):
+    """Shape-flexible stacked-group dequant matmul: x (G, M, K) against
+    codes (G, K, N) + per-group codebooks (G, L); pads to tile multiples,
+    unpads."""
+    if interpret is None:
+        interpret = default_interpret()
+    G, M, K = x.shape
+    _, _, N = idx.shape
+    bm = bm or min(128, M)
+    bn = bn or min(128, N)
+    bk = bk or min(128, K)
+    padM, padN, padK = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(x, ((0, 0), (0, padM), (0, padK)))
+    ip = jnp.pad(idx, ((0, 0), (0, padK), (0, padN)))
+    out = _qmm_stacked_kernel(xp, ip, codebook, bm=bm, bn=bn, bk=bk,
+                              out_dtype=out_dtype, interpret=interpret)
+    return out[:, :M, :N]

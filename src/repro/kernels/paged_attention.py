@@ -14,10 +14,14 @@ This kernel walks each sequence's block table on-core instead:
   (SMEM) so page ids are known before the body runs. Per page the kernel
   issues a *conditional* DMA - frozen pages copy packed codes + the two
   (L,) codebooks, hot pages copy the fp tile - so cold context crosses HBM
-  at ~4 bits/value and is dequantized (`cb[codes]`) in VMEM. Attention is
-  online-softmax (flash) over pages with per-sequence `kv_valid_len`
-  masking; pages past `ceil(valid/bs)` skip their DMA entirely, which is
-  what makes short sequences in a long-table batch cheap.
+  at ~4 bits/value and is dequantized (`cb[codes]`) in VMEM. The DMA is
+  double-buffered by default: two VMEM slots with ping-pong semaphore
+  banks, page j+1's copy started before page j's wait so it overlaps the
+  dequant + flash step (serial single-slot variant kept for the benchmark
+  three-way). Attention is online-softmax (flash) over pages with
+  per-sequence `kv_valid_len` masking; pages past `ceil(valid/bs)` skip
+  their DMA entirely, which is what makes short sequences in a long-table
+  batch cheap.
 
 GQA is handled natively: a static per-kv-head loop computes (G, bs) score
 tiles without repeating K/V across the group. `window` is not supported
@@ -82,6 +86,7 @@ def unpack4(packed: jax.Array) -> jax.Array:
 
 
 def _kernel(bs, Hkv, G, W, Dh, scale, softcap, quantized, packed,
+            double_buffer,
             table_ref, valid_ref, blkq_ref,
             q_ref, kfp_ref, vfp_ref, kc_ref, vc_ref, kcb_ref, vcb_ref,
             o_ref,
@@ -93,61 +98,107 @@ def _kernel(bs, Hkv, G, W, Dh, scale, softcap, quantized, packed,
     valid = valid_ref[b]
     n_pages = lax.div(valid + bs - 1, bs)
 
-    def load_page(j):
+    # Scratch tiles carry a leading slot axis: 2 slots in double-buffer
+    # mode (page j computes out of slot j%2 while page j+1's DMA fills the
+    # other), 1 slot serial. Each slot owns a bank of 4 DMA semaphores.
+
+    def fp_copies(page, s):
+        return [pltpu.make_async_copy(kfp_ref.at[page], k_tile.at[s],
+                                      sems.at[s, 0]),
+                pltpu.make_async_copy(vfp_ref.at[page], v_tile.at[s],
+                                      sems.at[s, 1])]
+
+    def code_copies(page, s):
+        # ~4 bits/value across the wire: packed codes + two (L,) codebooks
+        return [pltpu.make_async_copy(kc_ref.at[page], kc_tile.at[s],
+                                      sems.at[s, 0]),
+                pltpu.make_async_copy(vc_ref.at[page], vc_tile.at[s],
+                                      sems.at[s, 1]),
+                pltpu.make_async_copy(kcb_ref.at[page], cb_tile.at[s, 0],
+                                      sems.at[s, 2]),
+                pltpu.make_async_copy(vcb_ref.at[page], cb_tile.at[s, 1],
+                                      sems.at[s, 3])]
+
+    def start_page(j, s):
         page = table_ref[b, j]
-
-        def copy_fp():
-            ck = pltpu.make_async_copy(kfp_ref.at[page], k_tile, sems.at[0])
-            cv = pltpu.make_async_copy(vfp_ref.at[page], v_tile, sems.at[1])
-            ck.start()
-            cv.start()
-            ck.wait()
-            cv.wait()
-
         if not quantized:
-            copy_fp()
+            for c in fp_copies(page, s):
+                c.start()
             return
         frozen = blkq_ref[page] != 0
 
         @pl.when(frozen)
         def _():
-            # ~4 bits/value across the wire: packed codes + two (L,) codebooks
-            cks = [pltpu.make_async_copy(kc_ref.at[page], kc_tile, sems.at[0]),
-                   pltpu.make_async_copy(vc_ref.at[page], vc_tile, sems.at[1]),
-                   pltpu.make_async_copy(kcb_ref.at[page], cb_tile.at[0],
-                                         sems.at[2]),
-                   pltpu.make_async_copy(vcb_ref.at[page], cb_tile.at[1],
-                                         sems.at[3])]
-            for c in cks:
+            for c in code_copies(page, s):
                 c.start()
-            for c in cks:
-                c.wait()
-            kc = kc_tile[...]
-            vc = vc_tile[...]
-            k_idx = unpack4(kc) if packed else kc.astype(jnp.int32)
-            v_idx = unpack4(vc) if packed else vc.astype(jnp.int32)
-            k_tile[...] = jnp.take(cb_tile[0], k_idx.reshape(-1), axis=0
-                                   ).reshape(bs, Hkv, Dh).astype(k_tile.dtype)
-            v_tile[...] = jnp.take(cb_tile[1], v_idx.reshape(-1), axis=0
-                                   ).reshape(bs, Hkv, Dh).astype(v_tile.dtype)
 
         @pl.when(jnp.logical_not(frozen))
         def _():
-            copy_fp()
+            for c in fp_copies(page, s):
+                c.start()
+
+    def finish_page(j, s):
+        page = table_ref[b, j]
+        if not quantized:
+            for c in fp_copies(page, s):
+                c.wait()
+            return
+        frozen = blkq_ref[page] != 0
+
+        @pl.when(frozen)
+        def _():
+            for c in code_copies(page, s):
+                c.wait()
+            kc = kc_tile[s]
+            vc = vc_tile[s]
+            k_idx = unpack4(kc) if packed else kc.astype(jnp.int32)
+            v_idx = unpack4(vc) if packed else vc.astype(jnp.int32)
+            k_tile[s] = jnp.take(cb_tile[s, 0], k_idx.reshape(-1), axis=0
+                                 ).reshape(bs, Hkv, Dh).astype(k_tile.dtype)
+            v_tile[s] = jnp.take(cb_tile[s, 1], v_idx.reshape(-1), axis=0
+                                 ).reshape(bs, Hkv, Dh).astype(v_tile.dtype)
+
+        @pl.when(jnp.logical_not(frozen))
+        def _():
+            for c in fp_copies(page, s):
+                c.wait()
 
     q = q_ref[0].astype(jnp.float32)                       # (Hq, Dh)
 
+    if double_buffer:
+        # warm-up: page 0's DMA is in flight before the loop body runs
+        @pl.when(n_pages > 0)
+        def _():
+            start_page(0, 0)
+
     def body(j, carry):
         m, l, acc = carry
+        s = lax.rem(j, 2) if double_buffer else 0
 
-        @pl.when(j < n_pages)
-        def _():
-            load_page(j)
+        if double_buffer:
+            # start page j+1 into the other slot, then wait page j: the
+            # copy overlaps this iteration's wait+dequant+flash step
+            @pl.when(j + 1 < n_pages)
+            def _():
+                start_page(j + 1, lax.rem(j + 1, 2))
 
-        # Positions >= valid (incl. whole skipped pages reading stale VMEM)
-        # are masked to BIG_NEG below, so they contribute exp(BIG_NEG-m)=0.
-        kt = k_tile[...].astype(jnp.float32)               # (bs, Hkv, Dh)
-        vt = v_tile[...].astype(jnp.float32)
+            @pl.when(j < n_pages)
+            def _():
+                finish_page(j, s)
+        else:
+            @pl.when(j < n_pages)
+            def _():
+                start_page(j, 0)
+                finish_page(j, 0)
+
+        # Positions >= valid are masked to BIG_NEG below, contributing
+        # exp(BIG_NEG-m) = 0. Pages past n_pages never DMA'd into this
+        # slot, so zero the tiles outright: stale (or, double-buffered
+        # with n_pages == 1, never-written) VMEM must not reach the
+        # matmuls — 0 * garbage is 0 but 0 * NaN is NaN.
+        live = j < n_pages
+        kt = jnp.where(live, k_tile[s].astype(jnp.float32), 0.0)
+        vt = jnp.where(live, v_tile[s].astype(jnp.float32), 0.0)
         s = jnp.concatenate(
             [lax.dot_general(q[h * WG:(h + 1) * WG], kt[:, h, :],
                              (((1,), (1,)), ((), ())),
@@ -185,7 +236,8 @@ def _kernel(bs, Hkv, G, W, Dh, scale, softcap, quantized, packed,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("softcap", "quantized", "packed", "interpret")
+    jax.jit, static_argnames=("softcap", "quantized", "packed",
+                              "double_buffer", "interpret")
 )
 def paged_decode_attention(
     q: jax.Array,            # (B, Hq, Dh) queries, or (B, W, Hq, Dh) window
@@ -202,6 +254,7 @@ def paged_decode_attention(
     softcap: float | None = None,
     quantized: bool = False,
     packed: bool = True,
+    double_buffer: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused flash-decode over the paged pools.
@@ -210,6 +263,12 @@ def paged_decode_attention(
     speculative verify window (B, W, Hq, Dh) -> (B, W, Hq, Dh) whose W
     queries sit at positions ``kv_valid_len - W .. kv_valid_len - 1``
     (causal within the window); each page is still read once per sequence.
+
+    ``double_buffer`` ping-pongs the per-page DMA across two VMEM slots so
+    page j+1's copy overlaps page j's dequant + flash step; the serial
+    variant (one slot, copy-then-compute) is kept selectable for the
+    paged-attention benchmark's three-way row. Both variants run the exact
+    same per-page arithmetic, so results are bitwise identical.
     """
     windowed = q.ndim == 4
     if not windowed:
@@ -227,6 +286,7 @@ def paged_decode_attention(
     qr = q.reshape(B, W, Hkv, G, Dh).transpose(0, 2, 1, 3, 4)
     qr = qr.reshape(B, HqW, Dh)
 
+    nslots = 2 if double_buffer else 1
     qspec = pl.BlockSpec((1, HqW, Dh), lambda b, *_: (b, 0, 0))
     hbm = pl.BlockSpec(memory_space=pltpu.ANY)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -235,16 +295,16 @@ def paged_decode_attention(
         in_specs=[qspec, hbm, hbm, hbm, hbm, hbm, hbm],
         out_specs=pl.BlockSpec((1, HqW, Dh), lambda b, *_: (b, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((bs, Hkv, Dh), k_fp.dtype),
-            pltpu.VMEM((bs, Hkv, Dh), v_fp.dtype),
-            pltpu.VMEM((bs, Hkv, Dc), jnp.uint8),
-            pltpu.VMEM((bs, Hkv, Dc), jnp.uint8),
-            pltpu.VMEM((2, L), jnp.float32),
-            pltpu.SemaphoreType.DMA((4,)),
+            pltpu.VMEM((nslots, bs, Hkv, Dh), k_fp.dtype),
+            pltpu.VMEM((nslots, bs, Hkv, Dh), v_fp.dtype),
+            pltpu.VMEM((nslots, bs, Hkv, Dc), jnp.uint8),
+            pltpu.VMEM((nslots, bs, Hkv, Dc), jnp.uint8),
+            pltpu.VMEM((nslots, 2, L), jnp.float32),
+            pltpu.SemaphoreType.DMA((nslots, 4)),
         ],
     )
     kern = functools.partial(_kernel, bs, Hkv, G, W, Dh, scale, softcap,
-                             quantized, packed)
+                             quantized, packed, double_buffer)
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
@@ -257,6 +317,52 @@ def paged_decode_attention(
     out = out.reshape(B, Hkv, W, G, Dh).transpose(0, 2, 1, 3, 4)
     out = out.reshape(B, W, Hq, Dh)
     return out if windowed else out[:, 0]
+
+
+# ------------------------------------------------------------ prefill entry
+
+
+def paged_prefill_attention(
+    q: jax.Array,            # (B, C, Hq, Dh) one prompt chunk of C queries
+    k_fp: jax.Array,
+    v_fp: jax.Array,
+    k_codes: jax.Array,
+    v_codes: jax.Array,
+    k_cb: jax.Array,
+    v_cb: jax.Array,
+    blk_q: jax.Array,
+    block_table: jax.Array,
+    q_offset: jax.Array,     # (B,) chunk start position per sequence
+    *,
+    softcap: float | None = None,
+    quantized: bool = False,
+    packed: bool = True,
+    double_buffer: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused chunked-prefill: score one prompt chunk against its prefix.
+
+    The chunk's C queries sit at positions ``q_offset .. q_offset + C - 1``
+    (the chunk's own K/V already written to the pool), attending causally
+    over every earlier page through the *same* conditional-DMA + in-VMEM
+    dequant path as decode — a pre-frozen prefix (shared context restored
+    as codes) crosses HBM at ~4 bits/value instead of being gathered fp.
+
+    This is exactly the decode kernel's query-window layout with W = C and
+    ``kv_valid_len = q_offset + C``: row w's causal chunk mask
+    ``pos < valid - (C-1-w)`` reduces to ``pos <= q_offset + w``. Because
+    the online-softmax carry is per query row and pages are walked in the
+    same order whatever the window size, chunked calls are bitwise
+    identical to one whole-prompt call (the PR 5 verify-window discipline
+    applied to prefill).
+    """
+    assert q.ndim == 4, "prefill queries are (B, C, Hq, Dh) chunks"
+    C = q.shape[1]
+    valid = jnp.asarray(q_offset, jnp.int32) + C
+    return paged_decode_attention(
+        q, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb, blk_q, block_table,
+        valid, softcap=softcap, quantized=quantized, packed=packed,
+        double_buffer=double_buffer, interpret=interpret)
 
 
 # ------------------------------------------------------------ bytes model
@@ -296,3 +402,46 @@ def modeled_hbm_bytes_per_token(
             frozen = quantized and bq[table[b, j]]
             total += code_page if frozen else fp_page
     return total / B
+
+
+def modeled_prefill_hbm_bytes_per_token(
+    block_table, prompt_lens, blk_q, *, chunk: int, block_size: int,
+    n_kv_heads: int, head_dim: int, num_values: int, quantized: bool,
+    packed: bool, path: str, fp_bytes: int = 4,
+) -> float:
+    """Analytic HBM read bytes per *prompt* token for chunked prefill, one
+    attention layer.
+
+    Prefill in chunks of ``chunk`` tokens re-reads the growing prefix once
+    per chunk. The gather path materializes the sequence's whole block
+    table at fp width for every chunk (what ``update`` + sdpa does); the
+    fused path reads, per chunk, only the ``ceil((off + C) / bs)`` pages
+    covering that chunk's prefix, each as either codes + codebooks (frozen
+    shared context) or fp (hot). K and V both counted; q/output traffic is
+    identical for both paths and excluded.
+    """
+    table = np.asarray(block_table)
+    lens = np.asarray(prompt_lens)
+    bq = np.asarray(blk_q).astype(bool).reshape(-1)
+    B, mb = table.shape
+    bs = block_size
+    elems = bs * n_kv_heads * head_dim
+    fp_page = 2 * elems * fp_bytes
+    Dc = head_dim // 2 if packed else head_dim
+    code_page = 2 * (bs * n_kv_heads * Dc + num_values * 4)
+    total = 0
+    n_tok = 0
+    for b in range(B):
+        P = int(lens[b])
+        n_tok += P
+        for off in range(0, P, chunk):
+            C = min(chunk, P - off)
+            if path == "gather":
+                total += mb * fp_page
+                continue
+            assert path == "fused", path
+            n_pages = -(-(off + C) // bs)
+            for j in range(min(n_pages, mb)):
+                frozen = quantized and bq[table[b, j]]
+                total += code_page if frozen else fp_page
+    return total / max(n_tok, 1)

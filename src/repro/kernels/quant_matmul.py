@@ -9,6 +9,12 @@ step - memory-bound at batch*1 token - faster end to end.
 
 Grid: (M/bm, N/bn, K/bk), k innermost ('arbitrary'); accumulation in an f32
 VMEM scratch tile, written out on the last k step.
+
+``quant_matmul_stacked`` is the same tile with a leading group axis as the
+outermost grid dimension: stacked weights (codebook (G, L) / indices
+(G, K, N), the ``stack_quantized`` form that rides through ``lax.scan``)
+are served group-by-group with that group's codebook VMEM-resident — one
+call covers a whole scanned layer group with zero per-call dequant.
 """
 from __future__ import annotations
 
@@ -72,6 +78,70 @@ def quant_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, idx, codebook)
+
+
+def _stacked_kernel(x_ref, idx_ref, cb_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_tile = jnp.take(cb_ref[0], idx_ref[0].astype(jnp.int32), axis=0)
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_tile.astype(x_ref.dtype),
+        preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+)
+def quant_matmul_stacked(
+    x: jax.Array,            # (G, M, K) per-group activations
+    idx: jax.Array,          # (G, K, N) integer codes
+    codebook: jax.Array,     # (G, L) per-group fp values
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked-group fused dequant matmul: y[g] = x[g] @ codebook[g][idx[g]].
+
+    The group axis is the outermost grid dimension; each (g, i, j, k) step
+    gathers its (bk, bn) index tile against group g's (L,) codebook held in
+    VMEM, so scanned layer groups serve from uint8 codes without any
+    per-call dense materialization.
+    """
+    G, M, K = x.shape
+    G2, K2, N = idx.shape
+    assert G == G2 and K == K2, (x.shape, idx.shape)
+    assert codebook.ndim == 2 and codebook.shape[0] == G, codebook.shape
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"shapes ({M},{K},{N}) must tile by ({bm},{bk},{bn}); pad upstream")
+    out_dtype = out_dtype or x.dtype
+    grid = (G, M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        _stacked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+            pl.BlockSpec((1, codebook.shape[1]), lambda g, i, j, k: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")
         ),
         interpret=interpret,
     )(x, idx, codebook)

@@ -13,6 +13,17 @@ def ref_quant_matmul(x, idx, codebook, out_dtype=None):
     return out.astype(out_dtype or x.dtype)
 
 
+def ref_quant_matmul_stacked(x, idx, codebook, out_dtype=None):
+    """Per-group dense oracle for kernels.quant_matmul_stacked: materialize
+    W[g] = codebook[g][idx[g]], batched matmul over the group axis."""
+    G = idx.shape[0]
+    flat = idx.reshape(G, -1).astype(jnp.int32)
+    w = jnp.take_along_axis(codebook, flat, axis=1).reshape(idx.shape)
+    out = jnp.einsum("gmk,gkn->gmn", x, w.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
 def ref_paged_decode(q, k_fp, v_fp, k_codes, v_codes, k_cb, v_cb, blk_q,
                      block_table, kv_valid_len, *, softcap=None,
                      quantized=False, packed=True):

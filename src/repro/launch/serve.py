@@ -126,6 +126,30 @@ overload survival (continuous + disagg engines):
   compression; --trace-out reconciles page_offload spans (terminal
   state "restored") against those counters.
 
+chunked prefill (--prefill-chunk N, continuous engine):
+  Admission reserves the slot and worst-case pages up front, then the
+  prompt enters the cache N tokens per engine iteration, interleaved with
+  decode steps for the live batch — a long prompt costs each iteration
+  one chunk instead of a whole prefill, which bounds itl_max under a
+  long-prompt burst. Each chunk scores against every earlier page through
+  the same attention path decode uses; with --attn-impl fused, earlier
+  frozen pages cross HBM as packed 4-bit codes + codebooks through the
+  double-buffered kernel DMA (the modeled prefill-bytes win on shared
+  frozen context — see the prefill_hbm_bytes_per_token gauge and the
+  prefill rows in BENCH_paged_attention.json). The chunk sequence is
+  logit-identical to single-shot prefill — bitwise on the gather path,
+  which the run replays and asserts — and freeze bids are identical
+  (queued at attach, after the whole prompt is in cache).
+
+quantized weight serving (--quantize, all engines):
+  PTQ'd QuantizedTensor leaves serve undequantized through qmatmul: flat
+  leaves hit the fused dequant matmul kernel, and stacked leaves (the
+  lax.scan layer-group form) hit the stacked-group kernel with each
+  group's codebook VMEM-resident — scanned attention/FFN groups serve
+  from uint8 codes with zero per-call dequant. Every traced dense
+  materialization bumps the summary's qmatmul_dequant_fallback counter;
+  a PTQ run asserts it stays 0.
+
 migration note (pre-spec flags -> QuantSpec strings):
   --quantize kmeans_ls --num-values 16   ->  --quantize kmeans_ls@16:weighted=true
                                (legacy PTQ always optimized the weighted
@@ -233,7 +257,8 @@ def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
                             decode_workers=args.decode_workers,
                             migrate=migrate,
                             staging_depth=args.staging_depth, **kw)
-    return ContinuousBatchingEngine(params, cfg, **kw)
+    return ContinuousBatchingEngine(params, cfg,
+                                    prefill_chunk=args.prefill_chunk, **kw)
 
 
 def _verify_serving(params, cfg, args, draft=None):
@@ -301,6 +326,42 @@ def _verify_serving(params, cfg, args, draft=None):
     return ok
 
 
+def _verify_chunked(params, cfg, args):
+    """Replay a deterministic batch chunked (--prefill-chunk) vs
+    single-shot through the gather read path and require BITWISE identity:
+    same tokens, same recorded logits. A chunk sequence walks the same
+    pages in the same order as one whole-prompt call, so equality is
+    exact — any drift is a scheduler or masking bug, not numerics."""
+    import numpy as np
+
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab, args.prompt_len).tolist()
+               for _ in range(min(3, args.max_slots))]
+    chunk, impl = args.prefill_chunk, args.attn_impl
+    args.attn_impl = "gather"   # one read path for both -> bitwise bar
+    outs, engines = [], []
+    try:
+        for args.prefill_chunk in (None, chunk):
+            eng = _make_engine(params, cfg, args, kv_quant=args.kv_quant,
+                               record_logits=True, speculate=0,
+                               freeze_async=False)
+            outs.append(eng.generate(prompts, max_new_tokens=args.gen))
+            engines.append(eng)
+    finally:
+        args.prefill_chunk, args.attn_impl = chunk, impl
+    single, chunked = engines
+    ok = outs[0] == outs[1]
+    for i in range(len(prompts)):
+        ok = ok and bool(np.array_equal(single.request_logits[i],
+                                        chunked.request_logits[i]))
+    n = chunked.prefill.counters["prefill_chunks"]
+    print(f"[serve] chunked-prefill check (chunk={chunk}, "
+          f"kv={args.kv_quant or 'fp'}, gather replay): {n} chunks, "
+          f"tokens+logits vs single-shot "
+          f"{'bitwise identical -> OK' if ok else 'MISMATCH -> FAILED'}")
+    return ok
+
+
 def _trace_reconcile(tracer, s, speculate: int) -> bool:
     """Cross-check trace spans against the engine's counters: the trace is
     only trustworthy if its event counts ARE the counters."""
@@ -316,8 +377,10 @@ def _trace_reconcile(tracer, s, speculate: int) -> bool:
         if e.get("ph") == "e" and e.get("name") == "page_freeze":
             st = e.get("args", {}).get("state", "?")
             states[st] = states.get(st, 0) + 1
+    n_pc = count_events(ev, name="prefill_chunk", ph="X")
     ok = (n_step == s.get("decode_steps", 0)
-          and n_flush == s.get("freeze_dispatches", 0) and nb == ne)
+          and n_flush == s.get("freeze_dispatches", 0) and nb == ne
+          and n_pc == s.get("prefill_chunks", 0))
     if speculate:
         n_acc = count_events(ev, name="accept", ph="i")
         n_rb = count_events(ev, name="rollback", ph="i")
@@ -339,6 +402,9 @@ def _trace_reconcile(tracer, s, speculate: int) -> bool:
     state_txt = (", ".join(f"{k}={v}" for k, v in sorted(states.items()))
                  or "none")
     off_txt = f", page-offload spans {ob} -> {oe} restored" if ob else ""
+    if n_pc or s.get("prefill_chunks"):
+        off_txt += (f", prefill_chunk spans {n_pc} "
+                    f"(counter {s.get('prefill_chunks', 0)})")
     print(f"[serve] trace: {len(ev)} events | decode_step spans {n_step} "
           f"(counter {s.get('decode_steps', 0)}), freeze flushes {n_flush} "
           f"(counter {s.get('freeze_dispatches', 0)}), page-freeze spans "
@@ -442,6 +508,17 @@ def _run_continuous(args):
           f"and install, {s['freeze_deferred_pages']} pages deferred by the "
           f"per-step budget ({args.freeze_page_budget}) | gather window <= "
           f"{s['max_gather_blocks']} blocks")
+    if args.prefill_chunk:
+        print(f"[serve] chunked prefill: {s.get('prefill_chunks', 0)} chunks "
+              f"of <= {args.prefill_chunk} tokens interleaved with decode "
+              f"steps (one chunk per engine iteration)")
+    if args.quantize:
+        fb = s.get("qmatmul_dequant_fallback", 0)
+        print(f"[serve] quantized weights: qmatmul_dequant_fallback={fb} "
+              f"(every PTQ'd projection must serve from codes)")
+        if fb:
+            raise SystemExit("[serve] PTQ run traced a dense dequant "
+                             "fallback in qmatmul")
     adm = {k: s[k] for k in ("rejected_queue_full", "rejected_pool_full",
                              "shed_slo", "deferred") if s.get(k)}
     if adm or args.admission == "slo":
@@ -480,6 +557,9 @@ def _run_continuous(args):
     if args.kv_quant or args.speculate:
         if not _verify_serving(params, cfg, args, draft=draft):
             raise SystemExit(1)     # tolerance breach must fail the run
+    if args.prefill_chunk:
+        if not _verify_chunked(params, cfg, args):
+            raise SystemExit(1)     # bitwise breach must fail the run
 
 
 def main():
@@ -517,6 +597,12 @@ def main():
                     default="auto",
                     help="decode read path: fused Pallas paged-attention "
                          "kernel vs dense gather (auto: fused on TPU)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous engine: admit prompts in N-token "
+                         "chunks, one per engine iteration, interleaved "
+                         "with decode steps (bounds itl_max under long-"
+                         "prompt bursts; bit-identical to single-shot "
+                         "prefill — see epilog)")
     # disaggregated engine
     ap.add_argument("--prefill-workers", type=int, default=1,
                     help="disagg: prefill worker count (the N of the N:M "
@@ -602,6 +688,12 @@ def main():
             and not args.kv_quant:
         ap.error("--migrate frozen needs --kv-quant (pages cross as "
                  "codes+codebooks)")
+    if args.prefill_chunk is not None:
+        if args.engine != "continuous":
+            ap.error("--prefill-chunk interleaves the continuous engine's "
+                     "decode loop (disagg already overlaps via workers)")
+        if args.prefill_chunk < 1:
+            ap.error("--prefill-chunk must be >= 1 token")
     if args.prompt_len is None:
         args.prompt_len = 64 if serving else 16
     if args.gen is None:

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.quant.serve import qmatmul
 from repro.runtime.hints import hint
-from .cache import as_adapter, supports_fused_decode
+from .cache import as_adapter, supports_fused_decode, supports_fused_prefill
 from .norms import init_rms, rms_norm
 from .rope import apply_mrope, apply_rope
 
@@ -247,6 +247,12 @@ def attention(params, cfg, spec, x, positions, *, cache=None, cache_index=None,
             # storage (Pallas flash-decode kernel, frozen pages dequantized
             # in VMEM) instead of gathering dense K/V through HBM
             new_cache, out = adapter.fused_decode(
+                q, k, v, softcap=cfg.attn_softcap)
+        elif supports_fused_prefill(adapter, S, spec.window):
+            # chunked-prefill hot path: score this chunk against every
+            # earlier page through the same kernel as decode (frozen pages
+            # cross HBM as packed codes), causal within the chunk
+            new_cache, out = adapter.fused_prefill(
                 q, k, v, softcap=cfg.attn_softcap)
         else:
             new_cache, k_all, v_all, q_off, valid = adapter.update(

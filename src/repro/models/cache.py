@@ -47,6 +47,17 @@ def supports_fused_decode(adapter, seq_len: int, window) -> bool:
     return seq_len <= max(int(getattr(adapter, "fused_window", 1)), 1)
 
 
+def supports_fused_prefill(adapter, seq_len: int, window) -> bool:
+    """True when a prefill chunk can take the adapter's fused chunked-prefill
+    path: full-context attention and the adapter opted in via
+    ``use_fused_prefill`` (the paged cache's chunked-prefill view). Any
+    chunk length qualifies — the fused kernel treats the chunk as the last
+    ``seq_len`` query positions of the post-write valid length."""
+    del seq_len
+    return window is None and bool(getattr(adapter, "use_fused_prefill",
+                                           False))
+
+
 class DenseRingCache:
     """Contiguous (B, L, Hkv, Dh) ring buffers {"k","v"} written at idx."""
 

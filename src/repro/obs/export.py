@@ -187,3 +187,27 @@ def modeled_decode_hbm_bytes(worker: Any) -> dict | None:
             "hbm_bytes_step_gather": float(gather),
             "hbm_bytes_step_fused": float(fused),
             "t_memory_s": float(step_bytes) / HBM_BW}
+
+
+def modeled_prefill_hbm_bytes(pb: dict, blocks, frozen_pages, *,
+                              block_size: int, off: int, chunk: int,
+                              fused: bool) -> dict:
+    """Price one prefill chunk's KV page traffic from host state only —
+    the chunked-prefill twin of ``modeled_decode_hbm_bytes`` (and the live
+    counterpart of ``kernels.modeled_prefill_hbm_bytes_per_token``).
+
+    The chunk at token offset ``off`` attends pages 0..ceil((off+chunk)/bs).
+    fused (kernel) pricing reads each of those pages at its installed width
+    — frozen pages cross as packed codes + codebooks, the shared-context
+    reuse the fused chunked path monetizes; gather pricing expands every
+    table page (the whole worst-case table) at fp width.
+    """
+    npages = max(1, -(-(off + chunk) // block_size))
+    if fused:
+        hbm = sum(pb["frozen"] if int(b) in frozen_pages else pb["fp"]
+                  for b in blocks[:npages])
+    else:
+        hbm = len(blocks) * pb["fp"]
+    return {"hbm_bytes_chunk": float(hbm),
+            "hbm_bytes_per_token": float(hbm) / max(chunk, 1),
+            "t_memory_s": float(hbm) / HBM_BW}

@@ -3,24 +3,53 @@
 A QuantizedTensor leaf replaces `x @ W` with kernels.quant_matmul(x, idx,
 codebook) - weights cross HBM as uint8 codes (+ tiny codebook), which is the
 decode-bandwidth win the paper's compression buys at serving time.
+
+Stacked leaves (``stack_quantized``'s (G, L) codebook / (G, n) indices form,
+the shape that rides through ``lax.scan``) route to the stacked-group kernel
+when the activations carry the matching leading group axis — one call serves
+a whole scanned layer group from uint8 codes. When no kernel tiling applies
+(activations without the group axis), qmatmul *densifies* the weight stack —
+fp weight traffic the codes were supposed to eliminate. Every such call
+bumps the module-level ``qmatmul_dequant_fallback`` count, which the serving
+engines snapshot into their summaries (``serve.py`` epilog asserts it stays
+0 for a PTQ'd scanned model).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core import QuantizedTensor
-from repro.kernels import quant_matmul
+from repro.kernels import quant_matmul, quant_matmul_stacked
+
+# trace-time count of dense materializations (see fallback_count): qmatmul
+# runs under jit, so each traced fallback site counts once per trace — zero
+# means zero fp weight traffic in every compiled step
+_FALLBACKS = {"qmatmul_dequant_fallback": 0}
+
+
+def fallback_count() -> int:
+    """Dense-materialization fallbacks traced so far (monotonic)."""
+    return _FALLBACKS["qmatmul_dequant_fallback"]
 
 
 def qmatmul(x, w):
     """Drop-in for x @ w accepting dense or QuantizedTensor weights."""
-    if isinstance(w, QuantizedTensor):
-        idx2d = w.indices.reshape(w.shape)
-        orig = x.shape
-        out = quant_matmul(x.reshape(-1, orig[-1]), idx2d, w.codebook,
-                           out_dtype=x.dtype)
-        return out.reshape(*orig[:-1], w.shape[1])
-    return x @ w
+    if not isinstance(w, QuantizedTensor):
+        return x @ w
+    if w.stacked:
+        G = w.indices.shape[0]
+        if x.ndim >= 3 and x.shape[0] == G and x.shape[-1] == w.shape[0]:
+            idx3d = w.indices.reshape((G,) + tuple(w.shape))
+            orig = x.shape
+            out = quant_matmul_stacked(x.reshape(G, -1, orig[-1]), idx3d,
+                                       w.codebook, out_dtype=x.dtype)
+            return out.reshape(*orig[:-1], w.shape[1])
+        # no group axis to tile against: materialize the dense stack
+        _FALLBACKS["qmatmul_dequant_fallback"] += 1
+        return x @ w.to_dense().astype(x.dtype)
+    idx2d = w.indices.reshape(w.shape)
+    orig = x.shape
+    out = quant_matmul(x.reshape(-1, orig[-1]), idx2d, w.codebook,
+                       out_dtype=x.dtype)
+    return out.reshape(*orig[:-1], w.shape[1])
 
 
 def estimate_decode_bytes(params_bytes_dense: int, ratio: float,

@@ -39,9 +39,23 @@ back (un-queueing any page-freeze bids past the accepted watermark). The
 emitted trace is greedy-token-identical to non-speculative decoding by
 construction; acceptance counters land in the metrics summary.
 
+``prefill_chunk=C`` (colocated engine) splits every admitted prompt into
+C-token chunks and advances ONE chunk per engine iteration, interleaved
+with decode steps for the live batch — a long prompt no longer stalls
+decode for its whole prefill, which is what bounds ``itl_max`` under a
+long-prompt burst. The chunk's slot and worst-case pages are reserved at
+admission (``scheduler.stage``) and the sequence joins the decode batch
+only once its whole prompt is in cache; with ``attn_impl="fused"`` each
+chunk reads earlier frozen pages as packed codes + codebooks through the
+same double-buffered kernel path as decode. The chunk sequence is
+logit-identical to a single-shot prefill (bitwise on the gather path), so
+``--verify`` replays hold.
+
 Weights flow through ``repro.quant.serve.qmatmul`` untouched: dense params
 hit the plain matmul path, PTQ'd QuantizedTensor leaves hit the fused
-dequant kernel — the engines are agnostic.
+dequant kernel — the engines are agnostic; each run's summary reports
+``qmatmul_dequant_fallback``, the count of traced dense-materialization
+fallbacks (0 certifies zero per-call weight dequants).
 """
 from __future__ import annotations
 
@@ -52,6 +66,7 @@ import jax
 
 from repro.core import registry as quant_registry
 from repro.obs.trace import NULL_TRACER
+from repro.quant.serve import fallback_count
 
 from .kv_cache import resolve_kv_spec
 from .metrics import MetricsCollector
@@ -91,7 +106,8 @@ class ContinuousBatchingEngine:
                  eos_id: int | None = None, record_logits: bool = False,
                  attn_impl: str = "auto", freeze_async: bool = True,
                  freeze_page_budget: int = 4, speculate: int = 0,
-                 draft: tuple | None = None, tracer=None, exporter=None,
+                 draft: tuple | None = None, prefill_chunk: int | None = None,
+                 tracer=None, exporter=None,
                  offload_pages: bool = False, preempt: bool = False,
                  admission: str = "fcfs", itl_slo_s: float | None = None):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
@@ -128,7 +144,15 @@ class ContinuousBatchingEngine:
             params, cfg, block_size=block_size, max_seq_len=max_seq_len,
             kv_spec=self.kv_spec, pool=self.worker,
             record_logits=record_logits, metrics=self.metrics,
-            tracer=self.tracer)
+            prefill_chunk=prefill_chunk, tracer=self.tracer)
+        self.prefill_chunk = prefill_chunk
+        # admitted sequences whose prompts are mid-chunk: staged out of the
+        # decode batch (slot + pages reserved), one chunk advances per
+        # engine iteration, interleaved with decode steps
+        self._chunking: deque = deque()
+        # fallback watermark: this engine's runs report only their own
+        # traced dense-materialization fallbacks, not the process total
+        self._fallbacks0 = fallback_count()
         self.block_size = block_size
         self.max_seq_len = self.worker.max_seq_len
         self.freeze_async = self.worker.freeze_async
@@ -230,11 +254,11 @@ class ContinuousBatchingEngine:
         t0 = time.perf_counter()
         now_fn = lambda: time.perf_counter() - t0
         om_work = lambda: om is not None and om.has_work
-        while pending or w.sched.has_work or om_work():
+        while pending or w.sched.has_work or self._chunking or om_work():
             now = now_fn()
             while pending and pending[0].arrival_time <= now:
                 self.submit(pending.popleft(), now)
-            if not (w.sched.has_work or om_work()):
+            if not (w.sched.has_work or self._chunking or om_work()):
                 if not pending:     # everything left was rejected at submit
                     break
                 nxt = pending[0].arrival_time
@@ -247,10 +271,27 @@ class ContinuousBatchingEngine:
                 om.retry_deferred(w)
                 om.try_restore(w, now_fn)
             for st in w.sched.schedule(w.alloc.num_free):
-                # inline prefill straight into the decode worker's pool,
-                # then the no-op splice attaches the sequence to its slot
-                fin = self.prefill.run_inline(st.req, now_fn)
-                w.attach(st, fin, now_fn())
+                if self.prefill_chunk:
+                    # chunked path: pages allocated now, prompt advances
+                    # one chunk per iteration below; the slot stays out of
+                    # the decode batch until the whole prompt is in cache
+                    self._chunking.append(
+                        (st, self.prefill.start_chunked(st.req, now_fn)))
+                    w.sched.stage(st)
+                else:
+                    # inline prefill straight into the decode worker's
+                    # pool, then the no-op splice attaches the sequence
+                    fin = self.prefill.run_inline(st.req, now_fn)
+                    w.attach(st, fin, now_fn())
+            if self._chunking:
+                # one chunk per iteration (FCFS head), so decode steps for
+                # live sequences interleave between chunks of a long prompt
+                st, state = self._chunking[0]
+                fin = self.prefill.advance_chunk(state, now_fn)
+                if fin is not None:
+                    self._chunking.popleft()
+                    w.sched.activate(st)
+                    w.attach(st, fin, now_fn())
             if om is not None and self.preempt:
                 om.maybe_preempt(w, now_fn)
             # one batched (budgeted) solve for the pages the prefills (and
@@ -268,6 +309,13 @@ class ContinuousBatchingEngine:
         out["rejected"] = len(w.sched.rejected)
         out["attn_impl"] = self.attn_impl
         out.update(w.counters)
+        out["prefill_chunks"] = self.prefill.counters["prefill_chunks"]
+        # 0 certifies zero per-call weight dequants this run: every PTQ'd
+        # matmul (scanned stacked leaves included) hit a fused kernel
+        fallbacks = fallback_count() - self._fallbacks0
+        self._fallbacks0 = fallback_count()
+        out["qmatmul_dequant_fallback"] = fallbacks
+        self.metrics.stats.counter("qmatmul_dequant_fallback").inc(fallbacks)
         if out.get("offload_bytes"):
             # what the frozen-page host tier saved vs demoting at fp width
             out["offload_compression"] = (out["offload_fp_equiv_bytes"]
@@ -363,6 +411,7 @@ class DisaggEngine:
         self.router = DisaggRouter(max_queue=max_queue,
                                    staging_depth=staging_depth,
                                    tracer=self.tracer)
+        self._fallbacks0 = fallback_count()
         self.block_size = block_size
         self.max_seq_len = self.decode[0].max_seq_len
         self.freeze_async = self.decode[0].freeze_async
@@ -502,6 +551,10 @@ class DisaggEngine:
         out.update(agg)
         out["prefills_done"] = sum(p.counters["prefills"]
                                    for p in self.prefills)
+        fallbacks = fallback_count() - self._fallbacks0
+        self._fallbacks0 = fallback_count()
+        out["qmatmul_dequant_fallback"] = fallbacks
+        self.metrics.stats.counter("qmatmul_dequant_fallback").inc(fallbacks)
         out["rejected"] = len(self.router.rejected)
         out["attn_impl"] = self.attn_impl
         out["migrate"] = self.migrate

@@ -64,7 +64,7 @@ import numpy as np
 from repro.core import QuantSpec
 from repro.core import registry as quant_registry
 from repro.kernels import (default_interpret, pack4, paged_decode_attention,
-                           unpack4)
+                           paged_prefill_attention, unpack4)
 
 # ------------------------------------------------------------- allocator
 
@@ -143,6 +143,7 @@ class PagedKVCache:
     packed: bool
     fused: bool = False       # decode reads go through the Pallas kernel
     fused_window: int = 1     # max fused query window (speculative verify)
+    prefill_fused: bool = False   # prefill chunks read through the kernel
 
     _LEAVES = ("k_fp", "v_fp", "k_codes", "v_codes", "k_cb", "v_cb",
                "blk_q", "block_table", "seq_lens")
@@ -152,7 +153,7 @@ class PagedKVCache:
     def tree_flatten(self):
         return (tuple(getattr(self, f) for f in self._LEAVES),
                 (self.block_size, self.quantized, self.packed, self.fused,
-                 self.fused_window))
+                 self.fused_window, self.prefill_fused))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -214,6 +215,32 @@ class PagedKVCache:
             new.seq_lens + S, softcap=softcap, quantized=new.quantized,
             packed=new.packed, interpret=default_interpret())
         return new, (out if S > 1 else out[:, None]).astype(q.dtype)
+
+    @property
+    def use_fused_prefill(self) -> bool:
+        """Fused chunked-prefill extension flag (see repro.models.cache)."""
+        return self.prefill_fused
+
+    def fused_prefill(self, q, k, v, *, softcap=None):
+        """Prefill-chunk write + fused paged attention.
+
+        The chunk's C queries sit at absolute positions
+        ``seq_lens .. seq_lens + C - 1`` — exactly the last C positions of
+        the post-write valid length, so this is ``fused_decode`` with
+        W = C and the causal chunk mask falls out of the existing windowed
+        mask (``pos <= q_offset + w``). Earlier frozen pages are read as
+        packed codes + codebooks through the same double-buffered DMA path
+        as decode; splitting a prompt into chunks is bitwise identical to
+        one whole-prompt call (the PR 5 verify-window discipline applied
+        to prefill).
+        """
+        new = self._write(k, v)
+        out = paged_prefill_attention(
+            q, new.k_fp, new.v_fp, new.k_codes, new.v_codes, new.k_cb,
+            new.v_cb, new.blk_q, new.block_table, self.seq_lens,
+            softcap=softcap, quantized=new.quantized, packed=new.packed,
+            interpret=default_interpret())
+        return new, out.astype(q.dtype)
 
     def _gather(self, fp, codes=None, cb=None):
         """Pages for this batch: (B, mb*bs, Hkv, Dh).
@@ -310,6 +337,15 @@ def with_tables(tree, block_table: np.ndarray, seq_lens: np.ndarray):
         return dataclasses.replace(leaf, block_table=b, seq_lens=s)
 
     return map_layers(per, tree)
+
+
+def with_prefill_fused(tree):
+    """Flag every layer leaf so ``models.prefill`` routes chunk attention
+    through the fused kernel (``fused_prefill``). Applied only to the
+    chunked-prefill view of the tree — the default-False flag keeps every
+    other jit cache key and golden trace unchanged."""
+    return map_layers(
+        lambda leaf: dataclasses.replace(leaf, prefill_fused=True), tree)
 
 
 def merge_pools(held, returned):

@@ -161,6 +161,19 @@ class ContinuousBatchingScheduler:
                 finished.append(st)
         return finished
 
+    def stage(self, st: SeqState) -> None:
+        """Take an admitted sequence out of the decode batch while keeping
+        its slot (and pages) reserved — the chunked-prefill engine parks a
+        sequence here between prefill chunks so interleaved decode steps
+        don't include its slot, then ``activate``s it once the whole prompt
+        is in cache."""
+        del self.active[st.slot]
+
+    def activate(self, st: SeqState) -> None:
+        """Re-enter a ``stage``d sequence into the decode batch."""
+        assert st.slot not in self.active, f"slot {st.slot} already active"
+        self.active[st.slot] = st
+
     def release(self, st: SeqState) -> None:
         del self.active[st.slot]
         self._free_slots.append(st.slot)

@@ -39,12 +39,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
-from repro.obs.export import modeled_decode_hbm_bytes
+from repro.obs.export import (modeled_decode_hbm_bytes,
+                              modeled_prefill_hbm_bytes)
 from repro.obs.trace import NULL_TRACER
 
 from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
                        init_paged_cache, install_freeze, merge_pools,
-                       page_bytes, thaw_blocks, with_tables)
+                       page_bytes, thaw_blocks, with_prefill_fused,
+                       with_tables)
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
 from .speculative import DraftWorker, window_step
 from .overload import ResumeEntry
@@ -55,6 +57,15 @@ from .transfer import (FinishedPrefill, PagePayload, extract_pages,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _prefill_step(params, toks, tree, *, cfg):
     return models.prefill(params, cfg, {"tokens": toks}, tree)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_chunk_step(params, toks, pos, tree, *, cfg):
+    # positions are explicit (off + arange(C), same 2-D form lm_prefill
+    # derives itself) so a chunk at token offset ``off`` ropes/masks exactly
+    # as the matching slice of a single whole-prompt prefill
+    return models.prefill(params, cfg, {"tokens": toks, "positions": pos},
+                          tree)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -858,6 +869,23 @@ class DecodeWorker:
                            t_memory_us=round(m["t_memory_s"] * 1e6, 6))
 
 
+@dataclasses.dataclass
+class _ChunkedPrefill:
+    """In-flight chunked prefill: one prompt advancing chunk-by-chunk so
+    the engine can interleave decode steps between chunks."""
+
+    req: Request
+    blocks: list
+    toks: np.ndarray          # (1, ppad) zero-padded prompt
+    nblk: int
+    off: int = 0              # tokens already in cache
+    last_row: object = None   # device logits row at prompt position P-1
+
+    @property
+    def done(self) -> bool:
+        return self.off >= self.toks.shape[1]
+
+
 class PrefillWorker:
     """The prefill role: queued prompts -> finished-prefill artifacts.
 
@@ -876,10 +904,15 @@ class PrefillWorker:
                  kv_spec=None, migrate: str = "fp",
                  num_blocks: int | None = None, pool: DecodeWorker | None = None,
                  record_logits: bool = False, metrics=None,
-                 max_queue: int = 64, tracer=None):
+                 max_queue: int = 64, prefill_chunk: int | None = None,
+                 tracer=None):
         from .metrics import MetricsCollector
 
         assert migrate in ("fp", "frozen"), migrate
+        assert prefill_chunk is None or (prefill_chunk >= 1
+                                         and pool is not None), (
+            "chunked prefill interleaves with a colocated decode worker's "
+            "pool — construct with pool=<DecodeWorker>")
         self.worker_id = worker_id
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._trk = f"prefill/w{worker_id}"
@@ -890,12 +923,14 @@ class PrefillWorker:
         self.pool = pool
         self.record_logits = record_logits
         self.max_queue = max_queue
+        self.prefill_chunk = prefill_chunk
         self.metrics = metrics if metrics is not None else MetricsCollector()
         self.max_prompt_blocks = -(-max_seq_len // block_size)
         self.queue: deque[Request] = deque()
         self._inflight = None      # (req, blocks, logits device array, payload)
-        self.counters = {"prefills": 0, "queue_peak": 0}
+        self.counters = {"prefills": 0, "queue_peak": 0, "prefill_chunks": 0}
         self._prefill_fn = functools.partial(_prefill_step, cfg=cfg)
+        self._chunk_fn = functools.partial(_prefill_chunk_step, cfg=cfg)
         if pool is None:
             frozen = migrate == "frozen" and kv_spec is not None
             self.num_blocks = (num_blocks if num_blocks is not None
@@ -1030,3 +1065,91 @@ class PrefillWorker:
         assert self._inflight is None and not self.queue
         self._dispatch(req, now_fn)
         return self._harvest(now_fn)
+
+    # ---------------------------------------------------------- chunked
+
+    def start_chunked(self, req: Request, now_fn) -> _ChunkedPrefill:
+        """Open a chunked prefill: allocate the request's worst-case pages
+        in the colocated pool and return the chunk cursor. The engine then
+        calls ``advance_chunk`` once per iteration, interleaved with decode
+        steps — a long prompt costs each iteration one chunk instead of
+        the whole prompt, which is what bounds ``itl_max`` under a
+        long-prompt burst."""
+        assert self.prefill_chunk and self.pool is not None
+        tr = self.tracer
+        self.metrics.prefill_start(req.id, now_fn())
+        P = req.prompt_len
+        tr.async_begin(self._trk, "prefill", req.id, rid=req.id,
+                       prompt_len=P)
+        ppad = -(-P // self.block_size) * self.block_size
+        blocks = self.pool.alloc.alloc(self.pool.sched.blocks_for(req))
+        toks = np.zeros((1, ppad), np.int32)
+        toks[0, :P] = req.prompt
+        return _ChunkedPrefill(req=req, blocks=blocks, toks=toks,
+                               nblk=ppad // self.block_size)
+
+    def advance_chunk(self, state: _ChunkedPrefill,
+                      now_fn) -> FinishedPrefill | None:
+        """Run ONE chunk of an open chunked prefill; returns the finished
+        artifact once the whole (padded) prompt is in cache, else None.
+
+        Each chunk scores its C tokens against every earlier page through
+        the same attention path decode uses — with the fused impl, frozen
+        pages cross HBM as packed codes + codebooks (the modeled-bytes win
+        on shared frozen context); positions/q_offset are explicit, so the
+        chunk sequence is logit-identical to one single-shot prefill
+        (bitwise on the gather path; see tests/test_properties.py).
+        """
+        tr = self.tracer
+        t0 = tr.now()
+        req, P = state.req, state.req.prompt_len
+        ppad = state.toks.shape[1]
+        off = state.off
+        C = min(self.prefill_chunk, ppad - off)
+        pool = self.pool
+        toks = jnp.asarray(state.toks[:, off:off + C])
+        pos = jnp.asarray(np.arange(off, off + C, dtype=np.int32)[None])
+        table = np.zeros((1, state.nblk), np.int32)
+        table[0] = state.blocks[:state.nblk]
+        tree1 = with_tables(pool.tree, table, np.full((1,), off, np.int32))
+        if pool.attn_impl == "fused":
+            tree1 = with_prefill_fused(tree1)
+        logits, new1 = self._chunk_fn(self.params, toks, pos, tree1)
+        pool.tree = merge_pools(pool.tree, new1)
+        if off <= P - 1 < off + C:
+            state.last_row = logits[0, P - 1 - off]
+        state.off = off + C
+        self.counters["prefill_chunks"] += 1
+        if tr.enabled or pool.roofline_gauges:
+            m = modeled_prefill_hbm_bytes(
+                pool._pb, state.blocks, pool._frozen_pages,
+                block_size=self.block_size, off=off, chunk=C,
+                fused=pool.attn_impl == "fused")
+            self.metrics.stats.gauge("prefill_hbm_bytes_per_token").set(
+                m["hbm_bytes_per_token"])
+            tr.counter(self._trk, "roofline",
+                       prefill_hbm_bytes_per_token=round(
+                           m["hbm_bytes_per_token"], 3))
+        tr.complete(self._trk, "prefill_chunk", t0, rid=req.id, off=off,
+                    chunk=C)
+        if not state.done:
+            return None
+        # -------- harvest: mirrors _harvest's splice branch
+        last = np.asarray(state.last_row)   # first-token sampling sync
+        now = now_fn()                        # TTFT includes all chunks
+        rng = req.make_rng()
+        tok = sample_token(last, temperature=req.temperature,
+                           top_k=req.top_k, rng=rng)
+        self.metrics.first_token(req.id, now)
+        payload = PagePayload(mode="splice",
+                              blocks=[int(b) for b in state.blocks],
+                              n_tokens=P, block_size=self.block_size,
+                              n_full=P // self.block_size,
+                              tail_rows=P % self.block_size)
+        payload.to_host()                   # splice mode stages no arrays
+        self.counters["prefills"] += 1
+        tr.async_end(self._trk, "prefill", req.id, rid=req.id)
+        return FinishedPrefill(
+            req=req, first_token=tok, payload=payload, rng=rng,
+            last_logits=last if self.record_logits else None,
+            worker_id=self.worker_id)

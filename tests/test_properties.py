@@ -12,6 +12,16 @@ Three differential/invariant suites over the paged serving stack:
     never leaks or double-books a page — the free list and the live block
     tables partition the pool at every step boundary.
 
+Two further differential suites ride the same dual-driver pattern:
+
+  * chunked prefill == single-shot prefill, BITWISE, at both levels: raw
+    ``paged_prefill_attention`` chunk sequences vs one whole-prompt call
+    (chunk boundaries crossing page boundaries, frozen and fp pages), and
+    the continuous engine with ``prefill_chunk`` vs inline prefill (same
+    tokens, same recorded logits, same frozen-page installs);
+  * stacked-group ``quant_matmul_stacked`` vs the dense oracle and the
+    flat per-group kernel, <= 1e-5, across padded/unpadded tile shapes.
+
 Each property has two drivers sharing one check body: a seeded random
 corpus that runs everywhere (no hypothesis required — the same pattern as
 ``test_spec``), and a hypothesis-randomized variant when hypothesis is
@@ -28,7 +38,10 @@ import pytest
 
 from repro import models
 from repro.configs import get_reduced_config
-from repro.kernels import pack4, paged_decode_attention, ref_paged_decode
+from repro.kernels import (modeled_prefill_hbm_bytes_per_token, pack4,
+                           paged_decode_attention, paged_prefill_attention,
+                           quant_matmul, quant_matmul_stacked,
+                           ref_paged_decode, ref_quant_matmul_stacked)
 from repro.serving import (ContinuousBatchingEngine, Request, derive_draft,
                            extract_pages, init_paged_cache, splice_payload)
 from repro.serving.transfer import collect_leaves
@@ -349,3 +362,214 @@ if HAVE_HYP:
     def test_tiered_residency_conservation_property(qwen_reduced, reqs,
                                                     speculate):
         _check_tiered_conservation(qwen_reduced, reqs, speculate)
+
+
+# --------------------------------------------- chunked prefill == single
+
+def _prefill_state(bs, Hkv, G, Dh, B, mb, frozen, seed=1):
+    L = 16
+    rng = np.random.default_rng(seed)
+    nb = B * mb + 1
+    kfp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, Dh)), jnp.float32)
+    vfp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, Dh)), jnp.float32)
+    kc = pack4(jnp.asarray(rng.integers(0, L, (nb, bs, Hkv, Dh))
+                           .astype(np.uint8)))
+    vc = pack4(jnp.asarray(rng.integers(0, L, (nb, bs, Hkv, Dh))
+                           .astype(np.uint8)))
+    kcb = jnp.asarray(rng.normal(size=(nb, L)), jnp.float32)
+    vcb = jnp.asarray(rng.normal(size=(nb, L)), jnp.float32)
+    blkq = np.zeros((nb,), np.int32)
+    blkq[list(frozen)] = 1
+    state = (kfp, vfp, kc, vc, kcb, vcb, jnp.asarray(blkq))
+    table = jnp.asarray(1 + np.arange(B * mb).reshape(B, mb), jnp.int32)
+    return state, table, rng
+
+
+def _check_chunked_prefill_kernel(bs, Hkv, G, Dh, mb, chunk, frozen, P,
+                                  softcap):
+    """A chunk sequence must be BITWISE equal to one whole-prompt call:
+    same pages walked in the same order, per-row online-softmax carry."""
+    B, Hq = 2, Hkv * G
+    state, table, rng = _prefill_state(bs, Hkv, G, Dh, B, mb, frozen)
+    q = jnp.asarray(rng.normal(size=(B, P, Hq, Dh)), jnp.float32)
+    whole = paged_prefill_attention(
+        q, *state, table, jnp.zeros((B,), jnp.int32), softcap=softcap,
+        quantized=True, packed=True, interpret=True)
+    parts = []
+    for off in range(0, P, chunk):
+        C = min(chunk, P - off)
+        parts.append(paged_prefill_attention(
+            q[:, off:off + C], *state, table,
+            jnp.full((B,), off, jnp.int32), softcap=softcap,
+            quantized=True, packed=True, interpret=True))
+    got = jnp.concatenate(parts, axis=1)
+    assert np.array_equal(np.asarray(got), np.asarray(whole))
+
+
+def _random_chunk_geom(rng):
+    bs = int(rng.choice([4, 8]))
+    Hkv = int(rng.choice([1, 2]))
+    G = int(rng.choice([1, 2]))
+    Dh = int(rng.choice([8, 16]))
+    mb = int(rng.integers(1, 4))
+    P = int(rng.integers(1, mb * bs + 1))
+    chunk = int(rng.integers(1, P + 1))
+    nb = 2 * mb + 1
+    n_frozen = int(rng.integers(0, nb))
+    frozen = rng.choice(np.arange(1, nb), size=min(n_frozen, nb - 1),
+                        replace=False).tolist()
+    softcap = None if rng.integers(2) else 30.0
+    return bs, Hkv, G, Dh, mb, chunk, frozen, P, softcap
+
+
+def test_chunked_prefill_kernel_bitwise_seeded_corpus():
+    # chunk 5 over page size 8: every boundary case (chunk crossing a page,
+    # chunk == page, ragged tail) plus fully-frozen and fully-fp prefixes
+    _check_chunked_prefill_kernel(8, 2, 2, 8, 3, 5, [1, 2, 4, 6], 21, None)
+    _check_chunked_prefill_kernel(8, 1, 2, 8, 2, 8, [], 16, 30.0)
+    _check_chunked_prefill_kernel(4, 2, 1, 16, 3, 1, list(range(1, 7)), 12,
+                                  None)
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        _check_chunked_prefill_kernel(*_random_chunk_geom(rng))
+
+
+if HAVE_HYP:
+    @st.composite
+    def chunk_geoms(draw):
+        bs = draw(st.sampled_from([4, 8]))
+        Hkv = draw(st.sampled_from([1, 2]))
+        G = draw(st.sampled_from([1, 2]))
+        Dh = draw(st.sampled_from([8, 16]))
+        mb = draw(st.integers(1, 3))
+        P = draw(st.integers(1, mb * bs))
+        chunk = draw(st.integers(1, P))
+        nb = 2 * mb + 1
+        frozen = draw(st.lists(st.integers(1, nb - 1), unique=True,
+                               max_size=nb - 1))
+        softcap = draw(st.sampled_from([None, 30.0]))
+        return bs, Hkv, G, Dh, mb, chunk, frozen, P, softcap
+
+    @needs_hyp
+    @given(chunk_geoms())
+    def test_chunked_prefill_kernel_bitwise_property(geom):
+        _check_chunked_prefill_kernel(*geom)
+
+
+def test_modeled_prefill_bytes_frozen_reduction():
+    """>=50%-frozen shared context must model >= 2x fewer prefill HBM
+    bytes/token for the fused chunked path than the gather expand."""
+    B, mb, bs = 2, 4, 8
+    table = 1 + np.arange(B * mb).reshape(B, mb).astype(np.int32)
+    lens = np.full((B,), mb * bs, np.int32)
+    blkq = np.zeros((B * mb + 1,), np.int32)
+    blkq[1:1 + B * mb // 2 + 1] = 1          # just over half the pages
+    kw = dict(chunk=bs, block_size=bs, n_kv_heads=2, head_dim=16,
+              num_values=16, quantized=True, packed=True)
+    fused = modeled_prefill_hbm_bytes_per_token(table, lens, blkq,
+                                                path="fused", **kw)
+    gather = modeled_prefill_hbm_bytes_per_token(table, lens, blkq,
+                                                 path="gather", **kw)
+    assert gather / fused >= 2.0, (gather, fused)
+
+
+def _check_chunked_prefill_engine(qwen_reduced, plens, chunk, kv_quant,
+                                  gen):
+    """Engine-level differential: prefill_chunk vs inline prefill must
+    emit the same tokens, the same recorded logits (bitwise), and freeze
+    the same number of pages, with chunks interleaving live decodes
+    (max_slots < len(plens) forces it)."""
+    from repro.obs import Tracer, count_events
+
+    cfg, params = qwen_reduced
+    rng = np.random.default_rng(1000 * chunk + sum(plens) + gen)
+    prompts = [rng.integers(0, cfg.vocab, p).tolist() for p in plens]
+    outs, engines, tracers = [], [], []
+    for pc in (None, chunk):
+        tr = Tracer()
+        eng = ContinuousBatchingEngine(
+            params, cfg, max_slots=2, block_size=8, max_seq_len=64,
+            kv_quant=kv_quant, record_logits=True, freeze_async=False,
+            prefill_chunk=pc, tracer=tr)
+        outs.append(eng.generate(prompts, max_new_tokens=gen))
+        engines.append(eng)
+        tracers.append(tr)
+    single, chunked = engines
+    assert outs[0] == outs[1]
+    for i in range(len(prompts)):
+        assert np.array_equal(single.request_logits[i],
+                              chunked.request_logits[i])
+    # flush batching is a scheduling artifact (chunked admission lands
+    # bids on different iterations), but the freeze BIDS — one page_freeze
+    # span opens per queued page, at attach for the whole prompt in both
+    # modes — must be identical
+    if kv_quant is not None:
+        bids = [count_events(tr.events, name="page_freeze", ph="b")
+                for tr in tracers]
+        assert bids[0] == bids[1], bids
+    want = sum(-(-(-(-p // 8) * 8) // chunk) for p in plens)
+    assert chunked.prefill.counters["prefill_chunks"] == want
+    assert single.prefill.counters["prefill_chunks"] == 0
+
+
+def test_chunked_prefill_engine_bitwise_seeded_corpus(qwen_reduced):
+    # chunk 5 on block 8 crosses page boundaries; fp and frozen pages
+    for kv_quant in (None, "kmeans_ls@16"):
+        _check_chunked_prefill_engine(qwen_reduced, (21, 13, 17), 5,
+                                      kv_quant, 6)
+    _check_chunked_prefill_engine(qwen_reduced, (16, 9), 8, "kmeans_ls@16",
+                                  4)
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(st.lists(st.integers(9, 25), min_size=2, max_size=3),
+           st.integers(2, 9), st.sampled_from([None, "kmeans_ls@16"]))
+    def test_chunked_prefill_engine_bitwise_property(qwen_reduced, plens,
+                                                     chunk, kv_quant):
+        _check_chunked_prefill_engine(qwen_reduced, tuple(plens), chunk,
+                                      kv_quant, 4)
+
+
+# ------------------------------------------- stacked quant_matmul oracle
+
+
+def _check_stacked_qmatmul(G, M, K, N, L, seed):
+    """Stacked-group kernel == dense oracle and == the flat kernel run
+    group-by-group, <= 1e-5 (same fp32 accumulate, padded tiles)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(G, M, K)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, L, (G, K, N)).astype(np.uint8))
+    cb = jnp.asarray(rng.normal(size=(G, L)), jnp.float32)
+    out = np.asarray(quant_matmul_stacked(x, idx, cb, interpret=True))
+    oracle = np.asarray(ref_quant_matmul_stacked(x, idx, cb))
+    np.testing.assert_allclose(out, oracle, atol=1e-5, rtol=1e-5)
+    flat = np.stack([np.asarray(quant_matmul(x[g], idx[g], cb[g],
+                                             interpret=True))
+                     for g in range(G)])
+    np.testing.assert_allclose(out, flat, atol=1e-5, rtol=1e-5)
+
+
+def test_stacked_qmatmul_matches_oracle_seeded_corpus():
+    # ragged shapes exercise the pad/unpad wrapper; 1-group degenerates to
+    # the flat kernel's tiling
+    _check_stacked_qmatmul(3, 5, 17, 9, 16, 0)
+    _check_stacked_qmatmul(1, 1, 8, 8, 4, 1)
+    rng = np.random.default_rng(13)
+    for _ in range(6):
+        _check_stacked_qmatmul(int(rng.integers(1, 5)),
+                               int(rng.integers(1, 20)),
+                               int(rng.integers(1, 33)),
+                               int(rng.integers(1, 20)),
+                               int(rng.choice([4, 16])),
+                               int(rng.integers(0, 100)))
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @given(st.integers(1, 4), st.integers(1, 12), st.integers(1, 24),
+           st.integers(1, 12), st.sampled_from([4, 16]),
+           st.integers(0, 50))
+    def test_stacked_qmatmul_matches_oracle_property(G, M, K, N, L, seed):
+        _check_stacked_qmatmul(G, M, K, N, L, seed)
