@@ -1,0 +1,18 @@
+"""Prefix-sharing benchmark suite entry point.
+
+The scenario lives in ``bench_serving.run_prefix_sharing`` (shared-prefix
+burst at a fixed page pool: refcounted copy-on-write sharing vs the
+no-sharing baseline — effective capacity, TTFT, prefix counters; greedy-
+identical traces asserted); this module exists so
+``python -m benchmarks.run prefix_sharing`` finds it under its artifact's
+name, BENCH_prefix_sharing.json.
+
+    PYTHONPATH=src python -m benchmarks.run prefix_sharing
+    PYTHONPATH=src python -m benchmarks.bench_serving --prefix
+"""
+from __future__ import annotations
+
+from .bench_serving import run_prefix_sharing as run
+
+if __name__ == "__main__":
+    run()

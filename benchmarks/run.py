@@ -8,7 +8,8 @@ import time
 
 SUITES = ["nn_weights", "l1l2", "alpha_dist", "image", "synthetic",
           "scaling", "kernels", "roofline", "paged_attention", "serving",
-          "disagg_serving", "spec_decode", "quant_api", "overload"]
+          "disagg_serving", "spec_decode", "quant_api", "overload",
+          "prefix_sharing"]
 
 
 def main() -> None:

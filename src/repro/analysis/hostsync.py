@@ -6,9 +6,11 @@ inside the decode loop serializes the host against the device pipeline and
 silently halves throughput — the exact failure mode PR 2's async freeze
 path was built to avoid.  This pass audits the hot-path modules
 (``serving/workers.py``, ``serving/speculative.py``,
-``serving/kv_cache.py``, ``kernels/paged_attention.py``), computes the set
-of functions reachable from any ``step()`` entry point by name-based call
-graph, and flags host-sync constructs inside them:
+``serving/kv_cache.py`` — including the ``PrefixIndex`` rolling-hash
+publish/lookup that runs on every prefill dispatch and freeze install —
+and ``kernels/paged_attention.py``), computes the set of functions
+reachable from any ``step()`` entry point by name-based call graph, and
+flags host-sync constructs inside them:
 
   SYNC001  jax.block_until_ready(...)            (always a sync)
   SYNC002  np.asarray / np.array on a device value

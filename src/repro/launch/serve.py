@@ -126,6 +126,27 @@ overload survival (continuous + disagg engines):
   compression; --trace-out reconciles page_offload spans (terminal
   state "restored") against those counters.
 
+prefix sharing (--prefix-cache, continuous engine):
+  Sequences whose prompts share a page-aligned prefix splice the SAME
+  resident KV pages instead of re-prefilling them: a rolling token-hash
+  index keys every immutable full page (installed-frozen reconstructions
+  under --kv-quant, exact-fp prompt pages otherwise) by its whole prefix
+  chain, and each match bumps the page's refcount in the allocator — a
+  page returns to the free list only when its last reference drops.
+  The write-hot tail page is never shared: lookups stop one page short
+  of the prompt end, so each sequence materializes its divergence
+  privately (copy-on-write; cow_copies counts matches truncated at that
+  boundary). Admission charges worst-case-minus-shareable pages, which
+  is what turns sharing into extra concurrent sequences per pool.
+  Composes with speculative decoding (rollback stays past the shared
+  prompt prefix), preemption/offload (a victim drops refs on shared
+  pages instead of demoting them; payloads carry only exclusively-owned
+  pages), and chunked prefill (chunks start after the shared run).
+  --shared-prefix-len N makes the generated trace share its first N
+  prompt tokens across requests (the shared-prefix burst scenario).
+  The summary reports prefix_hits / prefix_shared_pages / cow_copies,
+  and --trace-out reconciles prefix_match spans against prefix_hits.
+
 chunked prefill (--prefill-chunk N, continuous engine):
   Admission reserves the slot and worst-case pages up front, then the
   prompt enters the cache N tokens per engine iteration, interleaved with
@@ -231,11 +252,12 @@ def _make_draft(params, cfg, args):
 
 def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
                  freeze_async=True, speculate=None, draft=None,
-                 tracer=None, exporter=None, overload=False):
+                 tracer=None, exporter=None, overload=False,
+                 prefix_cache=False):
     """Build the engine composition ``args`` asks for (colocated vs
     disaggregated) — verification replays run through the same one
-    (with tracer/exporter AND the overload machinery left off: replays
-    are correctness probes on an uncontended pool)."""
+    (with tracer/exporter AND the overload/prefix-sharing machinery left
+    off: replays are correctness probes on an uncontended pool)."""
     from repro.serving import ContinuousBatchingEngine, DisaggEngine
 
     speculate = args.speculate if speculate is None else speculate
@@ -258,7 +280,8 @@ def _make_engine(params, cfg, args, *, kv_quant, record_logits=False,
                             migrate=migrate,
                             staging_depth=args.staging_depth, **kw)
     return ContinuousBatchingEngine(params, cfg,
-                                    prefill_chunk=args.prefill_chunk, **kw)
+                                    prefill_chunk=args.prefill_chunk,
+                                    prefix_cache=prefix_cache, **kw)
 
 
 def _verify_serving(params, cfg, args, draft=None):
@@ -399,9 +422,16 @@ def _trace_reconcile(tracer, s, speculate: int) -> bool:
                  == s.get("preemptions", 0))
     ok = ok and (count_events(ev, name="restore", ph="i")
                  == s.get("restored_seqs", 0))
+    # prefix sharing: every counted hit carries exactly one prefix_match
+    # span (prefill dispatch or restore re-attach), and vice versa
+    n_pm = count_events(ev, name="prefix_match", ph="X")
+    ok = ok and n_pm == s.get("prefix_hits", 0)
     state_txt = (", ".join(f"{k}={v}" for k, v in sorted(states.items()))
                  or "none")
     off_txt = f", page-offload spans {ob} -> {oe} restored" if ob else ""
+    if n_pm or s.get("prefix_hits"):
+        off_txt += (f", prefix_match spans {n_pm} "
+                    f"(counter {s.get('prefix_hits', 0)})")
     if n_pc or s.get("prefill_chunks"):
         off_txt += (f", prefill_chunk spans {n_pc} "
                     f"(counter {s.get('prefill_chunks', 0)})")
@@ -451,14 +481,15 @@ def _run_continuous(args):
                                        interval_s=args.metrics_interval)
     eng = _make_engine(params, cfg, args, kv_quant=args.kv_quant,
                        draft=draft, tracer=tracer, exporter=exporter,
-                       overload=True)
+                       overload=True, prefix_cache=args.prefix_cache)
     be_frac = (1.0 if args.priority == "best_effort"
                else args.best_effort_frac)
     trace = poisson_trace(args.num_requests, args.request_rate,
                           vocab=cfg.vocab, prompt_len=args.prompt_len,
                           max_new_tokens=args.gen, seed=args.seed,
                           temperature=args.temperature, top_k=args.top_k,
-                          best_effort_frac=be_frac)
+                          best_effort_frac=be_frac,
+                          shared_prefix_len=args.shared_prefix_len)
     tag = (f"disagg {args.prefill_workers}P/{args.decode_workers}D "
            f"migrate={eng.migrate}" if args.engine == "disagg"
            else "continuous batching")
@@ -526,6 +557,10 @@ def _run_continuous(args):
         print(f"[serve] admission ({args.admission}"
               + (f", itl_slo={args.itl_slo}s" if args.itl_slo else "")
               + f"): {txt}")
+    if args.prefix_cache:
+        print(f"[serve] prefix cache: {s.get('prefix_hits', 0)} hits, "
+              f"{s.get('prefix_shared_pages', 0)} pages spliced shared, "
+              f"{s.get('cow_copies', 0)} copy-on-write tail materializations")
     if s.get("preemptions"):
         comp = s.get("offload_compression", 0.0)
         print(f"[serve] overload: {s['preemptions']} preemptions "
@@ -597,6 +632,14 @@ def main():
                     default="auto",
                     help="decode read path: fused Pallas paged-attention "
                          "kernel vs dense gather (auto: fused on TPU)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous engine: share page-aligned common "
+                         "prompt prefixes across sequences via refcounted "
+                         "copy-on-write pages (see epilog)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="share the first N prompt tokens across every "
+                         "request in the generated trace (the shared-prefix "
+                         "burst scenario --prefix-cache exploits)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="continuous engine: admit prompts in N-token "
                          "chunks, one per engine iteration, interleaved "
@@ -694,6 +737,11 @@ def main():
                      "decode loop (disagg already overlaps via workers)")
         if args.prefill_chunk < 1:
             ap.error("--prefill-chunk must be >= 1 token")
+    if args.prefix_cache and args.engine != "continuous":
+        ap.error("--prefix-cache shares pages within one colocated pool "
+                 "(the continuous engine); disagg pools migrate pages out")
+    if args.shared_prefix_len and not serving:
+        ap.error("--shared-prefix-len shapes the continuous/disagg trace")
     if args.prompt_len is None:
         args.prompt_len = 64 if serving else 16
     if args.gen is None:

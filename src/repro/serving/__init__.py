@@ -18,15 +18,24 @@ Overload survival (``overload``): tiered frozen-page host offload
 restore-vs-recompute cost model, and SLO-aware admission
 (``SLOAdmission``) shedding/deferring best_effort requests off windowed
 itl_p99 + occupancy — wired into both engines via ``offload_pages`` /
-``preempt`` / ``admission="slo"``."""
+``preempt`` / ``admission="slo"``.
+
+Prefix sharing (``prefix_cache=True``, colocated engine): a rolling
+token-hash ``PrefixIndex`` over immutable full pages plus per-page
+refcounts in ``BlockAllocator`` let sequences with a common prompt prefix
+splice the same resident pages (rc+1 per table) instead of re-prefilling
+them; the write-hot tail page is materialized privately (copy-on-write),
+and a page releases to the free list only when its last reference drops —
+the pool-conservation invariant becomes "free list + refcounted live
+tables partition the pool"."""
 from repro.obs import (FakeClock, MetricsExporter, NULL_TRACER, NullTracer,
                        Tracer)
 
 from .engine import ContinuousBatchingEngine, DisaggEngine
-from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, PagedKVCache,
-                       PoolExhausted, freeze_blocks, freeze_markers,
-                       init_paged_cache, page_bytes, resolve_kv_spec,
-                       thaw_blocks, with_tables)
+from .kv_cache import (BlockAllocator, DEVICE_FREEZE_METHODS, DoubleFree,
+                       PagedKVCache, PoolExhausted, PrefixIndex,
+                       freeze_blocks, freeze_markers, init_paged_cache,
+                       page_bytes, resolve_kv_spec, thaw_blocks, with_tables)
 from .metrics import MetricsCollector, percentile
 from .overload import (HostPageStore, OverloadManager, ResumeEntry,
                        SLOAdmission, choose_resume)
@@ -40,7 +49,7 @@ from .workers import DecodeWorker, PrefillWorker, sample_token
 __all__ = [
     "ContinuousBatchingEngine", "DisaggEngine", "ContinuousBatchingScheduler",
     "DisaggRouter", "Request", "SeqState", "BlockAllocator", "PagedKVCache",
-    "PoolExhausted",
+    "PoolExhausted", "DoubleFree", "PrefixIndex",
     "DecodeWorker", "PrefillWorker", "DraftWorker", "derive_draft",
     "FinishedPrefill", "PagePayload",
     "extract_pages", "extract_resident_pages", "splice_payload",

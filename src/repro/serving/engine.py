@@ -109,7 +109,8 @@ class ContinuousBatchingEngine:
                  draft: tuple | None = None, prefill_chunk: int | None = None,
                  tracer=None, exporter=None,
                  offload_pages: bool = False, preempt: bool = False,
-                 admission: str = "fcfs", itl_slo_s: float | None = None):
+                 admission: str = "fcfs", itl_slo_s: float | None = None,
+                 prefix_cache: bool = False):
         assert cfg.family == "lm", "paged serving drives decoder-only LMs"
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.exporter = exporter
@@ -137,7 +138,8 @@ class ContinuousBatchingEngine:
             speculate=speculate, draft=draft,
             metrics=self.metrics, outputs=self.outputs,
             request_logits=self.request_logits, tracer=self.tracer,
-            roofline_gauges=exporter is not None)
+            roofline_gauges=exporter is not None,
+            prefix_cache=prefix_cache)
         # prefill worker inlined into the decode worker's pool: the handoff
         # payload is a no-op "splice" of already-resident block ids
         self.prefill = PrefillWorker(
@@ -270,7 +272,13 @@ class ContinuousBatchingEngine:
                 # is still an iteration away) ahead of every queued arrival
                 om.retry_deferred(w)
                 om.try_restore(w, now_fn)
-            for st in w.sched.schedule(w.alloc.num_free):
+            # with the prefix cache on, admission charges each request its
+            # worst case minus the prompt pages already shareable — the
+            # capacity side of sharing (attach splices those pages instead
+            # of allocating them, so the discounted need is what prefill
+            # actually draws from the pool)
+            disc = w.prefix_probe if w.prefix is not None else None
+            for st in w.sched.schedule(w.alloc.num_free, discount=disc):
                 if self.prefill_chunk:
                     # chunked path: pages allocated now, prompt advances
                     # one chunk per iteration below; the slot stays out of
@@ -301,6 +309,15 @@ class ContinuousBatchingEngine:
             if self.exporter is not None:
                 self.exporter.maybe_emit(self.metrics)
         w.drain()
+        if om is not None:
+            # host-tier retirement backstop: an entry still demoted when
+            # the run ends (its request finished/was cancelled while
+            # offloaded, or restore never fired) is reclaimed here so both
+            # residency tiers provably drain to empty; its output is
+            # whatever it emitted before eviction
+            for entry in om.store.entries():
+                om.retire(entry.req.id)
+                self.outputs.setdefault(entry.req.id, list(entry.out))
         if self.exporter is not None:
             self.exporter.maybe_emit(self.metrics, force=True)
         out = self.metrics.summary()
@@ -537,6 +554,11 @@ class DisaggEngine:
             assert not pw.busy
         for dw in self.decode:
             dw.drain()
+        if self.overload is not None:
+            # same host-tier retirement backstop as the colocated engine
+            for entry in self.overload.store.entries():
+                self.overload.retire(entry.req.id)
+                self.outputs.setdefault(entry.req.id, list(entry.out))
         if self.exporter is not None:
             self.exporter.maybe_emit(self.metrics, force=True)
         return self._summary()

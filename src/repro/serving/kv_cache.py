@@ -81,32 +81,156 @@ class PoolExhausted(MemoryError):
         super().__init__(f"asked {requested} blocks, {free} free")
 
 
+class DoubleFree(ValueError):
+    """Typed allocator failure for freeing a block that is already on the
+    free list (or was never allocated). Subclasses ValueError so legacy
+    callers that caught the old bare-ValueError message keep working; the
+    offending id rides along for return-path audits."""
+
+    def __init__(self, block: int):
+        self.block = block
+        super().__init__(f"double free / foreign block {block}")
+
+
 class BlockAllocator:
-    """Host-side free-list page allocator. Block 0 is never handed out."""
+    """Host-side free-list page allocator with per-page refcounts. Block 0
+    is never handed out.
+
+    Refcount protocol (prefix sharing): ``alloc`` hands out pages at rc 1;
+    ``retain`` bumps rc for every table that splices an already-live page;
+    ``free`` drops rc and releases a page to the free list only when its
+    last reference goes away. ``free`` returns the ids actually released so
+    callers can scope teardown side effects (thawing, span drops, frozen-set
+    removal) to pages no other sequence still serves from."""
 
     def __init__(self, num_blocks: int):
         assert num_blocks >= 2, "need at least one allocatable block"
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids first
         self._used: set[int] = set()
+        self._rc: dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    def refcount(self, b: int) -> int:
+        return self._rc.get(int(b), 0)
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
             raise PoolExhausted(n, len(self._free))
         out = [self._free.pop() for _ in range(n)]
         self._used.update(out)
+        for b in out:
+            self._rc[b] = 1
         return out
 
-    def free(self, ids) -> None:
+    def retain(self, ids) -> None:
+        """Add one reference per id for a table sharing already-live pages."""
         for b in ids:
+            b = int(b)
             if b not in self._used:
-                raise ValueError(f"double free / foreign block {b}")
-            self._used.remove(b)
-            self._free.append(b)
+                raise ValueError(f"retain of non-live block {b}")
+            self._rc[b] += 1
+
+    def free(self, ids) -> list[int]:
+        """Drop one reference per id; release pages whose rc hits 0.
+
+        Returns the ids actually released (rc reached zero) in drop order.
+        Freeing an id that is not live raises ``DoubleFree``.
+        """
+        released: list[int] = []
+        for b in ids:
+            b = int(b)
+            if b not in self._used:
+                raise DoubleFree(b)
+            self._rc[b] -= 1
+            if self._rc[b] == 0:
+                del self._rc[b]
+                self._used.remove(b)
+                self._free.append(b)
+                released.append(b)
+        return released
+
+
+# ------------------------------------------------------------- prefix index
+
+
+class PrefixIndex:
+    """Rolling token-hash index over installed-frozen full pages.
+
+    Each published page is keyed by ``(chain_hash, page_tokens)`` where
+    ``chain_hash`` rolls over every preceding page of the same prompt
+    (``h_0 = 0``, ``h_{i+1} = hash((h_i, page_i_tokens))``), so a lookup
+    walks the longest run of full pages whose *entire prefix* matches a
+    published chain — a radix trie keyed one page per edge. Only immutable
+    pages publish: installed-frozen codebook reconstructions on quantized
+    pools, full prompt pages on unquantized pools (prompt rows never
+    rewrite once written) — safe for any number of tables to reference.
+    Entries die with their page: the worker calls ``invalidate`` with the
+    ids ``BlockAllocator.free`` actually released.
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self._map: dict[tuple, int] = {}          # (chain_hash, page) -> bid
+        self._keys: dict[int, list] = {}          # bid -> keys published
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    @staticmethod
+    def _link(parent: int, page: tuple) -> int:
+        # int/tuple hashing is unsalted in CPython, so chains are stable
+        # across processes (tests may compare index sizes run-to-run)
+        return hash((parent, page))
+
+    def publish(self, tokens, blocks, frozen) -> int:
+        """Register the full pages of ``tokens`` served by ``blocks`` whose
+        ids are in ``frozen``, stopping at the first non-frozen page (a
+        chain must be contiguous from the root). ``frozen=None`` marks every
+        full page eligible — the unquantized-pool case, where full prompt
+        pages are immutable exact-fp rows the moment prefill wrote them.
+        Idempotent; first publisher of a (chain, page) key wins. Returns
+        new entries added."""
+        bs = self.block_size
+        h, added = 0, 0
+        for i in range(min(len(tokens) // bs, len(blocks))):
+            bid = int(blocks[i])
+            if frozen is not None and bid not in frozen:
+                break
+            page = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            key = (h, page)
+            if key not in self._map:
+                self._map[key] = bid
+                self._keys.setdefault(bid, []).append(key)
+                added += 1
+            h = self._link(h, page)
+        return added
+
+    def lookup(self, tokens, max_pages: int) -> list[int]:
+        """Longest run of published pages matching ``tokens`` from position
+        0, capped at ``max_pages``; returns their block ids in order."""
+        bs = self.block_size
+        h, out = 0, []
+        limit = min(len(tokens) // bs, max_pages)
+        for i in range(limit):
+            page = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            bid = self._map.get((h, page))
+            if bid is None:
+                break
+            out.append(bid)
+            h = self._link(h, page)
+        return out
+
+    def invalidate(self, released_ids) -> None:
+        """Forget every entry served by a page whose last reference was
+        just released (the id may be reallocated with different content)."""
+        for bid in released_ids:
+            for key in self._keys.pop(int(bid), ()):
+                if self._map.get(key) == int(bid):
+                    del self._map[key]
 
 
 # ------------------------------------------------------------- paged cache

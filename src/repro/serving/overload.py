@@ -64,6 +64,11 @@ class ResumeEntry:
     payload: PagePayload | None = None         # None = recompute path
     frozen_idx: list = dataclasses.field(default_factory=list)
     span_ids: dict = dataclasses.field(default_factory=dict)  # page pos -> span
+    # leading pages the victim shared with other live tables at eviction:
+    # they dropped a ref instead of demoting (the payload never captures
+    # them), and restore re-attaches them from the prefix index — or
+    # rebuilds them deterministically if their last reference died
+    shared_pages: int = 0
 
     @property
     def restore_bytes(self) -> int:
@@ -91,6 +96,13 @@ class HostPageStore:
 
     def pop(self, rid: int) -> ResumeEntry:
         return self._entries.pop(rid)
+
+    def release(self, rid: int) -> ResumeEntry | None:
+        """Reclaim a retired request's entry (finished or cancelled while
+        offloaded) — unlike ``pop``, absent is fine. Without this, a
+        demoted payload whose request never restores leaks in the host
+        tier forever."""
+        return self._entries.pop(rid, None)
 
     def __contains__(self, rid: int) -> bool:
         return rid in self._entries
@@ -288,6 +300,19 @@ class OverloadManager:
             n += 1
         return n
 
+    # ------------------------------------------------------------ retire
+
+    def retire(self, rid: int) -> ResumeEntry | None:
+        """Release a request's host-tier residency on retirement (it
+        finished, was cancelled, or the run is over while it sat demoted):
+        drop its store entry and resume-queue slot. Returns the released
+        entry (its ``out`` is everything the request ever emitted) or None
+        if the request was not demoted."""
+        entry = self.store.release(rid)
+        if entry is not None:
+            self.resume = deque(e for e in self.resume if e.req.id != rid)
+        return entry
+
     # ------------------------------------------------------------ preempt
 
     def _queue_head(self, worker):
@@ -326,10 +351,11 @@ class OverloadManager:
         page_blocked = need > worker.alloc.num_free
         if not (slot_blocked or page_blocked):
             return None
-        # only sequences that attended >= 1 decode step since their last
-        # attach/restore are evictable: preempting a sequence that made no
-        # progress would let a blocked head thrash a victim in and out of
-        # the host tier without the system ever advancing
+        # the LRU signal is seeded at attach/restore time, so a sequence is
+        # visible to preemption from the moment it holds pages — a
+        # just-attached best_effort victim (coldest possible: zero steps
+        # attended) must not hide from a capacity-blocked latency head
+        # behind a missing last_attended entry
         victims = [st for st in worker.sched.active.values()
                    if getattr(st.req, "priority", "latency") == "best_effort"
                    and st.slot in worker.last_attended]
@@ -358,10 +384,14 @@ class OverloadManager:
         if st is None:
             return False
         s = worker.slots[st.slot]
+        # shared prefix pages neither demote nor restore — they drop a ref
+        # and re-attach from the index — so the cost model sees only the
+        # exclusively-owned suffix on both sides of the tradeoff
+        sh = worker.shared_prefix_pages(st.slot)
         full = int(worker.lens[st.slot]) // worker.block_size
-        frozen = sum(1 for b in s.blocks[:full]
+        frozen = sum(1 for b in s.blocks[sh:full]
                      if b in worker._frozen_pages)
-        n_pages = -(-int(worker.lens[st.slot]) // worker.block_size)
+        n_pages = -(-int(worker.lens[st.slot]) // worker.block_size) - sh
         pb = worker._pb
         est = frozen * pb["frozen"] + (n_pages - frozen) * pb["fp"]
         exact = (worker.kv_spec is not None

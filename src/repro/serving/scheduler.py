@@ -109,7 +109,7 @@ class ContinuousBatchingScheduler:
 
     # ------------------------------------------------------------ per step
 
-    def schedule(self, free_blocks: int) -> list[SeqState]:
+    def schedule(self, free_blocks: int, discount=None) -> list[SeqState]:
         """Admit FCFS from the queue into free slots while pages last.
 
         Returns newly admitted sequences (their prefill runs this
@@ -117,11 +117,19 @@ class ContinuousBatchingScheduler:
         schedule deterministic and starvation-free. Preempted requests
         drain first — they were already admitted once, so a queued arrival
         never overtakes them.
+
+        ``discount(req)`` (optional) returns pages of the request's prompt
+        already resident and shareable (prefix-cache probe): admission
+        charges worst-case-minus-shareable, which is what turns page
+        sharing into extra sequences per pool rather than just faster
+        prefills.
         """
         admitted = []
         while (self.preempted or self.waiting) and self._free_slots:
             q = self.preempted if self.preempted else self.waiting
             need = self.blocks_for(q[0])
+            if discount is not None:
+                need = max(need - discount(q[0]), 0)
             if need > free_blocks:
                 break
             req = q.popleft()
@@ -328,19 +336,26 @@ def make_requests(prompts, max_new_tokens: int, *, temperature: float = 0.0,
 
 def poisson_trace(n: int, rate: float, *, vocab: int, prompt_len: int,
                   max_new_tokens: int, seed: int = 0, temperature: float = 0.0,
-                  top_k: int = 0,
-                  best_effort_frac: float = 0.0) -> list[Request]:
+                  top_k: int = 0, best_effort_frac: float = 0.0,
+                  shared_prefix_len: int = 0) -> list[Request]:
     """n requests with exp(1/rate) inter-arrival gaps (rate in req/s).
     Sampling knobs apply to every request; per-request sampling seeds
     derive from ``seed`` so a trace replays deterministically.
     ``best_effort_frac`` marks that (deterministic, seed-derived) fraction
-    of requests "best_effort" — the tier SLO-aware admission sheds first."""
+    of requests "best_effort" — the tier SLO-aware admission sheds first.
+    ``shared_prefix_len`` prepends one seed-derived common token run to
+    every prompt (a shared system prompt / few-shot block): the workload
+    shape the prefix cache deduplicates."""
+    assert 0 <= shared_prefix_len <= prompt_len
     rng = np.random.default_rng(seed)
     t = np.cumsum(rng.exponential(1.0 / rate, n))
     tiers = rng.random(n) < best_effort_frac
+    common = tuple(int(x) for x in
+                   rng.integers(0, vocab, shared_prefix_len))
+    uniq = prompt_len - shared_prefix_len
     return [Request(id=i,
-                    prompt=tuple(int(x) for x in
-                                 rng.integers(0, vocab, prompt_len)),
+                    prompt=common + tuple(int(x) for x in
+                                          rng.integers(0, vocab, uniq)),
                     max_new_tokens=max_new_tokens,
                     arrival_time=float(t[i]),
                     temperature=temperature, top_k=top_k,

@@ -27,6 +27,15 @@ Half-depth random-init reduced models greedy-agree with their full-depth
 parent on ~90% of positions, which is what makes the acceptance rate (and
 the tokens/step win) real without any trained checkpoint; the draft is a
 genuine reduced config sharing the target's vocab, not a copy.
+
+Composition with prefix sharing (``prefix_cache``): the draft always
+prefills the full prompt on its OWN pool (``attach`` receives the whole
+prompt, never a shared-page splice — draft pages are per-slot private), so
+target-side page sharing is invisible here. On the target, a shared page
+is installed-frozen before it is ever published, and rollback only touches
+pages past the accepted watermark — which is always past the shared prompt
+prefix — so speculative rollback can never un-freeze or mutate a page
+another table references; ``_queue_freeze``'s bid dedupe covers the rest.
 """
 from __future__ import annotations
 

@@ -80,6 +80,12 @@ class PagePayload:
     "resident" payloads split the full pages between ``full`` (unfrozen,
     fp) and ``frozen`` (already-installed codes); ``frozen_idx`` names the
     sequence-order page positions the ``frozen`` arrays cover, in order.
+
+    ``shared_pages`` is refcount-aware ownership: the sequence's leading
+    pages that came from (splice payloads) or stayed behind in (resident
+    payloads) the prefix index — referenced by other live tables, so never
+    captured in this payload's arrays; consumers account/queue-freeze only
+    the owned remainder.
     """
 
     mode: str
@@ -88,6 +94,7 @@ class PagePayload:
     block_size: int
     n_full: int
     tail_rows: int
+    shared_pages: int = 0
     full: list | None = None
     frozen: list | None = None
     tail: list | None = None

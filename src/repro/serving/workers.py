@@ -43,10 +43,10 @@ from repro.obs.export import (modeled_decode_hbm_bytes,
                               modeled_prefill_hbm_bytes)
 from repro.obs.trace import NULL_TRACER
 
-from .kv_cache import (BlockAllocator, dispatch_freeze, freeze_blocks,
-                       init_paged_cache, install_freeze, merge_pools,
-                       page_bytes, thaw_blocks, with_prefill_fused,
-                       with_tables)
+from .kv_cache import (BlockAllocator, PrefixIndex, dispatch_freeze,
+                       freeze_blocks, init_paged_cache, install_freeze,
+                       merge_pools, page_bytes, thaw_blocks,
+                       with_prefill_fused, with_tables)
 from .scheduler import ContinuousBatchingScheduler, Request, SeqState
 from .speculative import DraftWorker, window_step
 from .overload import ResumeEntry
@@ -120,7 +120,8 @@ class DecodeWorker:
                  eos_id: int | None = None, record_logits: bool = False,
                  speculate: int = 0, draft: tuple | None = None,
                  metrics=None, outputs=None, request_logits=None,
-                 tracer=None, roofline_gauges: bool = False):
+                 tracer=None, roofline_gauges: bool = False,
+                 prefix_cache: bool = False):
         from .metrics import MetricsCollector
 
         self.worker_id = worker_id
@@ -207,7 +208,17 @@ class DecodeWorker:
                          "preempt_recomputes": 0, "offloaded_pages": 0,
                          "offload_bytes": 0, "offload_fp_equiv_bytes": 0,
                          "restored_seqs": 0, "restored_pages": 0,
-                         "restore_bytes": 0}
+                         "restore_bytes": 0,
+                         # prefix sharing: attaches that matched a published
+                         # prefix run, the pages they spliced instead of
+                         # prefilling, and write-hot tail pages materialized
+                         # privately instead of shared (copy-on-write)
+                         "prefix_hits": 0, "prefix_shared_pages": 0,
+                         "cow_copies": 0}
+        # radix/hash prefix index over installed-frozen (or, unquantized,
+        # sequence-passed) full prompt pages; sequences attach published
+        # pages at rc > 1 instead of re-prefilling them
+        self.prefix = PrefixIndex(block_size) if prefix_cache else None
         self._pending_freezes: list[tuple[int, object]] = []
         self._freeze_bids: list[int] = []   # queued for the next flush
         self._deferred_seen = 0    # queue suffix already counted deferred
@@ -305,6 +316,10 @@ class DecodeWorker:
         self.table[st.slot, :len(blocks)] = blocks
         self.lens[st.slot] = P
         st.length, st.generated = P, 1
+        # a fresh attach is the coldest possible preemption candidate at
+        # the current step — seed the LRU signal so pick_victim can see it
+        # before its first decode step
+        self.last_attended[st.slot] = self.counters["decode_steps"]
         if payload.mode == "frozen" and payload.n_full:
             # pages landed as codes+codebooks: already frozen, never queue
             # them for a second solve
@@ -312,14 +327,62 @@ class DecodeWorker:
             self._frozen_pages.update(int(b)
                                       for b in blocks[:payload.n_full])
         else:
-            s.frozen_upto = 0
+            # a shared prefix splices installed-frozen pages: they start
+            # the frozen watermark, so they are never queued for a second
+            # solve (unquantized pools share exact-fp pages; the watermark
+            # stays 0 because nothing ever freezes)
+            s.frozen_upto = (payload.shared_pages
+                             if self.kv_spec is not None else 0)
             self._queue_freeze(st.slot)
         if self.draft is not None:
             # the draft prefills the same prompt on its own pool (cheap:
             # the draft config is the reduced one) and mirrors this slot
             self.draft.attach(st.slot, req.prompt, len(blocks))
+        self._publish_prefixes()
         if st.done or fin.first_token == self.eos_id:
             self._finish(st, now)
+
+    # ------------------------------------------------------ prefix sharing
+
+    def _publish_prefixes(self) -> None:
+        """(Re)publish every active slot's eligible full prompt pages into
+        the prefix index. Quantized pools publish only installed-frozen
+        pages (immutable reconstructions); unquantized pools publish every
+        full prompt page — prompt rows never rewrite once the sequence's
+        length passes them, so sharing them is bitwise-exact. Idempotent
+        (the index dedupes on chain key), so calling after every attach /
+        install keeps the index current without per-page bookkeeping."""
+        if self.prefix is None:
+            return
+        frozen = self._frozen_pages if self.kv_spec is not None else None
+        for i in self.sched.active_slots():
+            st = self.sched.active[i]
+            self.prefix.publish(st.req.prompt, self.slots[i].blocks, frozen)
+
+    def shared_prefix_pages(self, slot: int) -> int:
+        """Length of the slot's leading page run other sequences also
+        reference (rc > 1). Sharing only ever splices *prefix* runs of
+        published chains, so refcounts are monotone non-increasing along
+        the table — the first rc == 1 page ends the run. Used by preemption
+        to scope a victim's payload to pages it exclusively owns."""
+        if self.prefix is None:
+            return 0
+        n = 0
+        for b in self.slots[slot].blocks:
+            if self.alloc.refcount(int(b)) <= 1:
+                break
+            n += 1
+        return n
+
+    def prefix_probe(self, req: Request) -> int:
+        """Scheduler admission discount: pages of ``req``'s prompt already
+        published (lookup only — no retain). Admission can charge the
+        request worst-case-minus-shareable pages because its prefill will
+        splice exactly these pages instead of allocating fresh ones."""
+        if self.prefix is None:
+            return 0
+        return len(self.prefix.lookup(req.prompt,
+                                      (req.prompt_len - 1) // self.block_size))
 
     # ------------------------------------------------------------ steps
 
@@ -538,6 +601,7 @@ class DecodeWorker:
         """Install completed freezes; count the ones still overlapping this
         decode step. drain=True blocks on the remainder (end of run)."""
         still = []
+        installed_any = False
         for step0, pending in self._pending_freezes:
             if drain and not pending.is_ready():
                 # lint: sync(drain-only: end-of-run flush blocks by design)
@@ -546,6 +610,7 @@ class DecodeWorker:
                 self.tree = install_freeze(self.tree, pending)
                 kept = pending.kept_pages()
                 self._frozen_pages.update(kept)
+                installed_any = True
                 self.counters["freeze_installs"] += 1
                 self.counters["freeze_overlap_steps"] += (
                     self.counters["decode_steps"] - step0)
@@ -563,6 +628,9 @@ class DecodeWorker:
                 self.counters["freeze_inflight_steps"] += 1
                 still.append((step0, pending))
         self._pending_freezes = still
+        if installed_any:
+            # freshly installed pages just became shareable
+            self._publish_prefixes()
 
     def _queue_freeze(self, slot: int) -> None:
         """Queue this sequence's just-filled pages for quantization; the
@@ -577,6 +645,11 @@ class DecodeWorker:
             tr = self.tracer
             for j in range(s.frozen_upto, full):
                 b = int(self.table[slot, j])
+                # a shared page is already installed (or already bid by the
+                # sequence that owns the solve) — never re-freeze: bids
+                # dedupe on block id
+                if b in self._frozen_pages or b in self._freeze_bids:
+                    continue
                 self._freeze_bids.append(b)
                 if tr.enabled:
                     self._span_seq += 1
@@ -635,6 +708,7 @@ class DecodeWorker:
             self.tree = freeze_blocks(self.tree, bids, self.kv_spec,
                                       stats=self.counters)
             self._frozen_pages.update(bids)
+            self._publish_prefixes()    # synchronous install: shareable now
             self.counters["freeze_installs"] += 1
             if tr.enabled:
                 # synchronous install: the lifecycle terminates here
@@ -658,26 +732,29 @@ class DecodeWorker:
         if self.record_logits and (pre_logits or s.logits):
             self.request_logits[st.req.id] = np.stack(pre_logits + s.logits)
         self.metrics.finish(st.req.id, now)
-        # freed pages may be reallocated before an in-flight solve lands —
-        # forget them (queued or dispatched) so a stale install can't mark
-        # a reused page frozen
-        freed = set(s.blocks)
+        # drop one reference per page; teardown side effects (span drops,
+        # bid/frozen forgetting, thawing, index invalidation) scope to the
+        # pages actually RELEASED — a shared prefix page another live table
+        # still references keeps serving its frozen reconstruction
+        released = set(self.alloc.free(s.blocks))
+        if self.prefix is not None:
+            self.prefix.invalidate(released)
         tr = self.tracer
         if tr.enabled:
             tr.instant(self._trk_decode, "finish", rid=st.req.id,
                        tokens=len(s.out))
-            for b in sorted(freed):
+            for b in sorted(released):
                 sid = self._page_spans.pop(b, None)
                 if sid is not None:
                     tr.async_end(self._trk_freeze, "page_freeze", sid,
                                  state="dropped", page=b)
-        self._freeze_bids = [b for b in self._freeze_bids if b not in freed]
+        self._freeze_bids = [b for b in self._freeze_bids
+                             if b not in released]
         self._deferred_seen = min(self._deferred_seen, len(self._freeze_bids))
-        self._frozen_pages -= freed
+        self._frozen_pages -= released
         for _, pending in self._pending_freezes:
-            pending.drop(s.blocks)
-        self.tree = thaw_blocks(self.tree, s.blocks)
-        self.alloc.free(s.blocks)
+            pending.drop(released)
+        self.tree = thaw_blocks(self.tree, released)
         if self.draft is not None:
             self.draft.release(slot)
         self.table[slot] = 0
@@ -686,6 +763,11 @@ class DecodeWorker:
         s.rng, s.temperature, s.top_k = None, 0.0, 0
         self.last_attended.pop(slot, None)
         self.sched.release(st)
+        # the finisher may have been a chain's first publisher: invalidate
+        # dropped its keys even though an identical live copy (a survivor's
+        # own pages, same chain) may still be resident — re-publish so the
+        # NEXT lookup (prefill dispatch precedes any attach) still matches
+        self._publish_prefixes()
 
     # ------------------------------------------------------------ overload
 
@@ -713,12 +795,17 @@ class DecodeWorker:
         tr = self.tracer
         self.counters["preemptions"] += 1
         if mode == "restore":
+            # pages other live tables still reference are NOT demoted —
+            # they stay resident serving those tables and this victim just
+            # drops its ref below; the payload captures only the
+            # exclusively-owned page suffix (frozen_idx relative to it)
+            sh = self.shared_prefix_pages(slot)
             full = n_tok // self.block_size
-            frozen_idx = [j for j in range(full)
+            frozen_idx = [j - sh for j in range(sh, full)
                           if int(self.table[slot, j]) in self._frozen_pages]
             payload = extract_resident_pages(
-                self.tree, s.blocks, n_tok, frozen_idx,
-                block_size=self.block_size, tracer=tr)
+                self.tree, s.blocks[sh:], n_tok - sh * self.block_size,
+                frozen_idx, block_size=self.block_size, tracer=tr)
             t_host = tr.now()
             payload.to_host()
             tr.complete("transfer", "to_host", t_host, rid=req.id,
@@ -728,7 +815,8 @@ class DecodeWorker:
             entry = ResumeEntry(req=req, out=list(s.out),
                                 generated=st.generated, n_tokens=n_tok,
                                 rng=s.rng, logits=list(s.logits),
-                                payload=payload, frozen_idx=frozen_idx)
+                                payload=payload, frozen_idx=frozen_idx,
+                                shared_pages=sh)
             self.counters["preempt_offloads"] += 1
             self.counters["offloaded_pages"] += payload.n_pages
             self.counters["offload_bytes"] += payload.nbytes
@@ -752,11 +840,16 @@ class DecodeWorker:
             self.counters["preempt_recomputes"] += 1
         tr.instant(self._trk_decode, "preempt", rid=req.id, slot=slot,
                    mode=mode, tokens=n_tok, pages=len(s.blocks))
-        freed = set(s.blocks)
+        # ref-drop every page; only the RELEASED ones (last reference was
+        # this victim's) tear down — a still-shared prefix page keeps its
+        # frozen install and index entries for the sequences serving it
+        released = set(self.alloc.free(s.blocks))
+        if self.prefix is not None:
+            self.prefix.invalidate(released)
         if tr.enabled:
             # literal per-branch states keep the page_freeze lifecycle
             # statically checkable (repro.analysis span pass)
-            for b in sorted(freed):
+            for b in sorted(released):
                 sid = self._page_spans.pop(b, None)
                 if sid is None:
                     continue
@@ -766,13 +859,13 @@ class DecodeWorker:
                 else:
                     tr.async_end(self._trk_freeze, "page_freeze", sid,
                                  state="dropped", page=b)
-        self._freeze_bids = [b for b in self._freeze_bids if b not in freed]
+        self._freeze_bids = [b for b in self._freeze_bids
+                             if b not in released]
         self._deferred_seen = min(self._deferred_seen, len(self._freeze_bids))
-        self._frozen_pages -= freed
+        self._frozen_pages -= released
         for _, pending in self._pending_freezes:
-            pending.drop(s.blocks)
-        self.tree = thaw_blocks(self.tree, s.blocks)
-        self.alloc.free(s.blocks)
+            pending.drop(released)
+        self.tree = thaw_blocks(self.tree, released)
         if self.draft is not None:
             self.draft.release(slot)
         self.table[slot] = 0
@@ -781,6 +874,9 @@ class DecodeWorker:
         s.rng, s.temperature, s.top_k = None, 0.0, 0
         self.last_attended.pop(slot, None)
         self.sched.release(st)
+        # mirror _finish: re-register surviving duplicate chains whose keys
+        # the invalidate above may have dropped with the victim's pages
+        self._publish_prefixes()
         return entry
 
     def restore(self, st: SeqState, entry: ResumeEntry, now: float) -> None:
@@ -795,9 +891,32 @@ class DecodeWorker:
         verbatim; the stall the sequence suffered shows up honestly in its
         next inter-token gap."""
         req, s = st.req, self.slots[st.slot]
-        blocks = self.alloc.alloc(self.sched.blocks_for(req))
-        self.tree = splice_payload(self.tree, entry.payload, blocks,
-                                   tracer=self.tracer)
+        tr = self.tracer
+        m = entry.shared_pages
+        shared: list[int] = []
+        if m:
+            t0 = tr.now()
+            hit = (self.prefix.lookup(req.prompt, m)
+                   if self.prefix is not None else [])
+            if len(hit) == m:
+                # the shared prefix survived the offload window: splice it
+                # back at rc+1, exactly the pages this sequence decoded
+                # against before eviction
+                shared = [int(b) for b in hit]
+                self.alloc.retain(shared)
+                self.counters["prefix_hits"] += 1
+                self.counters["prefix_shared_pages"] += m
+                tr.complete(self._trk_decode, "prefix_match", t0,
+                            rid=req.id, pages=m, cow=False)
+            else:
+                # its last referencer retired while this victim was
+                # offloaded — rebuild privately (deterministic prefill +
+                # deterministic freeze solver reproduce values identical to
+                # the dead shared pages, so the resume stays token-exact)
+                shared = self._rebuild_prefix(req, m)
+        blocks = shared + self.alloc.alloc(self.sched.blocks_for(req) - m)
+        self.tree = splice_payload(self.tree, entry.payload, blocks[m:],
+                                   tracer=tr)
         s.rid, s.blocks = req.id, blocks
         s.out, s.logits = list(entry.out), list(entry.logits)
         s.last_token = entry.out[-1]
@@ -806,13 +925,19 @@ class DecodeWorker:
         self.table[st.slot, :len(blocks)] = blocks
         self.lens[st.slot] = entry.n_tokens
         st.length, st.generated = entry.n_tokens, entry.generated
-        self._frozen_pages.update(int(blocks[j]) for j in entry.frozen_idx)
+        self.last_attended[st.slot] = self.counters["decode_steps"]
+        self._frozen_pages.update(int(blocks[m + j])
+                                  for j in entry.frozen_idx)
         # frozen_upto is the maximal frozen PREFIX; installs land in queue
         # order so the frozen set is a prefix in practice. If it ever
         # weren't, _queue_freeze would re-solve an already-frozen page —
         # value-exact (kmeans_ls on a 16-distinct-value reconstruction
         # reproduces it), so at most a redundant solve, never divergence.
-        fset = set(entry.frozen_idx)
+        # A quantized shared prefix is installed-frozen by construction, so
+        # it extends the watermark from page 0.
+        fset = {m + j for j in entry.frozen_idx}
+        if m and self.kv_spec is not None:
+            fset |= set(range(m))
         upto = 0
         while upto in fset:
             upto += 1
@@ -821,7 +946,6 @@ class DecodeWorker:
         self.counters["restored_seqs"] += 1
         self.counters["restored_pages"] += entry.payload.n_pages
         self.counters["restore_bytes"] += entry.payload.nbytes
-        tr = self.tracer
         tr.instant(self._trk_decode, "restore", rid=req.id, slot=st.slot,
                    pages=entry.payload.n_pages, tokens=entry.n_tokens)
         if tr.enabled:
@@ -837,6 +961,37 @@ class DecodeWorker:
                               tuple(req.prompt) + tuple(entry.out[:-1]),
                               len(blocks))
             self.draft.plen[st.slot] = req.prompt_len
+        self._publish_prefixes()
+
+    def _rebuild_prefix(self, req: Request, m: int) -> list[int]:
+        """Re-materialize the first ``m`` prompt pages of a restoring
+        sequence whose shared prefix was released while it sat offloaded.
+
+        Prefill is deterministic and the freeze solver is deterministic
+        (canonical seed, sorted bids — see ``dispatch_freeze``), so the
+        rebuilt pages carry values identical to the dead shared pages the
+        sequence decoded against: the resumed trace stays token-exact. The
+        chunk-prefill path used here is logit-identical to the slice of a
+        single-shot prefill (tests/test_properties.py)."""
+        bs = self.block_size
+        blocks = self.alloc.alloc(m)
+        toks = np.zeros((1, m * bs), np.int32)
+        toks[0] = req.prompt[:m * bs]
+        pos = jnp.asarray(np.arange(m * bs, dtype=np.int32)[None])
+        table = np.asarray([blocks], np.int32)
+        tree1 = with_tables(self.tree, table, np.zeros((1,), np.int32))
+        if self.attn_impl == "fused":
+            tree1 = with_prefill_fused(tree1)
+        _, new = _prefill_chunk_step(self.params, jnp.asarray(toks), pos,
+                                     tree1, cfg=self.cfg)
+        self.tree = merge_pools(self.tree, new)
+        if self.kv_spec is not None:
+            # synchronous freeze: the restored watermark counts these pages
+            # frozen from page 0, so they must be installed before decoding
+            self.tree = freeze_blocks(self.tree, blocks, self.kv_spec,
+                                      stats=self.counters)
+            self._frozen_pages.update(blocks)
+        return blocks
 
     def drain(self) -> None:
         """Flush every still-queued freeze and land in-flight solves (end
@@ -856,8 +1011,14 @@ class DecodeWorker:
         self.metrics.sample_cache(occ, actual, allocated * self._pb["fp"])
         tr = self.tracer
         if tr.enabled or self.roofline_gauges:
+            extra = {}
+            if self.prefix is not None:
+                # physical pages saved by sharing right now: each extra
+                # table reference on a page is a page NOT allocated
+                extra["shared_saved_pages"] = sum(
+                    rc - 1 for rc in self.alloc._rc.values() if rc > 1)
             tr.counter(self._trk_decode, "cache", occupancy=round(occ, 6),
-                       frozen_pages=frozen)
+                       frozen_pages=frozen, **extra)
             m = modeled_decode_hbm_bytes(self)
             if m is not None:
                 self.metrics.stats.gauge("hbm_bytes_per_token").set(
@@ -878,7 +1039,9 @@ class _ChunkedPrefill:
     blocks: list
     toks: np.ndarray          # (1, ppad) zero-padded prompt
     nblk: int
-    off: int = 0              # tokens already in cache
+    off: int = 0              # tokens already in cache (shared prefix
+    #                           pre-seeds this past the spliced pages)
+    shared: int = 0           # leading pages spliced from the prefix index
     last_row: object = None   # device logits row at prompt position P-1
 
     @property
@@ -927,7 +1090,8 @@ class PrefillWorker:
         self.metrics = metrics if metrics is not None else MetricsCollector()
         self.max_prompt_blocks = -(-max_seq_len // block_size)
         self.queue: deque[Request] = deque()
-        self._inflight = None      # (req, blocks, logits device array, payload)
+        self._inflight = None  # (req, blocks, logits device array, payload,
+        #                         token offset the prefill started at)
         self.counters = {"prefills": 0, "queue_peak": 0, "prefill_chunks": 0}
         self._prefill_fn = functools.partial(_prefill_step, cfg=cfg)
         self._chunk_fn = functools.partial(_prefill_chunk_step, cfg=cfg)
@@ -961,6 +1125,41 @@ class PrefillWorker:
         self.counters["queue_peak"] = max(self.counters["queue_peak"],
                                           self.load)
 
+    # ------------------------------------------------------ prefix sharing
+
+    def _match_prefix(self, req: Request) -> list[int]:
+        """Longest published-prefix match for a colocated prefill: retain
+        the matched pages (rc+1 each) and return them for splicing into
+        the new sequence's table — prefill then starts at the page-aligned
+        offset past them instead of token 0.
+
+        The match is capped one page short of the prompt's LAST token, so
+        the page feeding the first-token logits row is always privately
+        prefilled. A raw match past that cap is the copy-on-write event:
+        the write-hot tail page exists in the index but is materialized
+        privately (by prefilling it) instead of shared — ``cow_copies``
+        counts these.
+        """
+        pool = self.pool
+        if pool is None or pool.prefix is None:
+            return []
+        tr = self.tracer
+        t0 = tr.now()
+        cap = (req.prompt_len - 1) // self.block_size
+        raw = pool.prefix.lookup(req.prompt, cap + 1)
+        shared = [int(b) for b in raw[:cap]]
+        if not shared:
+            return []
+        pool.alloc.retain(shared)
+        pool.counters["prefix_hits"] += 1
+        pool.counters["prefix_shared_pages"] += len(shared)
+        cow = len(raw) > len(shared)
+        if cow:
+            pool.counters["cow_copies"] += 1
+        tr.complete(self._trk, "prefix_match", t0, rid=req.id,
+                    pages=len(shared), cow=cow)
+        return shared
+
     # ------------------------------------------------------------ prefill
 
     def _dispatch(self, req: Request, now_fn) -> None:
@@ -976,19 +1175,35 @@ class PrefillWorker:
                        prompt_len=P)
         ppad = -(-P // self.block_size) * self.block_size
         nblk = ppad // self.block_size
+        off = 0
         if self.pool is not None:
-            # borrowed pool: allocate the request's worst-case pages where
-            # they will be served; the handoff is a table splice
-            blocks = self.pool.alloc.alloc(self.pool.sched.blocks_for(req))
+            # borrowed pool: splice any published shared prefix, then
+            # allocate the request's remaining worst-case pages where they
+            # will be served; the handoff is a table splice
+            shared = self._match_prefix(req)
+            off = len(shared) * self.block_size
+            blocks = shared + self.pool.alloc.alloc(
+                self.pool.sched.blocks_for(req) - len(shared))
             tree = self.pool.tree
         else:
             blocks = self.alloc.alloc(nblk)
             tree = self.tree
-        toks = np.zeros((1, ppad), np.int32)
-        toks[0, :P] = req.prompt
+        toks = np.zeros((1, ppad - off), np.int32)
+        toks[0, :P - off] = req.prompt[off:]
         table = np.asarray([blocks[:nblk]], np.int32)
-        tree1 = with_tables(tree, table, np.zeros((1,), np.int32))
-        logits, new1 = self._prefill_fn(self.params, jnp.asarray(toks), tree1)
+        tree1 = with_tables(tree, table, np.full((1,), off, np.int32))
+        if off:
+            # mid-sequence start past the shared pages: explicit positions
+            # rope/mask this exactly like the matching slice of a
+            # whole-prompt prefill (the chunked-prefill q_offset path)
+            if self.pool.attn_impl == "fused":
+                tree1 = with_prefill_fused(tree1)
+            pos = jnp.asarray(np.arange(off, ppad, dtype=np.int32)[None])
+            logits, new1 = self._chunk_fn(self.params, jnp.asarray(toks),
+                                          pos, tree1)
+        else:
+            logits, new1 = self._prefill_fn(self.params, jnp.asarray(toks),
+                                            tree1)
         merged = merge_pools(tree, new1)
         if self.pool is not None:
             self.pool.tree = merged
@@ -996,25 +1211,26 @@ class PrefillWorker:
                                   blocks=[int(b) for b in blocks],
                                   n_tokens=P, block_size=self.block_size,
                                   n_full=P // self.block_size,
-                                  tail_rows=P % self.block_size)
+                                  tail_rows=P % self.block_size,
+                                  shared_pages=off // self.block_size)
         else:
             self.tree = merged
             payload = extract_pages(merged, blocks, P,
                                     block_size=self.block_size,
                                     mode=self.migrate, spec=self.kv_spec,
                                     tracer=tr)
-        self._inflight = (req, blocks, logits, payload)
+        self._inflight = (req, blocks, logits, payload, off)
         tr.complete(self._trk, "dispatch", t0, rid=req.id, prompt_len=P,
-                    pages=nblk)
+                    pages=nblk, shared=off // self.block_size)
 
     def _harvest(self, now_fn) -> FinishedPrefill:
         """Materialize the finished prefill: sample the first token, stage
         the payload to host, release this worker's blocks."""
         tr = self.tracer
         t0 = tr.now()
-        req, blocks, logits, payload = self._inflight
+        req, blocks, logits, payload, off = self._inflight
         self._inflight = None
-        last = np.asarray(logits[0, req.prompt_len - 1])
+        last = np.asarray(logits[0, req.prompt_len - 1 - off])
         now = now_fn()                        # TTFT includes prefill time
         rng = req.make_rng()
         tok = sample_token(last, temperature=req.temperature,
@@ -1082,11 +1298,18 @@ class PrefillWorker:
         tr.async_begin(self._trk, "prefill", req.id, rid=req.id,
                        prompt_len=P)
         ppad = -(-P // self.block_size) * self.block_size
-        blocks = self.pool.alloc.alloc(self.pool.sched.blocks_for(req))
+        shared = self._match_prefix(req)
+        blocks = shared + self.pool.alloc.alloc(
+            self.pool.sched.blocks_for(req) - len(shared))
         toks = np.zeros((1, ppad), np.int32)
         toks[0, :P] = req.prompt
+        # a matched prefix pre-seeds the chunk cursor past the spliced
+        # pages — those tokens are already in cache, so chunking starts
+        # mid-sequence exactly like any later chunk would
         return _ChunkedPrefill(req=req, blocks=blocks, toks=toks,
-                               nblk=ppad // self.block_size)
+                               nblk=ppad // self.block_size,
+                               off=len(shared) * self.block_size,
+                               shared=len(shared))
 
     def advance_chunk(self, state: _ChunkedPrefill,
                       now_fn) -> FinishedPrefill | None:
@@ -1145,7 +1368,8 @@ class PrefillWorker:
                               blocks=[int(b) for b in state.blocks],
                               n_tokens=P, block_size=self.block_size,
                               n_full=P // self.block_size,
-                              tail_rows=P % self.block_size)
+                              tail_rows=P % self.block_size,
+                              shared_pages=state.shared)
         payload.to_host()                   # splice mode stages no arrays
         self.counters["prefills"] += 1
         tr.async_end(self._trk, "prefill", req.id, rid=req.id)

@@ -318,10 +318,14 @@ def test_disagg_trace_byte_identical(model, tmp_path):
 
     def one(tag):
         tr = Tracer(clock=FakeClock())
+        # sync freezes, same as the colocated twin above: the async path's
+        # install step is gated on a wall-clock is_ready() poll, so which
+        # iteration installs (and hence the event order) is load-dependent
         eng = DisaggEngine(
             params, cfg, prefill_workers=1, decode_workers=1,
-            migrate="frozen", kv_quant="kmeans_ls@16", tracer=tr, **GEOM)
-        # one request: the async prefill/harvest interleaving is trivially
+            migrate="frozen", kv_quant="kmeans_ls@16", freeze_async=False,
+            tracer=tr, **GEOM)
+        # one request: the prefill/harvest interleaving is trivially
         # serial, so even the disagg composition pins exact bytes
         eng.run(make_requests(prompts[:1], GEN))
         path = tmp_path / f"{tag}.json"

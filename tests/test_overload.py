@@ -249,6 +249,89 @@ def test_forced_restore_sampled_rng_carries(qwen_reduced):
     assert outs == golden
 
 
+# ------------------------------------- retirement while offloaded (leaks)
+
+
+def test_retire_while_offloaded_drains_host_tier(qwen_reduced):
+    """A request cancelled/finished while its pages sit in the host tier
+    must be explicitly retired — its store entry and resume-queue slot
+    released — or the entry leaks for the life of the process."""
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(
+        params, cfg, max_slots=2, block_size=8, max_seq_len=48,
+        kv_quant="kmeans_ls@16", freeze_async=False, offload_pages=True)
+    om, w = eng.overload, eng.worker
+    retired = []
+    orig_step = w.step
+
+    def step(now_fn):
+        n = w.counters["decode_steps"]
+        if n == 3 and w.sched.active and not retired:
+            slot = max(w.sched.active, key=lambda i: (int(w.lens[i]), i))
+            st = w.sched.active[slot]
+            if not st.done and w.slots[slot].out:
+                entry = w.preempt(st, "restore", now_fn())
+                om.store.put(entry)
+                om.resume.append(entry)
+                assert len(om.store) == 1 and len(om.resume) == 1
+                # ... and the request is cancelled while demoted:
+                got = om.retire(st.req.id)
+                assert got is entry
+                assert om.retire(st.req.id) is None      # idempotent
+                retired.append(st.req.id)
+        orig_step(now_fn)
+
+    w.step = step
+    eng.run(_mk_requests(cfg, 3))
+    assert retired, "fault injection never fired"
+    # both tiers drained: no store entry, no resume ghost, pool whole
+    assert len(om.store) == 0 and not om.resume and not om.deferred
+    assert om.store.pages == 0
+    assert eng.alloc.num_free == eng.num_blocks - 1
+    assert set(eng.outputs) == {0, 1, 2} - set(retired)
+
+
+# ---------------------------------------- preemption visibility at attach
+
+
+def test_just_attached_victim_visible_to_preemption(qwen_reduced):
+    """The LRU signal seeds at attach: a best_effort sequence that has
+    held pages for ZERO decode steps is the coldest possible victim and
+    must be visible to ``pick_victim`` immediately — a capacity-blocked
+    latency head cannot wait for the victim's first decode step."""
+    cfg, params = qwen_reduced
+    kw = dict(max_slots=1, block_size=8, max_seq_len=48,
+              kv_quant="kmeans_ls@16", freeze_async=False)
+    reqs = lambda: [
+        Request(id=0, prompt=tuple(range(1, 13)), max_new_tokens=8,
+                priority="best_effort"),
+        Request(id=1, prompt=tuple(range(20, 32)), max_new_tokens=8),
+    ]
+    golden_eng = ContinuousBatchingEngine(params, cfg, **kw)
+    golden_eng.run(reqs())
+    golden = dict(golden_eng.outputs)
+    eng = ContinuousBatchingEngine(params, cfg, offload_pages=True,
+                                   preempt=True, **kw)
+    om, w = eng.overload, eng.worker
+    seen = []
+    orig_attach = w.attach
+
+    def spy_attach(st, fin, now):
+        orig_attach(st, fin, now)
+        if st.req.priority == "best_effort" and not st.done:
+            # forced preempt-at-attach: the latency head (id 1) is slot-
+            # blocked right now, so the victim scan runs before this
+            # sequence's first decode step — it must be found
+            v = om.pick_victim(w)
+            seen.append(None if v is None else v.req.id)
+
+    w.attach = spy_attach
+    s = eng.run(reqs())
+    assert seen == [0], "just-attached best_effort victim was invisible"
+    assert s["preemptions"] >= 1
+    assert dict(eng.outputs) == golden
+
+
 # ----------------------------------------- preempt-and-requeue, end to end
 
 

@@ -30,6 +30,7 @@ fast-lane budget); set HYPOTHESIS_PROFILE=thorough for a deeper sweep.
 """
 import dataclasses
 import os
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -209,20 +210,28 @@ if HAVE_HYP:
 
 
 def assert_pool_partition(worker):
-    """Free list + live block tables partition the page pool: no page
-    leaked, none double-booked, allocator bookkeeping consistent."""
+    """Free list + refcounted live block tables partition the page pool:
+    no page leaked, allocator refcounts exactly the multiset of table
+    references (a page in N tables has rc == N; without prefix sharing
+    every rc is 1, the old no-double-booking invariant)."""
     free = set(worker.alloc._free)
     used = set(worker.alloc._used)
-    live = []
+    live = Counter()
     for s in worker.slots:
-        live.extend(s.blocks)
-    assert len(live) == len(set(live)), "page double-booked across slots"
+        live.update(int(b) for b in s.blocks)
+    assert dict(live) == dict(worker.alloc._rc), \
+        "allocator refcounts != live table reference counts"
     assert set(live) == used, "allocator used-set != live tables"
     assert not (free & used), "page both free and used"
     assert free | used == set(range(1, worker.num_blocks)), "page leaked"
     # frozen bookkeeping never refers to an unallocated page
     assert worker._frozen_pages <= used
     assert set(worker._freeze_bids) <= used
+    # sharing only splices published *prefix* runs, so refcounts are
+    # monotone non-increasing along every table
+    for s in worker.slots:
+        rcs = [worker.alloc.refcount(int(b)) for b in s.blocks]
+        assert all(x >= y for x, y in zip(rcs, rcs[1:])), rcs
 
 
 def _check_conservation(qwen_reduced, reqs, speculate):
@@ -362,6 +371,131 @@ if HAVE_HYP:
     def test_tiered_residency_conservation_property(qwen_reduced, reqs,
                                                     speculate):
         _check_tiered_conservation(qwen_reduced, reqs, speculate)
+
+
+# ----------------------------------------- prefix sharing / refcount CoW
+
+
+def _shared_prefix_requests(cfg, rng, shapes, shared_tokens):
+    """Requests whose prompts share a ``shared_tokens``-long prefix (page-
+    aligned sharing is up to the engine; prompts just overlap)."""
+    common = tuple(int(x) for x in rng.integers(0, cfg.vocab, shared_tokens))
+    reqs = []
+    for i, (extra, gen) in enumerate(shapes):
+        tail = tuple(int(x) for x in rng.integers(0, cfg.vocab, extra))
+        reqs.append(Request(id=i, prompt=common + tail, max_new_tokens=gen,
+                            priority="best_effort" if i % 2 else "latency"))
+    return reqs
+
+
+def _check_refcount_conservation(qwen_reduced, shapes, speculate):
+    """Prefix sharing under overload: shared attach/detach interleaved
+    with preemption (victims drop refs on shared pages instead of
+    demoting them), speculative rollback, and async freeze installs must
+    keep "free list + refcounted live tables" an exact partition at every
+    step, and drain pool, host tier, AND prefix index to empty."""
+    cfg, params = qwen_reduced
+    eng = ContinuousBatchingEngine(
+        params, cfg, max_slots=2, block_size=8, max_seq_len=48,
+        kv_quant="kmeans_ls@16", freeze_page_budget=2, num_blocks=10,
+        offload_pages=True, preempt=True, prefix_cache=True,
+        speculate=speculate,
+        draft=derive_draft(params, cfg) if speculate else None)
+    w, om = eng.worker, eng.overload
+    orig_step = w.step
+
+    def checked_step(now_fn):
+        orig_step(now_fn)
+        assert_pool_partition(w)
+
+    w.step = checked_step
+    rng = np.random.default_rng(0)
+    requests = _shared_prefix_requests(cfg, rng, shapes, 16)
+    s = eng.run(requests)
+    assert_pool_partition(w)
+    assert sorted(eng.outputs) == list(range(len(requests)))
+    assert eng.alloc.num_free == eng.num_blocks - 1
+    assert len(om.store) == 0 and not om.resume and not om.deferred
+    assert not w._pending_freezes and not w._freeze_bids
+    assert len(w.prefix) == 0, "prefix index must drain with the pool"
+    return s
+
+
+def test_refcount_conservation_seeded_corpus(qwen_reduced):
+    rng = np.random.default_rng(9)
+    hits = preempted = 0
+    for speculate in (0, 2):
+        shapes = [(int(rng.integers(2, 9)), int(rng.integers(4, 13)))
+                  for _ in range(4)]
+        s = _check_refcount_conservation(qwen_reduced, shapes, speculate)
+        hits += s["prefix_hits"]
+        preempted += s["preemptions"]
+    # the corpus must actually exercise the machinery it checks
+    assert hits >= 1, "no prefill ever spliced shared pages"
+    assert preempted >= 1, "no victim ever dropped refs under pressure"
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(st.lists(st.tuples(st.integers(2, 8), st.integers(4, 12)),
+                    min_size=3, max_size=4),
+           st.sampled_from([0, 2]))
+    def test_refcount_conservation_property(qwen_reduced, shapes, speculate):
+        _check_refcount_conservation(qwen_reduced, shapes, speculate)
+
+
+def _check_cow_divergence(qwen_reduced, shapes, shared_tokens):
+    """CoW divergence is invisible in the numerics: on unquantized pools
+    (shared pages are exact-fp prompt rows) every sequence's recorded
+    logits must be BITWISE identical to an unshared replay of the same
+    trace — sharing changes which pages serve the prefix, never what the
+    model sees."""
+    cfg, params = qwen_reduced
+    rng = np.random.default_rng(sum(e for e, _ in shapes) + shared_tokens)
+    requests = _shared_prefix_requests(cfg, rng, shapes, shared_tokens)
+    engines = []
+    for pc in (False, True):
+        eng = ContinuousBatchingEngine(
+            params, cfg, max_slots=2, block_size=8, max_seq_len=64,
+            kv_quant=None, record_logits=True, prefix_cache=pc)
+        eng.run([dataclasses.replace(r) for r in requests])
+        assert eng.alloc.num_free == eng.num_blocks - 1
+        engines.append(eng)
+    base, shared = engines
+    assert base.outputs == shared.outputs
+    for i in range(len(requests)):
+        assert np.array_equal(base.request_logits[i],
+                              shared.request_logits[i]), i
+    return shared
+
+
+def test_cow_divergence_bitwise_seeded_corpus(qwen_reduced):
+    # staggered gens keep a shared-page holder live across admissions;
+    # 24 shared tokens = 3 full pages at block size 8
+    shared = _check_cow_divergence(qwen_reduced, [(5, 2), (5, 7), (5, 4)],
+                                   24)
+    s = shared.worker.counters
+    assert s["prefix_hits"] >= 1 and s["prefix_shared_pages"] >= 3
+    # page-aligned prompts: the raw match covers the whole prompt, the
+    # splice stops one page short (the logits row must prefill privately)
+    # and counts the truncation as a copy-on-write materialization
+    shared = _check_cow_divergence(qwen_reduced, [(0, 2), (0, 7), (0, 4)],
+                                   24)
+    s = shared.worker.counters
+    assert s["cow_copies"] >= 1
+    assert s["prefix_shared_pages"] >= 2
+
+
+if HAVE_HYP:
+    @needs_hyp
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(st.lists(st.tuples(st.integers(0, 8), st.integers(2, 8)),
+                    min_size=2, max_size=3),
+           st.sampled_from([8, 16, 24]))
+    def test_cow_divergence_bitwise_property(qwen_reduced, shapes,
+                                             shared_tokens):
+        _check_cow_divergence(qwen_reduced, shapes, shared_tokens)
 
 
 # --------------------------------------------- chunked prefill == single

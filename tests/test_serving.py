@@ -12,7 +12,8 @@ import pytest
 from repro import models
 from repro.configs import get_reduced_config
 from repro.serving import (BlockAllocator, ContinuousBatchingEngine,
-                           ContinuousBatchingScheduler, Request, freeze_blocks,
+                           ContinuousBatchingScheduler, DoubleFree,
+                           PrefixIndex, Request, freeze_blocks,
                            freeze_markers, thaw_blocks)
 from repro.serving.kv_cache import (_pack4, _unpack4, init_paged_layer,
                                     quantize_page)
@@ -102,6 +103,49 @@ def test_allocator_invariants():
     assert alloc.num_free == 5
     c = alloc.alloc(5)
     assert 0 not in c
+
+
+def test_allocator_refcounts_and_typed_double_free():
+    alloc = BlockAllocator(8)
+    a = alloc.alloc(3)
+    alloc.retain(a[:2])                   # a second table splices two pages
+    assert [alloc.refcount(b) for b in a] == [2, 2, 1]
+    released = alloc.free(a)              # first table detaches
+    assert released == [a[2]], "shared pages must survive a ref drop"
+    assert alloc.num_free == 5
+    with pytest.raises(DoubleFree) as ei:
+        alloc.free([a[2]])                # rc already hit zero
+    assert ei.value.block == a[2]
+    assert isinstance(ei.value, ValueError)   # callers catching ValueError
+    with pytest.raises(ValueError):
+        alloc.retain([a[2]])              # retain needs a live block
+    assert alloc.refcount(a[2]) == 0
+    released = alloc.free(a[:2])          # last references drop together
+    assert sorted(released) == sorted(a[:2])
+    assert alloc.num_free == 7
+
+
+def test_prefix_index_chain_lookup_and_invalidate():
+    idx = PrefixIndex(4)
+    toks = list(range(12))                # 3 full pages at block size 4
+    assert idx.publish(toks, [1, 2, 3], None) == 3
+    assert len(idx) == 3
+    assert idx.lookup(toks, 3) == [1, 2, 3]
+    assert idx.lookup(toks, 2) == [1, 2]             # caller's CoW cap
+    assert idx.lookup(toks[:8] + [99] * 4, 3) == [1, 2]   # tail diverges
+    assert idx.lookup([99] + toks[1:], 3) == []      # first page differs
+    assert idx.lookup(toks[:7], 3) == [1]            # partial page ignored
+    # a chain must be contiguous from the root: frozen gating stops it
+    gated = PrefixIndex(4)
+    assert gated.publish(toks, [4, 5, 6], frozen={4, 6}) == 1
+    assert gated.lookup(toks, 3) == [4]
+    # idempotent + first-publisher-wins: duplicates add nothing
+    assert idx.publish(toks, [7, 8, 9], None) == 0
+    assert idx.lookup(toks, 3) == [1, 2, 3]
+    idx.invalidate([2])                   # page 2's last ref dropped
+    assert idx.lookup(toks, 3) == [1], "chain must break at a dead page"
+    idx.invalidate([1, 3])
+    assert len(idx) == 0
 
 
 # ------------------------------------------------------------- paged cache
